@@ -1,0 +1,80 @@
+"""Fig. 6: datatype create + commit time for equivalent 3D objects.
+
+Four constructions of the paper's Fig. 1 cuboid — subarray, hvector of
+vector, hvector of hvector of vector, subarray of vector — timed
+separately for "create" (describe the type) and "commit" (translate +
+canonicalize + kernel select, cached).  Pure host code: these numbers
+are directly comparable to the paper's (no device involved).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_host_us
+from repro.core import (
+    BYTE,
+    Hvector,
+    Subarray,
+    TypeRegistry,
+    Vector,
+)
+
+ALLOC = (256, 512, 1024)
+EXT = (100, 13, 47)
+
+
+def construct_subarray():
+    return Subarray(ALLOC, EXT, (0, 0, 0), BYTE)
+
+
+def construct_hvec_vec():
+    row = Vector(EXT[0], 1, 1, BYTE)
+    plane = Hvector(EXT[1], 1, ALLOC[0], row)
+    return Hvector(EXT[2], 1, ALLOC[0] * ALLOC[1], plane)
+
+
+def construct_hvec_hvec_vec():
+    row = Vector(EXT[0], 1, 1, BYTE)
+    plane = Hvector(EXT[1], 1, ALLOC[0], row)
+    cuboid = Hvector(EXT[2], 1, ALLOC[0] * ALLOC[1], plane)
+    return cuboid
+
+
+def construct_sub_of_vec():
+    plane = Subarray(ALLOC[:2], EXT[:2], (0, 0), BYTE)
+    return Vector(EXT[2], 1, 1, plane)
+
+
+CASES = {
+    "subarray": construct_subarray,
+    "hvec(vec)": construct_hvec_vec,
+    "hvec(hvec(vec))": construct_hvec_hvec_vec,
+    "sub(vec)": construct_sub_of_vec,
+}
+
+
+def run() -> None:
+    for name, make in CASES.items():
+        us_create = time_host_us(make, iters=2000)
+        emit(f"fig6/create/{name}", us_create, "host")
+
+        def commit_fresh(make=make):
+            # fresh registry per call: measures the full translate +
+            # canonicalize + kernel-select pipeline (cache miss)
+            TypeRegistry().commit(make())
+
+        us_commit = time_host_us(commit_fresh, iters=500)
+        emit(f"fig6/commit/{name}", us_commit, "host,cache-miss")
+
+        reg = TypeRegistry()
+        dt = make()
+        reg.commit(dt)
+
+        def commit_cached(reg=reg, dt=dt):
+            reg.commit(dt)
+
+        us_hit = time_host_us(commit_cached, iters=5000)
+        emit(f"fig6/commit-cached/{name}", us_hit, "host,cache-hit")
+
+
+if __name__ == "__main__":
+    run()

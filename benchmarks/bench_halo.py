@@ -1,0 +1,81 @@
+"""Fig. 12: 3D stencil halo exchange, baseline vs TEMPI.
+
+Runs the 26-neighbor exchange on an 8-rank emulated mesh in a
+subprocess (device count must be set before jax init), reporting
+per-iteration time for both interposer modes and the pack-only
+latency (the paper's phase split).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CODE = r"""
+import time
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.comm import Interposer
+from repro.halo import HaloSpec, halo_exchange, make_halo_types
+
+spec = HaloSpec(grid=(2, 2, 2), interior=(16, 16, 16), radius=2)
+R = spec.nranks
+az, ay, ax = spec.alloc
+mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
+state0 = jnp.asarray(
+    np.random.default_rng(0).normal(size=(R * az, ay, ax)).astype(np.float32))
+
+for mode in ("baseline", "tempi"):
+    ip = Interposer(mode=mode)
+    types = make_halo_types(spec, ip)
+    fn = jax.jit(jax.shard_map(
+        lambda x: halo_exchange(x, spec, ip, "ranks", types),
+        mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"),
+        check_vma=False))
+    out = fn(state0); jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        out = fn(out)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    print(f"fig12/exchange/{mode},{us:.2f},ranks=8;interior=16^3;r=2")
+
+    # pack-only phase (one face datatype, 26x per iteration in exchange)
+    from repro.halo.exchange import _region_type
+    ct = ip.commit(_region_type(spec, (0, 0, 1), "send"))
+    local = jnp.zeros((az, ay, ax), jnp.float32)
+    pfn = jax.jit(lambda b: ip.pack(b, ct))
+    o = pfn(local); jax.block_until_ready(o)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        o = pfn(local)
+    jax.block_until_ready(o)
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    print(f"fig12/pack-face/{mode},{us:.2f},single-face")
+"""
+
+
+def run() -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CODE)],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    if proc.returncode != 0:
+        print(f"fig12/FAILED,0,{proc.stderr.splitlines()[-1] if proc.stderr else 'unknown'}")
+        return
+    sys.stdout.write(proc.stdout)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Fig. 7 + 8: MPI_Pack bandwidth / latency over 2D objects.
+
+Sweeps vector/subarray descriptions of 2D objects at 512 B pitch over
+contiguous block sizes (the paper's x-axis) and object counts, for the
+TEMPI kernel strategies vs the per-block-copy baseline.  Also reproduces
+the Fig. 8 "fragility" table: vec x1 / sub x1 / vec x2 must be equally
+fast in TEMPI (MVAPICH's specialized vector kernel is not).
+
+CPU-interpret timings — relative orderings transfer; the modeled TPU
+pack time from the §5 performance model is emitted alongside.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jax_us
+from repro.comm.perfmodel import PerfModel
+from repro.core import BYTE, Subarray, TypeRegistry, Vector
+from repro.kernels import pack
+
+PITCH = 512
+REG = TypeRegistry()
+MODEL = PerfModel()
+
+
+def bench_one(name: str, dt, strategy: str, incount: int = 1):
+    ct = REG.commit(dt)
+    buf = jnp.zeros((ct.extent * incount + 64,), jnp.uint8)
+    fn = jax.jit(
+        lambda b: pack(b, ct, incount=incount, strategy=strategy)
+    )
+    us = time_jax_us(fn, buf)
+    total = ct.size * incount
+    bw = total / (us * 1e-6) / 2**20  # MiB/s (cpu-interpret proxy)
+    modeled = MODEL.t_pack(ct, incount, strategy if strategy != "auto" else
+                           MODEL.select(ct, incount).strategy) * 1e6
+    emit(f"fig7/{name}/{strategy}", us,
+         f"MiB/s={bw:.1f};modeled_tpu_us={modeled:.2f}")
+
+
+def run() -> None:
+    # Fig. 7 sweep: object size x contiguous block size at 512B pitch
+    for total_kib in (1, 16, 64):
+        for blk in (8, 64, 256):
+            n = total_kib * 1024 // blk
+            dt = Vector(n, blk, PITCH, BYTE)
+            for strat in ("rows", "dma", "xla"):
+                if strat == "xla" and n > 512:
+                    continue  # baseline HLO blowup; the paper's point
+                bench_one(f"vec/{total_kib}KiB/blk{blk}", dt, strat)
+
+    # Fig. 8 fragility: equivalent descriptions + multiple objects
+    blk = 128
+    n = 8  # 1 KiB objects
+    vec1 = Vector(n, blk, PITCH, BYTE)
+    sub1 = Subarray((PITCH, n), (blk, n), (0, 0), BYTE)
+    for name, dt, inc in (
+        ("vec/1KiB/x1", vec1, 1),
+        ("sub/1KiB/x1", sub1, 1),
+        ("vec/1KiB/x2", vec1, 2),
+    ):
+        for strat in ("auto",):
+            ct = REG.commit(dt)
+            buf = jnp.zeros((ct.extent * inc + 64,), jnp.uint8)
+            fn = jax.jit(lambda b, ct=ct, inc=inc: pack(b, ct, incount=inc))
+            us = time_jax_us(fn, buf)
+            emit(f"fig8/{name}", us,
+                 f"canonical={ct.block.counts}x{ct.block.strides}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Fig. 9/10/11: transfer-primitive model + strategy selection.
+
+Fig. 9 analogue — the modeled link terms for each strategy over object
+sizes (analytic v5e table; the paper's measured Summit curves play this
+role).
+
+Fig. 10 analogue — pack/unpack cost per strategy over (object size x
+contiguous block size), from the §5 model and cross-checked with
+measured CPU-interpret kernel times.
+
+Fig. 11 analogue — model-based automatic selection: for each datatype,
+the strategy the model picks, its modeled end-to-end latency vs the
+best/worst alternative, and the selection overhead (cached and
+uncached).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, time_host_us
+from repro.comm.perfmodel import PerfModel, TPU_V5E
+from repro.core import BYTE, TypeRegistry, Vector
+
+REG = TypeRegistry()
+PITCH = 512
+
+
+def run() -> None:
+    model = PerfModel(TPU_V5E)
+
+    # Fig. 9: link terms
+    for kib in (1, 64, 1024, 4096):
+        n = kib * 1024
+        emit(f"fig9/link/{kib}KiB", model.t_link(n) * 1e6, "modeled_tpu")
+
+    # Fig. 10: pack/unpack per strategy over (size x block)
+    for kib in (1, 64, 1024):
+        for blk in (8, 32, 128, 512):
+            count = max(kib * 1024 // blk, 1)
+            ct = REG.commit(Vector(count, blk, max(PITCH, 2 * blk), BYTE))
+            for strat in ("rows", "dma", "xla"):
+                emit(
+                    f"fig10/pack/{kib}KiB/blk{blk}/{strat}",
+                    model.t_pack(ct, 1, strat) * 1e6,
+                    "modeled_tpu",
+                )
+            emit(
+                f"fig10/unpack/{kib}KiB/blk{blk}/rows",
+                model.t_unpack(ct, 1, "rows") * 1e6,
+                "modeled_tpu",
+            )
+
+    # Fig. 11: automatic selection quality + overhead
+    for kib, blk in ((1, 8), (1, 512), (1024, 8), (1024, 512), (4096, 32)):
+        count = max(kib * 1024 // blk, 1)
+        ct = REG.commit(Vector(count, blk, max(PITCH, 2 * blk), BYTE))
+        ests = {
+            s: model.estimate(ct, 1, s).total
+            for s in ("rows", "dma", "xla", "bounding")
+        }
+        pick = model.select(ct)
+        best = min(ests.values())
+        worst = max(ests.values())
+        emit(
+            f"fig11/select/{kib}KiB/blk{blk}",
+            pick.total * 1e6,
+            f"picked={pick.strategy};best_us={best*1e6:.1f};"
+            f"worst_us={worst*1e6:.1f};optimal={pick.total <= best * 1.001}",
+        )
+
+    # selection overhead: cold vs cached (paper: 277 ns)
+    ct = REG.commit(Vector(128, 64, 512, BYTE))
+    model2 = PerfModel(TPU_V5E)
+    us_cold = time_host_us(lambda: PerfModel(TPU_V5E).select(ct), iters=200)
+    us_hot = time_host_us(lambda: model2.select(ct), iters=10000)
+    emit("fig11/select-overhead/cold", us_cold, "host")
+    emit("fig11/select-overhead/cached", us_hot, "host")
+
+
+if __name__ == "__main__":
+    run()

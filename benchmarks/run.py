@@ -1,0 +1,41 @@
+"""Benchmark harness entry point (deliverable d).
+
+One module per paper table/figure; every row is ``name,us_per_call,
+derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [fig6|fig7|fig9|fig12]
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    from benchmarks import bench_commit, bench_halo, bench_pack, bench_send_model
+
+    suites = {
+        "fig6": bench_commit.run,
+        "fig7": bench_pack.run,        # + fig8
+        "fig9": bench_send_model.run,  # + fig10/11
+        "fig12": bench_halo.run,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if which not in ("all", name):
+            continue
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name}/SUITE-FAILED,0,", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

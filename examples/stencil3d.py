@@ -1,0 +1,79 @@
+"""3D stencil with datatype-described halo exchange (paper §6.4).
+
+Reproduces the paper's case study on an emulated 8-device mesh:
+a 26-point stencil over a periodic domain, radius-2 halos, each of the
+26 halo regions described by an MPI-style subarray datatype, packed by
+the TEMPI engine and exchanged via ppermute.
+
+Run:  python examples/stencil3d.py [--mode tempi|baseline] [--iters 5]
+"""
+
+# the dry-run pattern: device count must be fixed before jax init
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.comm import Interposer
+from repro.halo import HaloSpec, halo_exchange, make_halo_types, stencil_iterations
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="tempi", choices=["tempi", "baseline"])
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--interior", type=int, default=24)
+    args = ap.parse_args()
+
+    grid = (2, 2, 2)
+    n = args.interior
+    spec = HaloSpec(grid=grid, interior=(n, n, n), radius=2)
+    R = spec.nranks
+    az, ay, ax = spec.alloc
+    assert len(jax.devices()) >= R, "need 8 devices (XLA_FLAGS sets them)"
+
+    ip = Interposer(mode=args.mode)
+    mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
+    types = make_halo_types(spec, ip)
+
+    def iteration(local):
+        local = halo_exchange(local, spec, ip, "ranks", types)
+        return stencil_iterations(local, spec, steps=2)
+
+    step = jax.jit(
+        jax.shard_map(
+            iteration, mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"),
+            check_vma=False,
+        )
+    )
+
+    rng = np.random.default_rng(0)
+    state = jnp.asarray(
+        rng.normal(size=(R * az, ay, ax)).astype(np.float32)
+    )
+
+    state = step(state)  # compile
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for _ in range(args.iters):
+        state = step(state)
+    jax.block_until_ready(state)
+    dt = (time.perf_counter() - t0) / args.iters
+
+    types_committed = ip.stats()["committed_types"]
+    print(f"mode={args.mode} ranks={R} interior={spec.interior} radius={spec.radius}")
+    print(f"committed datatypes: {types_committed} (52 send/recv regions)")
+    print(f"time per iteration (exchange + 2 stencil steps): {dt*1e3:.2f} ms")
+    print(f"checksum: {float(jnp.sum(state)):.6e}")
+
+
+if __name__ == "__main__":
+    main()

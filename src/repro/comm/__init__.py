@@ -1,0 +1,7 @@
+"""repro.comm — the TEMPI interposer layer: datatype-aware collectives,
+performance-model strategy selection, and system calibration."""
+
+from repro.comm.interposer import Interposer
+from repro.comm.perfmodel import PerfModel, StrategyEstimate, SystemParams, TPU_V5E
+
+__all__ = ["Interposer", "PerfModel", "StrategyEstimate", "SystemParams", "TPU_V5E"]

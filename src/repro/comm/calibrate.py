@@ -1,0 +1,94 @@
+"""System parameter calibration (paper §6.3: "TEMPI provides a binary
+that records system performance parameters to the file system.  This
+binary should be run once before TEMPI is used in an application.").
+
+Measures pack/unpack kernel latency over a sparse (contiguous-block-size
+x total-object-size) grid on the *running* backend and writes a
+:class:`~repro.comm.perfmodel.SystemParams` JSON.  On a real TPU the
+measurements are wall-clock; on CPU containers they still provide a
+useful relative ordering, and the analytic ``TPU_V5E`` table remains the
+default for roofline work.
+
+Run:  PYTHONPATH=src python -m repro.comm.calibrate [out.json]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BYTE, TypeRegistry, Vector
+from repro.kernels import pack
+from repro.comm.perfmodel import SystemParams, TPU_V5E
+
+__all__ = ["measure_pack_table", "calibrate", "main"]
+
+# paper Fig. 10 sweeps 64 B - 4 MiB objects over block sizes; we use a
+# coarser grid (interpolated at query time)
+BLOCK_BYTES = (8, 32, 128, 512)
+TOTAL_BYTES = (1 << 10, 1 << 14, 1 << 18, 1 << 22)
+PITCH = 512  # paper Fig. 7 uses 512 B pitch
+
+
+def _time_fn(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile / warm caches
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def measure_pack_table(
+    strategies=("rows", "dma", "xla"),
+) -> Dict[str, List[Tuple[float, float, float]]]:
+    reg = TypeRegistry()
+    table: Dict[str, List[Tuple[float, float, float]]] = {s: [] for s in strategies}
+    for blk in BLOCK_BYTES:
+        pitch = max(PITCH, 2 * blk)
+        for total in TOTAL_BYTES:
+            nblocks = max(total // blk, 1)
+            ct = reg.commit(Vector(nblocks, blk, pitch, BYTE))
+            buf = jnp.zeros((ct.extent + 64,), jnp.uint8)
+            for s in strategies:
+                if s == "xla" and nblocks > 512:
+                    continue  # per-block copy baseline: unrolled HLO blows up
+                jfn = jax.jit(lambda b, _ct=ct, _s=s: pack(b, _ct, strategy=_s))
+                sec = _time_fn(jfn, buf)
+                table[s].append(
+                    (math.log2(blk), math.log2(nblocks * blk), sec)
+                )
+    return table
+
+
+def calibrate(name: str | None = None) -> SystemParams:
+    backend = jax.default_backend()
+    table = measure_pack_table()
+    base = TPU_V5E if backend == "tpu" else dataclasses.replace(
+        TPU_V5E, name=f"{backend}_measured"
+    )
+    return dataclasses.replace(
+        base,
+        name=name or f"{backend}_calibrated",
+        pack_table={k: tuple(v) for k, v in table.items()},
+    )
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else "system_params.json"
+    params = calibrate()
+    with open(out, "w") as f:
+        f.write(params.to_json())
+    print(f"wrote {out} ({jax.default_backend()} backend)")
+
+
+if __name__ == "__main__":
+    main()

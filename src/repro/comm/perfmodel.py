@@ -1,0 +1,241 @@
+"""Runtime performance model for datatype transfer strategies (paper §5).
+
+The paper models three ways to move a non-contiguous GPU object between
+ranks — "device" (Eq. 1), "one-shot" (Eq. 2), "staged" (Eq. 3) — from
+once-measured system parameters, then picks the cheapest per call site
+(§6.3: the model query is pure, interpolated, and cached; measured
+selection overhead 277 ns).
+
+TPU adaptation (DESIGN.md §2): there is no host-mapped zero-copy path,
+so the strategy menu becomes
+
+    rows      pack with the pitched row kernel, then one contiguous
+              collective                                ≙ "device"
+    dma       pack with the strided-descriptor kernel, then collective
+                                                        ≙ "staged"
+    xla       per-block XLA copies into a contiguous buffer (the naive
+              CUDA-aware-MPI baseline all impls share)  ≙ baseline
+    bounding  send the *contiguous bounding extent* of the object with
+              no pack at all; receiver slices.  Wins when the object is
+              dense in its extent                       ≙ "one-shot"
+              (zero explicit staging, pays over-transfer instead of
+              pack cost — the same trade the paper's one-shot makes)
+
+Each strategy time decomposes as  T = T_pack + T_link(bytes) + T_unpack,
+mirroring Eqs. 1–3, with terms read from a :class:`SystemParams` table —
+either analytic TPU v5e constants or a table produced by
+``repro.comm.calibrate`` (the paper's "binary that records system
+performance parameters").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.core.commit import CommittedType
+from repro.kernels.geometry import plan_geometry
+
+__all__ = ["SystemParams", "StrategyEstimate", "PerfModel", "TPU_V5E"]
+
+
+@dataclass(frozen=True)
+class SystemParams:
+    """Measured or analytic system parameters (paper Fig. 9/10 tables)."""
+
+    name: str
+    hbm_bw: float = 819e9          # bytes/s per chip
+    ici_bw: float = 45e9           # effective bytes/s per link (50 GB/s raw)
+    ici_latency: float = 1.0e-6    # per-hop collective latency floor
+    kernel_launch: float = 1.5e-6  # pallas_call fixed cost
+    dma_setup: float = 4.0e-7      # per strided-DMA-descriptor cost
+    xla_copy_overhead: float = 8.0e-7  # per dynamic-slice copy op
+    # optional measured pack tables: {strategy: [[log2_block, log2_total,
+    # seconds], ...]} — sparse grid, bilinear-interpolated in log space
+    pack_table: Optional[Dict[str, Tuple[Tuple[float, float, float], ...]]] = None
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        return json.dumps(d, indent=2)
+
+    @staticmethod
+    def from_json(s: str) -> "SystemParams":
+        d = json.loads(s)
+        if d.get("pack_table"):
+            d["pack_table"] = {
+                k: tuple(tuple(row) for row in v)
+                for k, v in d["pack_table"].items()
+            }
+        return SystemParams(**d)
+
+
+#: Analytic TPU v5e table (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+#: ICI) — shipped for dry-run containers with no TPU to calibrate on.
+TPU_V5E = SystemParams(name="tpu_v5e_analytic")
+
+
+@dataclass(frozen=True)
+class StrategyEstimate:
+    strategy: str
+    t_pack: float
+    t_link: float
+    t_unpack: float
+
+    @property
+    def total(self) -> float:
+        return self.t_pack + self.t_link + self.t_unpack
+
+
+def _interp2d(table, x, y) -> Optional[float]:
+    """Bilinear interpolation on a sparse (log2 block, log2 total) grid.
+
+    The paper interpolates pack cost from the stride and block length of
+    the datatype (§6.3); we key on (contiguous block bytes, total bytes).
+    """
+    if not table:
+        return None
+    import numpy as np
+
+    pts = np.asarray(table, dtype=float)
+    xs = np.unique(pts[:, 0])
+    ys = np.unique(pts[:, 1])
+    if len(xs) < 2 or len(ys) < 2:
+        return None
+    grid = {(a, b): v for a, b, v in pts}
+    x = min(max(x, xs[0]), xs[-1])
+    y = min(max(y, ys[0]), ys[-1])
+    i = int(np.searchsorted(xs, x, side="right") - 1)
+    j = int(np.searchsorted(ys, y, side="right") - 1)
+    i = min(i, len(xs) - 2)
+    j = min(j, len(ys) - 2)
+    x0, x1 = xs[i], xs[i + 1]
+    y0, y1 = ys[j], ys[j + 1]
+    try:
+        q00 = grid[(x0, y0)]
+        q01 = grid[(x0, y1)]
+        q10 = grid[(x1, y0)]
+        q11 = grid[(x1, y1)]
+    except KeyError:
+        return None
+    tx = (x - x0) / (x1 - x0)
+    ty = (y - y0) / (y1 - y0)
+    return float(
+        q00 * (1 - tx) * (1 - ty)
+        + q10 * tx * (1 - ty)
+        + q01 * (1 - tx) * ty
+        + q11 * tx * ty
+    )
+
+
+class PerfModel:
+    """Strategy selection per (committed type, incount, hop count).
+
+    Queries are pure functions of their arguments, so results are cached
+    (paper §4/§6.3) — after the first call for a given type the decision
+    is a dict lookup.
+    """
+
+    def __init__(self, params: SystemParams = TPU_V5E):
+        self.params = params
+        self._cache: Dict[Tuple[int, int, int], StrategyEstimate] = {}
+        self.lookups = 0
+        self.hits = 0
+
+    # -- pack-side term -----------------------------------------------------
+    def _measured(self, strategy: str, contig: int, total: int) -> Optional[float]:
+        t = self.params.pack_table
+        if not t or strategy not in t:
+            return None
+        return _interp2d(
+            t[strategy], math.log2(max(contig, 1)), math.log2(max(total, 1))
+        )
+
+    def t_pack(self, ct: CommittedType, incount: int, strategy: str) -> float:
+        p = self.params
+        size = ct.size * incount
+        sb = ct.block
+        if sb is None:
+            return p.kernel_launch + 2 * size / p.hbm_bw
+        contig = sb.counts[0]
+        m = self._measured(strategy, contig, size)
+        if m is not None:
+            return m
+        geom = plan_geometry(sb)
+        nblocks = sb.num_blocks * incount
+        if strategy == "rows":
+            over = geom.overfetch if geom else 1.0
+            touched = size * over + size  # pitched read + contiguous write
+            return p.kernel_launch + touched / p.hbm_bw
+        if strategy == "dma":
+            chunks = max(nblocks // 128, 1)  # descriptors per ~128-row chunk
+            return p.kernel_launch + chunks * p.dma_setup + 2 * size / p.hbm_bw
+        if strategy == "xla":
+            return nblocks * p.xla_copy_overhead + 2 * size / p.hbm_bw
+        if strategy == "bounding":
+            return 0.0  # no pack at all
+        raise ValueError(strategy)
+
+    def t_unpack(self, ct: CommittedType, incount: int, strategy: str) -> float:
+        # unpack is slower: strided writes; rows strategy pays pitch
+        # read+write (paper §6.3 observes the same pack/unpack asymmetry)
+        base = self.t_pack(ct, incount, strategy)
+        return base * 1.5 if strategy != "bounding" else 0.0
+
+    # -- link term ------------------------------------------------------
+    def t_link(self, nbytes: int, hops: int = 1) -> float:
+        p = self.params
+        return hops * p.ici_latency + nbytes / p.ici_bw
+
+    # -- full strategy estimates (Eqs. 1-3 analogue) ----------------------
+    def estimate(
+        self, ct: CommittedType, incount: int, strategy: str, hops: int = 1
+    ) -> StrategyEstimate:
+        size = ct.size * incount
+        if strategy == "bounding":
+            sb = ct.block
+            wire = (sb.extent if sb is not None else ct.extent) * incount
+            if sb is not None and sb.size == sb.extent:
+                t_extract = 0.0  # fully dense: the wire bytes ARE the data
+            else:
+                # receiver must extract the member bytes from the bounding
+                # window and splice them into the destination (two kernels)
+                t_extract = self.t_pack(ct, incount, "rows") + self.t_unpack(
+                    ct, incount, "rows"
+                )
+            return StrategyEstimate(
+                "bounding", 0.0, self.t_link(wire, hops), t_extract
+            )
+        return StrategyEstimate(
+            strategy,
+            self.t_pack(ct, incount, strategy),
+            self.t_link(size, hops),
+            self.t_unpack(ct, incount, strategy),
+        )
+
+    def select(
+        self,
+        ct: CommittedType,
+        incount: int = 1,
+        hops: int = 1,
+        allow_bounding: bool = True,
+    ) -> StrategyEstimate:
+        """Pick the cheapest strategy (cached per call signature)."""
+        key = (id(ct), incount, hops, allow_bounding)
+        self.lookups += 1
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        cands = ["xla", "bounding"] if allow_bounding else ["xla"]
+        if ct.block is not None and plan_geometry(ct.block) is not None:
+            cands += ["rows", "dma"]
+        best = min(
+            (self.estimate(ct, incount, s, hops) for s in cands),
+            key=lambda e: e.total,
+        )
+        self._cache[key] = best
+        return best

@@ -1,0 +1,3 @@
+"""repro.configs — assigned architecture configs + shapes."""
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_for

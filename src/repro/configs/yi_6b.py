@@ -1,0 +1,11 @@
+"""Assigned architecture config: yi-6b (see registry for the
+source tier annotations in the assignment)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=4,
+    d_ff=11008, vocab_size=64000,
+    rope_theta=5e6, microbatches=2,
+)

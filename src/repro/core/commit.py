@@ -1,0 +1,124 @@
+"""Type commit: translation + canonicalization + kernel selection + cache
+(paper §3 intro, §3.3, §4 "caching layer").
+
+``MPI_Type_commit`` is the boundary between datatype *construction* and
+*use*.  Committing a datatype here runs the three phases once and caches
+the result, so every later Pack/Unpack/Send on the type is a dictionary
+lookup (amortized "tens of nanoseconds" in the paper):
+
+    1. translate   -> Type IR            (repro.core.ir)
+    2. simplify    -> canonical tree     (repro.core.canonicalize)
+    3. kernel sel. -> StridedBlock + KernelKind + word width
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.core.canonicalize import simplify
+from repro.core.datatypes import Datatype
+from repro.core.ir import Type, translate
+from repro.core.strided_block import StridedBlock, strided_block
+
+__all__ = ["KernelKind", "CommittedType", "TypeRegistry", "commit", "registry"]
+
+
+class KernelKind(enum.Enum):
+    """Which implementation handles the committed type (paper §3.3)."""
+
+    CONTIG = "contig"      # 1D: single contiguous copy (memcpy analogue)
+    KERNEL_2D = "kernel2d"  # 2D strided block -> Pallas pack kernel
+    KERNEL_3D = "kernel3d"  # 3D strided block -> Pallas pack kernel
+    KERNEL_ND = "kernelnd"  # >3D: outer loops around the 3D kernel
+    GENERIC = "generic"     # not strided: offset/length list fallback
+
+
+@dataclass(frozen=True)
+class CommittedType:
+    """Everything the runtime needs to operate on a datatype, computed
+    once at commit time.  All fields are host scalars/tuples — nothing is
+    stored in device memory (paper: "No object metadata is stored on the
+    GPU").
+    """
+
+    datatype: Datatype
+    tree: Type                      # canonical IR (for inspection/tests)
+    block: Optional[StridedBlock]   # None iff kernel is GENERIC
+    kernel: KernelKind
+    word_bytes: int                 # W specialization (paper §3.3)
+
+    @property
+    def size(self) -> int:
+        return self.datatype.size
+
+    @property
+    def extent(self) -> int:
+        return self.datatype.extent
+
+    @property
+    def contiguous(self) -> bool:
+        return self.kernel is KernelKind.CONTIG
+
+
+def _select_kernel(block: Optional[StridedBlock]) -> KernelKind:
+    if block is None:
+        return KernelKind.GENERIC
+    if block.ndims == 1:
+        return KernelKind.CONTIG
+    if block.ndims == 2:
+        return KernelKind.KERNEL_2D
+    if block.ndims == 3:
+        return KernelKind.KERNEL_3D
+    return KernelKind.KERNEL_ND
+
+
+class TypeRegistry:
+    """Commit cache keyed by the (hashable, frozen) datatype description.
+
+    Mirrors TEMPI's cache of per-committed-type packing strategies; the
+    registry also memoizes the IR so benchmarks can separate "create"
+    from "commit" cost (Fig. 6).
+    """
+
+    def __init__(self) -> None:
+        self._cache: Dict[Datatype, CommittedType] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def commit(self, dt: Datatype) -> CommittedType:
+        hit = self._cache.get(dt)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        tree = simplify(translate(dt))
+        block = strided_block(tree)
+        kind = _select_kernel(block)
+        word = block.word_bytes() if block is not None else 1
+        committed = CommittedType(
+            datatype=dt, tree=tree, block=block, kernel=kind, word_bytes=word
+        )
+        self._cache[dt] = committed
+        return committed
+
+    def free(self, dt: Datatype) -> None:
+        """MPI_Type_free analogue."""
+        self._cache.pop(dt, None)
+
+    def clear(self) -> None:
+        self._cache.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+
+#: Process-global registry, like TEMPI's interposer-internal state.
+registry = TypeRegistry()
+
+
+def commit(dt: Datatype) -> CommittedType:
+    """Commit ``dt`` against the global registry."""
+    return registry.commit(dt)

@@ -1,0 +1,3 @@
+"""repro.data — sharded synthetic data pipeline."""
+
+from repro.data.pipeline import DataConfig, batch_iterator, input_specs_train, synthetic_batch

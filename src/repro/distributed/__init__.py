@@ -1,0 +1,10 @@
+"""repro.distributed — sharding rules and mesh utilities."""
+
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    constrain,
+    param_partition_spec,
+    tree_partition_specs,
+    use_rules,
+)

@@ -1,0 +1,227 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Model code never names physical mesh axes; it annotates activations with
+*logical* axes via :func:`constrain` and parameters are partitioned by
+:func:`param_partition_spec`.  The launcher installs a rule set mapping
+logical -> physical axes for the current mesh; axes absent from the mesh
+are dropped, so the same model code runs on the 16x16 single-pod mesh,
+the 2x16x16 multi-pod mesh, and a 1-device CPU test mesh unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "use_rules",
+    "active",
+    "constrain",
+    "logical_spec",
+    "param_partition_spec",
+]
+
+Physical = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping of logical axis names to physical mesh axes."""
+
+    batch: Physical = ("pod", "data")
+    seq: Physical = "model"          # activation sequence sharding (SP)
+    kv_seq: Physical = "model"       # KV-cache sequence sharding
+    heads: Physical = "model"        # attention heads / tp
+    d_ff: Physical = "model"         # MLP hidden
+    vocab: Physical = "model"        # embedding/logits vocab dim
+    d_model: Physical = None         # hidden size (kept replicated)
+    fsdp: Physical = None            # weight d_model dim (ZeRO-3 style)
+    expert: Physical = None          # MoE expert dim
+    moe_groups: Physical = ("pod", "data", "model")  # grouped-dispatch dim
+    moe_groups_ff: Physical = ("pod", "data")  # groups dim inside expert FFN
+    state: Physical = "model"        # SSM / linear-attn state heads
+
+    def resolve(
+        self, logical: Optional[str], mesh: Mesh, dim: Optional[int] = None
+    ) -> Physical:
+        """Logical -> physical axes; axes absent from the mesh are
+        dropped, and (when ``dim`` is given) trailing axes are dropped
+        until the axis-size product divides the dimension — so e.g. a
+        batch of 1 or 2 KV heads silently falls back to replication
+        instead of GSPMD padding."""
+        if logical is None:
+            return None
+        phys = getattr(self, logical)
+        if phys is None:
+            return None
+        if isinstance(phys, str):
+            phys = (phys,)
+        avail = list(a for a in phys if a in mesh.axis_names)
+        if dim is not None:
+            import math
+
+            while avail and dim % math.prod(
+                mesh.shape[a] for a in avail
+            ):
+                avail.pop()
+        if not avail:
+            return None
+        return tuple(avail) if len(avail) > 1 else avail[0]
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+class _Active(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: ShardingRules = DEFAULT_RULES
+
+
+_ACTIVE = _Active()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: ShardingRules = DEFAULT_RULES):
+    """Install (mesh, rules) for model-code sharding annotations."""
+    prev = (_ACTIVE.mesh, _ACTIVE.rules)
+    _ACTIVE.mesh, _ACTIVE.rules = mesh, rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _ACTIVE.mesh, _ACTIVE.rules = prev
+
+
+def active() -> Tuple[Optional[Mesh], ShardingRules]:
+    return _ACTIVE.mesh, _ACTIVE.rules
+
+
+def logical_spec(logical_axes: Sequence[Optional[str]]) -> P:
+    """PartitionSpec for a tuple of logical axis names (None = replicated),
+    resolved against the active mesh."""
+    mesh, rules = active()
+    if mesh is None:
+        return P()
+    return P(*(rules.resolve(a, mesh) for a in logical_axes))
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh.
+
+    Non-divisible dims fall back to unconstrained (see resolve) — and if
+    NO dim resolves to a real axis the constraint is dropped entirely:
+    P(None,...) would *force* replication, whereas saying nothing leaves
+    XLA's sharding inference free (e.g. qwen2's 14 heads on a 16-way
+    model axis: forcing replication of the attention score tensors
+    costs 4x collective on train_4k)."""
+    mesh, rules = active()
+    if mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    resolved = tuple(
+        rules.resolve(a, mesh, d) for a, d in zip(logical_axes, x.shape)
+    )
+    if all(r is None for r in resolved):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# parameter partitioning by path
+# ---------------------------------------------------------------------------
+
+#: path-substring -> logical axes for the *trailing* dims (leading stacked
+#: layer dims are never sharded).  First match wins.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # replicated small parameters must match before family catch-alls
+    ("norm", (None,)),
+    ("bias", (None,)),
+    ("mu_", (None,)),
+    ("/w0", (None,)),
+    ("/u", (None, None)),
+    ("lora_a", (None, None)),
+    ("conv", (None, None)),
+    ("A_log", (None,)),
+    ("dt_", (None,)),
+    ("/D", (None,)),
+    ("embed/vocab", ("vocab", "fsdp")),
+    ("lm_head", ("fsdp", "vocab")),
+    ("attn/wqkv", ("fsdp", "heads")),
+    ("attn/wq", ("fsdp", "heads")),
+    ("attn/wk", ("fsdp", "heads")),
+    ("attn/wv", ("fsdp", "heads")),
+    ("attn/wo", ("heads", "fsdp")),
+    ("mlp/w_in", ("fsdp", "d_ff")),
+    ("mlp/w_gate", ("fsdp", "d_ff")),
+    ("mlp/w_out", ("d_ff", "fsdp")),
+    ("moe/router", ("fsdp", None)),
+    ("moe/w_in", ("expert", "fsdp", "d_ff")),
+    ("moe/w_gate", ("expert", "fsdp", "d_ff")),
+    ("moe/w_out", ("expert", "d_ff", "fsdp")),
+    ("ssm/in_proj", ("fsdp", "heads")),
+    ("ssm/out_proj", ("heads", "fsdp")),
+    ("ln_", (None,)),
+    ("rwkv/ck", ("fsdp", "d_ff")),
+    ("rwkv/cv", ("d_ff", "fsdp")),
+    ("rwkv/wo", ("heads", "fsdp")),
+    ("rwkv/", ("fsdp", "heads")),
+)
+
+
+def param_logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for a parameter; unmatched paths are replicated."""
+    for key, trailing in _PARAM_RULES:
+        if key in path:
+            t = trailing[-ndim:] if len(trailing) >= ndim else trailing
+            lead = ndim - len(t)
+            return (None,) * lead + tuple(t)
+    return (None,) * ndim
+
+
+def param_partition_spec(
+    path: str, ndim: int, rules: ShardingRules, mesh: Mesh, shape=None
+) -> P:
+    axes = param_logical_axes(path, ndim)
+    dims = shape if shape is not None else (None,) * ndim
+    return P(*(rules.resolve(a, mesh, d) for a, d in zip(axes, dims)))
+
+
+def tree_paths(tree) -> "dict[str, jax.ShapeDtypeStruct]":
+    """Flatten a param pytree into {'a/b/c': leaf} with '/'-joined keys."""
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}/{k}" if prefix else k, v)
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def tree_partition_specs(tree, rules: ShardingRules, mesh: Mesh):
+    """Param pytree -> matching pytree of PartitionSpecs (divisibility-
+    checked against leaf shapes)."""
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {
+                k: walk(f"{prefix}/{k}" if prefix else k, v)
+                for k, v in node.items()
+            }
+        return param_partition_spec(prefix, node.ndim, rules, mesh, node.shape)
+
+    return walk("", tree)

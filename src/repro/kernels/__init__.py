@@ -1,0 +1,19 @@
+"""repro.kernels — Pallas TPU pack/unpack kernels for canonical
+StridedBlocks (paper §3.3), with ops.py wrappers and ref.py oracles."""
+
+from repro.kernels.geometry import PackGeometry, plan_geometry
+from repro.kernels.ops import (
+    byte_view,
+    default_strategy,
+    pack,
+    unpack,
+)
+
+__all__ = [
+    "PackGeometry",
+    "plan_geometry",
+    "byte_view",
+    "default_strategy",
+    "pack",
+    "unpack",
+]

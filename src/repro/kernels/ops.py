@@ -1,0 +1,341 @@
+"""Public pack/unpack operations: jit'd wrappers + strategy dispatch.
+
+This is TEMPI's ``MPI_Pack``/``MPI_Unpack`` (paper §6.2) for JAX arrays.
+The committed type's canonical StridedBlock drives everything:
+
+    kind CONTIG     -> one contiguous copy (cudaMemcpyAsync analogue)
+    kind KERNEL_2D/3D -> Pallas kernel, strategy chosen among
+                         'rows' (pitched) / 'dma' (strided descriptor)
+    kind KERNEL_ND  -> python loop of 3D kernels over the outer dims
+    kind GENERIC or unplannable geometry -> gather fallback (ref path)
+
+``incount`` repeats the datatype at ``extent`` strides, handled as an
+extra outer dimension exactly as the paper describes (§3.3 last ¶).
+
+Buffers can be any dtype/shape; they are re-viewed as bytes and then as
+W-byte words (the paper's word-size specialization) without copying.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.commit import CommittedType, KernelKind
+from repro.core.strided_block import StridedBlock
+from repro.kernels import ref as refk
+from repro.kernels.geometry import (
+    VMEM_BUDGET_BYTES,
+    PackGeometry,
+    plan_geometry,
+)
+from repro.kernels.pack import pack_dma, pack_rows
+from repro.kernels.unpack import unpack_dma, unpack_rows
+
+__all__ = [
+    "byte_view",
+    "unbyte_view",
+    "as_words",
+    "words_to_bytes",
+    "pack",
+    "unpack",
+    "default_strategy",
+    "STRATEGIES",
+]
+
+STRATEGIES = ("auto", "rows", "dma", "xla", "ref")
+
+_UINT = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+#: geometry plan cache — the paper's §4 "caching layer": keyed by the
+#: committed datatype + incount, so repeated Pack/Unpack of the same type
+#: re-dispatch in a dict lookup.
+_PLAN_CACHE: Dict[Tuple[int, int], Optional["_Plan"]] = {}
+
+
+def _interpret_default() -> bool:
+    # Pallas TPU kernels run in interpret mode anywhere but real TPUs.
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# byte / word re-viewing (no data movement under XLA)
+# ---------------------------------------------------------------------------
+
+def byte_view(arr: jax.Array) -> jax.Array:
+    """Flat uint8 view of any (non-bool) array's underlying bytes."""
+    if arr.dtype == jnp.bool_:
+        raise TypeError("bool buffers are not byte-addressable; cast first")
+    flat = arr.reshape(-1)
+    if arr.dtype == jnp.uint8:
+        return flat
+    return jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+
+
+def unbyte_view(b: jax.Array, dtype, shape) -> jax.Array:
+    """Inverse of :func:`byte_view`."""
+    if dtype == jnp.uint8:
+        return b.reshape(shape)
+    w = jnp.dtype(dtype).itemsize
+    return jax.lax.bitcast_convert_type(b.reshape(-1, w), dtype).reshape(shape)
+
+
+def as_words(b: jax.Array, w: int) -> jax.Array:
+    """uint8[n] -> uintW[n/w] (n already padded to a multiple of w)."""
+    if w == 1:
+        return b
+    return jax.lax.bitcast_convert_type(b.reshape(-1, w), _UINT[w])
+
+
+def words_to_bytes(x: jax.Array) -> jax.Array:
+    w = x.dtype.itemsize
+    if w == 1:
+        return x.reshape(-1)
+    return jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+class _Plan:
+    """Host-side execution plan for one (committed type, incount)."""
+
+    __slots__ = ("sb", "reps", "rep_extent", "geom", "kind")
+
+    def __init__(self, ct: CommittedType, incount: int):
+        sb = ct.block
+        self.kind = ct.kernel
+        self.reps = 1
+        self.rep_extent = ct.extent
+        if sb is not None and incount > 1:
+            if sb.ndims == 1:
+                if ct.extent == sb.counts[0] and sb.start == 0:
+                    # contiguous repetitions stay contiguous
+                    sb = StridedBlock(0, (sb.counts[0] * incount,), (1,))
+                else:
+                    sb = StridedBlock(
+                        sb.start,
+                        (sb.counts[0], incount),
+                        (1, ct.extent),
+                    )
+            elif sb.ndims == 2:
+                sb = StridedBlock(
+                    sb.start,
+                    sb.counts + (incount,),
+                    sb.strides + (ct.extent,),
+                )
+            else:
+                # 3D+ repeated: loop reps on host (paper: "handled
+                # dynamically" — known only at the call site)
+                self.reps = incount
+        self.sb = sb
+        self.geom = (
+            plan_geometry(sb) if sb is not None and sb.ndims in (2, 3) else None
+        )
+
+
+def _plan(ct: CommittedType, incount: int) -> _Plan:
+    key = (id(ct), incount)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = _Plan(ct, incount)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def default_strategy(geom: Optional[PackGeometry]) -> str:
+    """Static heuristic used when no calibrated model is loaded: the
+    pitched row kernel wins while its over-fetch stays moderate (it gets
+    automatic double-buffering); the strided-DMA kernel wins for small
+    blocks at large pitches.  The calibrated model (repro.comm.perfmodel)
+    refines this crossover, as the paper's model picks one-shot vs
+    device."""
+    if geom is None:
+        return "ref"
+    return "rows" if geom.overfetch <= 4.0 else "dma"
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+def _prep_words(b: jax.Array, geom: PackGeometry) -> jax.Array:
+    """bytes -> padded (rows_padded, pitch) word view."""
+    w = geom.word_bytes
+    n = b.shape[0]
+    need_bytes = geom.rows_padded * geom.pitch * w
+    if n % w or n < need_bytes:
+        pad = max(need_bytes, ((n + w - 1) // w) * w) - n
+        b = jnp.pad(b, (0, pad))
+    words = as_words(b, w)
+    words = words[: geom.rows_padded * geom.pitch]
+    return words.reshape(geom.rows_padded, geom.pitch)
+
+
+def _pack_one(
+    b: jax.Array, plan: _Plan, strategy: str, interpret: bool, base: int
+) -> jax.Array:
+    """Pack one repetition (byte offsets shifted by ``base``)."""
+    sb = plan.sb
+    if base:
+        sb = StridedBlock(sb.start + base, sb.counts, sb.strides)
+    if sb.ndims == 1:
+        return jax.lax.dynamic_slice(b, (sb.start,), (sb.counts[0],))
+    geom = plan_geometry(sb) if base else plan.geom
+    if strategy == "auto":
+        strategy = default_strategy(geom)
+    if geom is None or strategy == "ref":
+        return refk.pack_ref(b, sb)
+    if strategy == "xla":
+        return refk.pack_xla_blocks(b, sb)
+    src2d = _prep_words(b, geom)
+    if strategy == "rows":
+        out = pack_rows(src2d, geom, interpret=interpret)
+    elif strategy == "dma":
+        out = pack_dma(src2d, geom, VMEM_BUDGET_BYTES, interpret=interpret)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return words_to_bytes(out.reshape(-1))
+
+
+def pack(
+    buf: jax.Array,
+    ct: CommittedType,
+    incount: int = 1,
+    strategy: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """MPI_Pack: gather the non-contiguous bytes ``ct`` describes from
+    ``buf`` into a contiguous uint8 buffer of ``ct.size * incount``."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"strategy must be one of {STRATEGIES}")
+    if interpret is None:
+        interpret = _interpret_default()
+    plan = _plan(ct, incount)
+    b = byte_view(buf)
+    if plan.kind is KernelKind.GENERIC or plan.sb is None:
+        return refk.pack_ref(b, ct.block, incount, ct.extent)  # pragma: no cover
+    if plan.reps == 1:
+        return _pack_one(b, plan, strategy, interpret, 0)
+    parts = [
+        _pack_one(b, plan, strategy, interpret, r * plan.rep_extent)
+        for r in range(plan.reps)
+    ]
+    return jnp.concatenate(parts)
+
+
+def pack_block(
+    buf: jax.Array,
+    sb: StridedBlock,
+    strategy: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Low-level pack straight from a StridedBlock (no committed type).
+
+    Used by the comm layer for shifted/derived blocks (e.g. extracting
+    member bytes out of a received bounding window)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b = byte_view(buf)
+    if sb.ndims == 1:
+        return jax.lax.dynamic_slice(b, (sb.start,), (sb.counts[0],))
+    geom = plan_geometry(sb)
+    if strategy == "auto":
+        strategy = default_strategy(geom)
+    if geom is None or strategy == "ref":
+        return refk.pack_ref(b, sb)
+    if strategy == "xla":
+        return refk.pack_xla_blocks(b, sb)
+    src2d = _prep_words(b, geom)
+    if strategy == "rows":
+        out = pack_rows(src2d, geom, interpret=interpret)
+    else:
+        out = pack_dma(src2d, geom, VMEM_BUDGET_BYTES, interpret=interpret)
+    return words_to_bytes(out.reshape(-1))
+
+
+def _unpack_one(
+    b: jax.Array,
+    packed: jax.Array,
+    plan: _Plan,
+    strategy: str,
+    interpret: bool,
+    base: int,
+) -> jax.Array:
+    sb = plan.sb
+    if base:
+        sb = StridedBlock(sb.start + base, sb.counts, sb.strides)
+    if sb.ndims == 1:
+        return jax.lax.dynamic_update_slice(b, packed, (sb.start,))
+    geom = plan_geometry(sb) if base else plan.geom
+    if strategy == "auto":
+        strategy = default_strategy(geom)
+    if geom is None or strategy == "ref":
+        return refk.unpack_ref(b, packed, sb)
+    if strategy == "xla":
+        return refk.unpack_xla_blocks(b, packed, sb)
+    n = b.shape[0]
+    covered = geom.rows_padded * geom.pitch * geom.word_bytes
+    dst2d = _prep_words(b, geom)
+    pk3 = as_words(packed, geom.word_bytes).reshape(
+        geom.planes, geom.rows, geom.lanes
+    )
+    if strategy == "rows":
+        if geom.planes > 1 and geom.plane_rows < geom.rows:
+            # interleaved planes: row read-modify-write would lose
+            # updates; use the windowed DMA kernel instead
+            out2d = unpack_dma(dst2d, pk3, geom, VMEM_BUDGET_BYTES, interpret)
+        else:
+            out2d = unpack_rows(dst2d, pk3, geom, interpret=interpret)
+    elif strategy == "dma":
+        out2d = unpack_dma(dst2d, pk3, geom, VMEM_BUDGET_BYTES, interpret)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    out_b = words_to_bytes(out2d.reshape(-1))
+    if covered >= n:
+        return out_b[:n]
+    # the 2D word view only covers the strided region; keep the tail
+    return jnp.concatenate([out_b, b[covered:]])
+
+
+def unpack(
+    buf: jax.Array,
+    packed: jax.Array,
+    ct: CommittedType,
+    incount: int = 1,
+    strategy: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """MPI_Unpack: scatter ``packed`` (uint8[size*incount]) into ``buf``
+    per the committed datatype; returns the updated buffer (same
+    shape/dtype as ``buf``)."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"strategy must be one of {STRATEGIES}")
+    if interpret is None:
+        interpret = _interpret_default()
+    plan = _plan(ct, incount)
+    b = byte_view(buf)
+    packed = byte_view(packed)
+    if plan.kind is KernelKind.GENERIC or plan.sb is None:  # pragma: no cover
+        out = refk.unpack_ref(b, packed, ct.block, incount, ct.extent)
+        return unbyte_view(out, buf.dtype, buf.shape)
+    if plan.reps == 1:
+        out = _unpack_one(b, packed, plan, strategy, interpret, 0)
+    else:
+        out = b
+        step = plan.sb.size
+        for rep in range(plan.reps):
+            out = _unpack_one(
+                out,
+                jax.lax.dynamic_slice(packed, (rep * step,), (step,)),
+                plan,
+                strategy,
+                interpret,
+                rep * plan.rep_extent,
+            )
+    return unbyte_view(out, buf.dtype, buf.shape)

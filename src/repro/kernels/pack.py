@@ -1,0 +1,134 @@
+"""Pallas TPU pack kernels (paper §3.3, TPU-adapted).
+
+Two generic kernels cover every canonical 2D/3D StridedBlock — mirroring
+the paper's claim that "each MPI datatype is mapped to one of two kernel
+implementations parameterized by W":
+
+* ``pack_rows``  — *pitched row kernel.*  The flat buffer is viewed as a
+  ``(rows, pitch)`` 2D array (pitch = strides[1]/W); the BlockSpec index
+  map jumps straight to each block's row-group, so Pallas's automatic
+  double-buffered pipeline streams HBM->VMEM.  Reads the full pitch
+  (over-fetch factor pitch/lanes) — cheap when blocks are a large
+  fraction of the pitch.
+
+* ``pack_dma``   — *strided descriptor kernel.*  The source stays in
+  HBM (memory_space=ANY) and each grid step issues one strided DMA for
+  exactly the bytes of a row-chunk of blocks.  No over-fetch, but the
+  copies are manually synchronized (single-buffered v1).  Preferred for
+  small blocks at large strides — the regime where the paper's Fig. 10
+  shows naive methods collapsing.
+
+The runtime performance model (``repro.comm.perfmodel``) chooses between
+them, as the paper chooses between one-shot/device/staged.
+
+Both kernels are parameterized by host scalars only — **no per-type
+metadata is stored in device memory** (the paper's key property of the
+canonical representation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.geometry import PackGeometry
+
+__all__ = ["pack_rows", "pack_dma", "choose_chunk"]
+
+
+# ---------------------------------------------------------------------------
+# pitched row kernel
+# ---------------------------------------------------------------------------
+
+def _pack_rows_kernel(src_ref, out_ref, *, r: int, lanes: int):
+    # src_ref: (G, pitch) VMEM tile of full-pitch rows
+    # out_ref: (1, G, lanes) packed tile
+    out_ref[0] = src_ref[:, r : r + lanes]
+
+
+def pack_rows(src2d: jax.Array, geom: PackGeometry, interpret: bool = False):
+    """Pack via pitched BlockSpec row-groups.
+
+    ``src2d`` is the W-word view reshaped to (rows_padded, pitch).
+    Returns the packed array of shape (planes, rows, lanes).
+    """
+    g = geom.group
+    qb = geom.q // g
+    prb = geom.plane_rows // g if geom.plane_rows else 0
+
+    return pl.pallas_call(
+        functools.partial(_pack_rows_kernel, r=geom.r, lanes=geom.lanes),
+        grid=(geom.planes, geom.rows // g),
+        in_specs=[
+            pl.BlockSpec((g, geom.pitch), lambda p, i: (qb + p * prb + i, 0))
+        ],
+        out_specs=pl.BlockSpec((1, g, geom.lanes), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (geom.planes, geom.rows, geom.lanes), src2d.dtype
+        ),
+        interpret=interpret,
+    )(src2d)
+
+
+# ---------------------------------------------------------------------------
+# strided-descriptor DMA kernel
+# ---------------------------------------------------------------------------
+
+def choose_chunk(rows: int, lanes: int, word: int, budget: int) -> int:
+    """Rows of blocks per DMA step: largest divisor of ``rows`` from a
+    pow2 ladder whose (chunk, lanes) scratch fits the VMEM budget."""
+    for c in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows % c == 0 and c * lanes * word <= budget:
+            return c
+    return 1
+
+
+def _pack_dma_kernel(
+    src_ref, out_ref, scratch, sem, *, q, r, plane_rows, chunk, lanes
+):
+    p = pl.program_id(0)
+    ib = pl.program_id(1)
+    row0 = q + p * plane_rows + ib * chunk
+    cp = pltpu.make_async_copy(
+        src_ref.at[pl.ds(row0, chunk), pl.ds(r, lanes)], scratch, sem
+    )
+    cp.start()
+    cp.wait()
+    out_ref[0] = scratch[...]
+
+
+def pack_dma(
+    src2d: jax.Array,
+    geom: PackGeometry,
+    vmem_budget: int,
+    interpret: bool = False,
+):
+    """Pack via one strided DMA per row-chunk; fetches exactly the block
+    bytes (no pitch over-fetch).  ``src2d`` as in :func:`pack_rows`."""
+    chunk = choose_chunk(geom.rows, geom.lanes, geom.word_bytes, vmem_budget)
+    kern = functools.partial(
+        _pack_dma_kernel,
+        q=geom.q,
+        r=geom.r,
+        plane_rows=geom.plane_rows,
+        chunk=chunk,
+        lanes=geom.lanes,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(geom.planes, geom.rows // chunk),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+        out_specs=pl.BlockSpec((1, chunk, geom.lanes), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (geom.planes, geom.rows, geom.lanes), src2d.dtype
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((chunk, geom.lanes), src2d.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(src2d)

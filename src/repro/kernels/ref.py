@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for pack/unpack (the correctness ground truth).
+
+Two reference paths are provided:
+
+* ``pack_ref``/``unpack_ref`` — gather/scatter through a host-materialized
+  index array.  This is exactly the "list of offsets and lengths"
+  representation the paper criticizes (§2: metadata may consume as much
+  memory as the data) — kept as the oracle and as the GENERIC fallback.
+
+* ``pack_xla_blocks``/``unpack_xla_blocks`` — one ``dynamic_slice`` /
+  ``dynamic_update_slice`` per contiguous block, emulating the
+  cudaMemcpyAsync-per-block baseline that OpenMPI / Spectrum MPI /
+  MVAPICH share (paper §6.2).  Used as the *baseline mode* in benchmarks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strided_block import StridedBlock, block_offsets
+
+__all__ = [
+    "offsets_array",
+    "pack_ref",
+    "unpack_ref",
+    "pack_xla_blocks",
+    "unpack_xla_blocks",
+]
+
+
+def offsets_array(sb: StridedBlock, incount: int = 1, extent: int = 0) -> np.ndarray:
+    """Host-side (numpy) array of block offsets in packing order."""
+    return np.fromiter(
+        block_offsets(sb, incount=incount, extent=extent), dtype=np.int64
+    )
+
+
+def _byte_index(sb: StridedBlock, incount: int, extent: int) -> np.ndarray:
+    offs = offsets_array(sb, incount, extent)
+    return (offs[:, None] + np.arange(sb.counts[0], dtype=np.int64)[None, :]).reshape(
+        -1
+    )
+
+
+def pack_ref(
+    src_bytes: jax.Array, sb: StridedBlock, incount: int = 1, extent: int = 0
+) -> jax.Array:
+    """Gather every byte the datatype touches, in packing order."""
+    idx = _byte_index(sb, incount, extent)
+    return src_bytes[jnp.asarray(idx)]
+
+
+def unpack_ref(
+    dst_bytes: jax.Array,
+    packed: jax.Array,
+    sb: StridedBlock,
+    incount: int = 1,
+    extent: int = 0,
+) -> jax.Array:
+    """Scatter the packed bytes back into a copy of ``dst_bytes``."""
+    idx = _byte_index(sb, incount, extent)
+    return dst_bytes.at[jnp.asarray(idx)].set(packed.reshape(-1))
+
+
+def pack_xla_blocks(
+    src_bytes: jax.Array, sb: StridedBlock, incount: int = 1, extent: int = 0
+) -> jax.Array:
+    """Baseline: one XLA copy per contiguous block (static offsets)."""
+    c0 = sb.counts[0]
+    parts = [
+        jax.lax.dynamic_slice(src_bytes, (int(off),), (c0,))
+        for off in offsets_array(sb, incount, extent)
+    ]
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unpack_xla_blocks(
+    dst_bytes: jax.Array,
+    packed: jax.Array,
+    sb: StridedBlock,
+    incount: int = 1,
+    extent: int = 0,
+) -> jax.Array:
+    """Baseline: one XLA update per contiguous block."""
+    c0 = sb.counts[0]
+    out = dst_bytes
+    for i, off in enumerate(offsets_array(sb, incount, extent)):
+        out = jax.lax.dynamic_update_slice(
+            out, jax.lax.dynamic_slice(packed, (i * c0,), (c0,)), (int(off),)
+        )
+    return out

@@ -1,0 +1,119 @@
+"""Pallas TPU unpack kernels — inverses of ``repro.kernels.pack``.
+
+Unpack writes *into* an existing buffer, so both kernels are in-place
+(``input_output_aliases``):
+
+* ``unpack_rows`` — read-modify-write of full-pitch row-groups.  Each
+  grid step fetches the destination rows, splices the packed lanes in
+  registers/VMEM and stores the rows back.  Requires the plane row
+  ranges to be disjoint (guaranteed for well-formed strided types where
+  ``strides[2] >= counts[1]*strides[1]``; checked by the planner).
+
+* ``unpack_dma``  — the destination stays in HBM (ANY); each step copies
+  a packed row-chunk to VMEM scratch and issues one strided DMA into the
+  destination window.  Touches exactly the block bytes.
+
+The paper notes unpack is slower than pack ("non-contiguous writes
+instead of non-contiguous reads"); the same asymmetry exists here —
+``unpack_rows`` moves 2x the pitch bytes (read + write-back).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.geometry import PackGeometry
+from repro.kernels.pack import choose_chunk
+
+__all__ = ["unpack_rows", "unpack_dma"]
+
+
+def _unpack_rows_kernel(dst_ref, pk_ref, out_ref, *, r: int, lanes: int):
+    # dst_ref/out_ref: (G, pitch); pk_ref: (1, G, lanes)
+    tmp = dst_ref[...]
+    out_ref[...] = tmp.at[:, r : r + lanes].set(pk_ref[0])
+
+
+def unpack_rows(
+    dst2d: jax.Array,
+    packed3d: jax.Array,
+    geom: PackGeometry,
+    interpret: bool = False,
+):
+    """In-place splice of packed blocks into full-pitch row-groups.
+
+    ``dst2d``: (rows_padded, pitch) word view of the destination buffer.
+    ``packed3d``: (planes, rows, lanes).  Returns the updated 2D view.
+    """
+    g = geom.group
+    qb = geom.q // g
+    prb = geom.plane_rows // g if geom.plane_rows else 0
+    row_idx = lambda p, i: (qb + p * prb + i, 0)
+
+    return pl.pallas_call(
+        functools.partial(_unpack_rows_kernel, r=geom.r, lanes=geom.lanes),
+        grid=(geom.planes, geom.rows // g),
+        in_specs=[
+            pl.BlockSpec((g, geom.pitch), row_idx),
+            pl.BlockSpec((1, g, geom.lanes), lambda p, i: (p, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, geom.pitch), row_idx),
+        out_shape=jax.ShapeDtypeStruct(dst2d.shape, dst2d.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(dst2d, packed3d)
+
+
+def _unpack_dma_kernel(
+    pk_ref, dst_ref, out_ref, scratch, sem, *, q, r, plane_rows, chunk, lanes
+):
+    del dst_ref  # aliased with out_ref; present only for donation
+    p = pl.program_id(0)
+    ib = pl.program_id(1)
+    row0 = q + p * plane_rows + ib * chunk
+    scratch[...] = pk_ref[0]
+    cp = pltpu.make_async_copy(
+        scratch, out_ref.at[pl.ds(row0, chunk), pl.ds(r, lanes)], sem
+    )
+    cp.start()
+    cp.wait()
+
+
+def unpack_dma(
+    dst2d: jax.Array,
+    packed3d: jax.Array,
+    geom: PackGeometry,
+    vmem_budget: int,
+    interpret: bool = False,
+):
+    """In-place strided-DMA scatter of packed blocks (no pitch traffic)."""
+    chunk = choose_chunk(geom.rows, geom.lanes, geom.word_bytes, vmem_budget)
+    kern = functools.partial(
+        _unpack_dma_kernel,
+        q=geom.q,
+        r=geom.r,
+        plane_rows=geom.plane_rows,
+        chunk=chunk,
+        lanes=geom.lanes,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(geom.planes, geom.rows // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, geom.lanes), lambda p, i: (p, i, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        out_shape=jax.ShapeDtypeStruct(dst2d.shape, dst2d.dtype),
+        input_output_aliases={1: 0},
+        scratch_shapes=[
+            pltpu.VMEM((chunk, geom.lanes), dst2d.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(packed3d, dst2d)

@@ -1,0 +1,93 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Hillclimb diagnosis: compile one cell and print the per-op-kind byte
+breakdown + collective split from the loop-aware HLO walk.
+
+    PYTHONPATH=src python -m repro.launch.diagnose --arch mixtral-8x22b \
+        --shape train_4k [--multi-pod] [--set microbatches=4 fsdp=False]
+"""
+
+import argparse
+import sys
+
+import jax
+
+from repro.configs.base import shape_for
+from repro.configs.registry import get_config
+from repro.distributed.sharding import DEFAULT_RULES, use_rules
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import HW_V5E, analyze
+from repro.roofline.hlo_cost import parse_hlo_cost
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or ():
+        k, v = p.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--dump", default=None, help="write HLO text here")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    over = parse_overrides(args.set)
+    if over:
+        cfg = cfg.replace(**over)
+        print(f"overrides: {over}")
+    shape = shape_for(args.shape)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    with use_rules(mesh, DEFAULT_RULES):
+        fn, a, sh, don = build_cell(cfg, shape, mesh, DEFAULT_RULES)
+        compiled = jax.jit(fn, in_shardings=sh, donate_argnums=don).lower(*a).compile()
+    hlo = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(hlo)
+    cost = parse_hlo_cost(hlo)
+    rep = analyze(args.arch, args.shape, "x".join(map(str, mesh.devices.shape)),
+                  mesh.devices.size, {}, hlo, cfg, shape)
+    print(f"\nroofline: compute={rep.t_compute*1e3:.1f}ms "
+          f"memory={rep.t_memory*1e3:.1f}ms "
+          f"collective={rep.t_collective*1e3:.1f}ms -> {rep.bottleneck}")
+    print(f"flops/dev={cost.flops:.3e}  bytes/dev={cost.bytes:.3e}  "
+          f"coll/dev={cost.coll_bytes:.3e}")
+    print("\ntop byte contributors (per device, per step):")
+    for op, b in cost.top_ops(20):
+        print(f"  {op:24s} {b:.3e} B  ({b/cost.bytes*100:5.1f}% of memory)")
+    print("\ncollectives:")
+    for k, v in sorted(cost.coll.items(), key=lambda kv: -kv[1]):
+        if v:
+            print(f"  {k:24s} {v:.3e} B/dev")
+    print("\ntop collective shapes (bytes/dev incl. loop trips):")
+    for k, v in sorted(cost.coll_shapes.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"  {v:.3e}  {k}")
+    try:
+        mem = compiled.memory_analysis()
+        print(f"\nmemory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB")
+    except Exception:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import: jax locks device count on first init.
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) on the production meshes, print
+memory_analysis / cost_analysis, and emit the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --out dryrun.json
+
+Skip rules (recorded as SKIP rows, DESIGN.md §Arch-applicability):
+  * long_500k on pure full-attention archs (quadratic; no sub-quadratic
+    path) — runs for SSM/hybrid/SWA archs with rolling/state caches.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_for
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import input_specs_train
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    tree_partition_specs,
+    use_rules,
+)
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models.model import Model, build_model
+from repro.roofline.analysis import HW_V5E, analyze
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+ENC_LEN = 4096  # cross-attention context for encdec decode shapes
+
+
+# ---------------------------------------------------------------------------
+# cell applicability
+# ---------------------------------------------------------------------------
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.kind == "long-decode" and not cfg.sub_quadratic:
+        return "full-attention arch: 500k decode needs sub-quadratic path"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _tree_shardings(shapes_tree, rules, mesh):
+    specs = tree_partition_specs(shapes_tree, rules, mesh)
+    return jax.tree.map(lambda s: _ns(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_sharding(specs: Dict[str, jax.ShapeDtypeStruct], rules, mesh):
+    b_ax = batch_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        if k == "positions":  # (3, B, S)
+            spec = P(None, rules.resolve("batch", mesh, v.shape[1]), None)
+        else:
+            spec = P(
+                rules.resolve("batch", mesh, v.shape[0]),
+                *([None] * (len(v.shape) - 1)),
+            )
+        out[k] = _ns(mesh, spec)
+    return out
+
+
+_CACHE_AXES = {
+    "k": (None, "batch", "kv_seq", None, None),
+    "v": (None, "batch", "kv_seq", None, None),
+    "xk": (None, "batch", "kv_seq", None, None),
+    "xv": (None, "batch", "kv_seq", None, None),
+    "shared_k": (None, "batch", "kv_seq", None, None),
+    "shared_v": (None, "batch", "kv_seq", None, None),
+    "kpos": (None,),
+    "conv": (None, "batch", None, "heads"),
+    "ssm": (None, "batch", "state", None, None),
+    "wkv": (None, "batch", "state", None, None),
+    "shift_t": (None, "batch", None),
+    "shift_c": (None, "batch", None),
+}
+
+
+def _cache_shardings(cache_shapes, rules, mesh):
+    out = {}
+    for k, v in cache_shapes.items():
+        axes = _CACHE_AXES[k]
+        spec = P(*(rules.resolve(a, mesh, d) for a, d in zip(axes, v.shape)))
+        out[k] = _ns(mesh, spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction: (fn, arg_shapes, in_shardings)
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    model = build_model(cfg)
+    params_s = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_shard = _tree_shardings(params_s, rules, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
+        opt_s = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), params_s)
+        o_shard = {
+            "mu": _tree_shardings(opt_s["mu"], rules, mesh),
+            "nu": _tree_shardings(opt_s["nu"], rules, mesh),
+            "step": _ns(mesh, P()),
+        }
+        batch_s = input_specs_train(cfg, shape)
+        b_shard = _batch_sharding(batch_s, rules, mesh)
+        fn = make_train_step(model, opt_cfg)
+        args = (params_s, opt_s, batch_s)
+        shardings = (p_shard, o_shard, b_shard)
+        donate = (0, 1)
+        return fn, args, shardings, donate
+
+    if shape.kind == "prefill":
+        batch_s = {
+            "tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32
+            )
+        }
+        if cfg.frontend == "vision":
+            batch_s["patch_embeds"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.num_patches, cfg.d_model), jnp.bfloat16
+            )
+        b_shard = _batch_sharding(batch_s, rules, mesh)
+        if cfg.family in ("ssm", "rwkv", "hybrid", "encdec"):
+            # recurrent/encdec prefill == forward pass producing last
+            # logits (their decode caches are built stepwise)
+            def fn(params, batch):
+                logits, _ = model.forward(params, batch)
+                return logits[:, -1]
+
+            if cfg.family == "encdec":
+                batch_s["enc_embeds"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, shape.seq_len, cfg.d_model),
+                    jnp.bfloat16,
+                )
+                b_shard = _batch_sharding(batch_s, rules, mesh)
+        else:
+            fn = lambda params, batch: model.prefill(params, batch)
+        return fn, (params_s, batch_s), (p_shard, b_shard), ()
+
+    # decode / long-decode
+    B = shape.global_batch
+    cache_s = jax.eval_shape(
+        lambda: model.init_cache(B, max_len=shape.seq_len, enc_len=ENC_LEN)
+    )
+    c_shard = _cache_shardings(cache_s, rules, mesh)
+    tok_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+    t_s = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_shard = _ns(mesh, P(rules.resolve("batch", mesh, B)))
+    t_shard = _ns(mesh, P())
+
+    def fn(params, cache, tokens, t):
+        return model.decode_step(params, cache, tokens, t)
+
+    return (
+        fn,
+        (params_s, cache_s, tok_s, t_s),
+        (p_shard, c_shard, tok_shard, t_shard),
+        (1,),  # donate the cache
+    )
+
+
+# ---------------------------------------------------------------------------
+# lower + compile + analyze one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = shape_for(shape_name)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": mesh.devices.size,
+    }
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "SKIP"
+        rec["reason"] = reason
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] SKIP: {reason}")
+        return rec
+
+    t0 = time.time()
+    with use_rules(mesh, rules):
+        fn, args, shardings, donate = build_cell(cfg, shape, mesh, rules)
+        jfn = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    report = analyze(
+        arch, shape_name, mesh_name, mesh.devices.size, cost, hlo, cfg, shape
+    )
+
+    rec.update(
+        status="OK",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        flops_per_device=report.hlo_flops,
+        bytes_per_device=report.hlo_bytes,
+        coll_bytes_per_device=report.coll_bytes,
+        coll_by_kind={k: v for k, v in report.coll_by_kind.items() if v},
+        model_flops=report.model_flops,
+        t_compute_ms=report.t_compute * 1e3,
+        t_memory_ms=report.t_memory * 1e3,
+        t_collective_ms=report.t_collective * 1e3,
+        bottleneck=report.bottleneck,
+        useful_flops_ratio=report.useful_flops_ratio,
+        roofline_fraction=report.roofline_fraction,
+    )
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        try:
+            rec[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        print(f"  memory_analysis: args={rec.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"temp={rec.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"out={rec.get('output_size_in_bytes', 0)/2**30:.2f}GiB (per device)")
+        print(f"  cost_analysis: flops/dev={report.hlo_flops:.3e} "
+              f"bytes/dev={report.hlo_bytes:.3e} coll/dev={report.coll_bytes:.3e}")
+        print(f"  roofline: compute={report.t_compute*1e3:.2f}ms "
+              f"memory={report.t_memory*1e3:.2f}ms "
+              f"collective={report.t_collective*1e3:.2f}ms "
+              f"-> {report.bottleneck}-bound; useful={report.useful_flops_ratio:.2f} "
+              f"roofline_frac={report.roofline_fraction:.2f}")
+        sys.stdout.flush()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 mesh (default: 16x16 single pod)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    records = []
+    for mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    rec = run_cell(arch, shape, mesh)
+                except Exception as e:  # a cell failure is a bug; record it
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "x".join(map(str, mesh.devices.shape)),
+                        "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                    }
+                    print(f"[{arch} x {shape} ] FAIL: {e}")
+                    traceback.print_exc()
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+
+    ok = sum(r["status"] == "OK" for r in records)
+    skip = sum(r["status"] == "SKIP" for r in records)
+    fail = sum(r["status"] == "FAIL" for r in records)
+    print(f"\ndry-run complete: {ok} OK, {skip} SKIP, {fail} FAIL "
+          f"of {len(records)} cells")
+    if fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

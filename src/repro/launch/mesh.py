@@ -1,0 +1,43 @@
+"""Production mesh construction (multi-pod dry-run spec).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "batch_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axis semantics: "pod" = pure data parallelism over the cross-pod DCN
+    (gradient all-reduce only, int8-compressible); "data" = within-pod
+    data/FSDP axis; "model" = tensor/sequence parallel axis on ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CI: same axis names, tiny shapes."""
+    if pod:
+        axes = ("pod", "data", "model")
+        return jax.make_mesh(
+            (pod, data, model), axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def batch_axes(mesh) -> tuple:
+    """Physical axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,3 @@
+"""repro.models — the LM substrate: layers, blocks, and family assembly."""
+
+from repro.models.model import Model, build_model

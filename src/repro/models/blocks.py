@@ -1,0 +1,559 @@
+"""Per-layer blocks for every assigned architecture family.
+
+Each block is a pure function ``block(params, x, ctx) -> (x, aux)`` with
+an optional decode variant carrying per-layer state.  Parameters are
+plain dicts whose key paths drive sharding (repro.distributed.sharding).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import linear_attn as la
+from repro.models.layers import (
+    decode_attention,
+    flash_attention,
+    gated_mlp,
+    init_dense,
+    init_norm,
+    mrope,
+    rms_norm,
+    rope,
+)
+
+__all__ = [
+    "init_dense_block",
+    "dense_block",
+    "dense_block_decode",
+    "init_moe_block",
+    "moe_block",
+    "init_mamba2_block",
+    "mamba2_block",
+    "mamba2_block_decode",
+    "init_rwkv6_block",
+    "rwkv6_block",
+    "rwkv6_block_decode",
+    "init_cross_attention",
+    "cross_attention",
+]
+
+
+# ===========================================================================
+# attention (GQA + bias + qk_norm + SWA + RoPE/M-RoPE)
+# ===========================================================================
+
+def _init_attn(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm": init_norm(D, dtype),
+        "wq": init_dense(ks[0], D, H * hd, dtype),
+        "wk": init_dense(ks[1], D, KV * hd, dtype),
+        "wv": init_dense(ks[2], D, KV * hd, dtype),
+        "wo": init_dense(ks[3], H * hd, D, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bias_q"] = jnp.zeros((H * hd,), dtype)
+        p["bias_k"] = jnp.zeros((KV * hd,), dtype)
+        p["bias_v"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd, dtype)
+        p["k_norm"] = init_norm(hd, dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bias_q"], k + p["bias_k"], v + p["bias_v"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _apply_rope(q, k, cfg: ModelConfig, positions):
+    if cfg.mrope:
+        return mrope(q, k, positions, cfg.mrope_sections, cfg.rope_theta)
+    return rope(q, k, positions, cfg.rope_theta)
+
+
+def attention(p, x, cfg: ModelConfig, positions, *, causal=True):
+    """Full-sequence attention (training / prefill).  positions: (B,S)
+    int32 — or (3,B,S) for M-RoPE."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h, cfg)
+    q, k = _apply_rope(q, k, cfg, positions)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    o = flash_attention(
+        q, k, v, causal=causal, window=cfg.sliding_window
+    )
+    o = o.reshape(*x.shape[:2], -1) @ p["wo"]
+    return x + o, (k, v)
+
+
+def attention_decode(p, x, cfg: ModelConfig, k_cache, v_cache, t, positions,
+                     kpos=None):
+    """Single-token attention against the cache.  x: (B,1,D); caches:
+    (B,S,KV,hd) (S possibly sequence-sharded); t: scalar current pos;
+    kpos: (S,) absolute position of each slot incl. the current token
+    (rolling ring buffer for SWA) — None for plain arange caches."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h, cfg)
+    q, k = _apply_rope(q, k, cfg, positions)
+    # ring-buffer cache write at position t % S (rolling for SWA):
+    # "dus" = in-place dynamic-update-slice (XLA aliases the donated
+    # buffer: traffic = one row); "onehot" = masked full rewrite (the
+    # naive baseline kept for the perf-iteration comparison)
+    S = k_cache.shape[1]
+    slot = t % S
+    if cfg.cache_update == "deferred":
+        # don't write the cache here: return the new row; the model-level
+        # driver batches all layers' writes into one sharded update.
+        # kpos must exclude the stale slot row (caller ensures it).
+        o = decode_attention(
+            q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), t,
+            window=cfg.sliding_window, kpos=kpos, current=(k, v),
+        )
+        o = o.reshape(x.shape[0], 1, -1) @ p["wo"]
+        return x + o, (k, v)
+    if cfg.cache_update == "ring":
+        from repro.models.layers import ring_update
+        k_cache = ring_update(k_cache, k, slot)
+        v_cache = ring_update(v_cache, v, slot)
+    elif cfg.cache_update == "dus":
+        zero = jnp.zeros((), jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (zero, slot, zero, zero))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (zero, slot, zero, zero))
+    else:
+        onehot = (jnp.arange(S) == slot).astype(k_cache.dtype)[None, :, None, None]
+        k_cache = k_cache * (1 - onehot) + k.astype(k_cache.dtype) * onehot
+        v_cache = v_cache * (1 - onehot) + v.astype(v_cache.dtype) * onehot
+    o = decode_attention(
+        q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), t,
+        window=cfg.sliding_window, kpos=kpos,
+    )
+    o = o.reshape(x.shape[0], 1, -1) @ p["wo"]
+    return x + o, (k_cache, v_cache)
+
+
+# ===========================================================================
+# dense transformer block
+# ===========================================================================
+
+def init_dense_block(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    ka, km = jax.random.split(key)
+    kg, ki, ko = jax.random.split(km, 3)
+    return {
+        "attn": _init_attn(ka, cfg, dtype),
+        "mlp": {
+            "norm": init_norm(cfg.d_model, dtype),
+            "w_gate": init_dense(kg, cfg.d_model, cfg.d_ff, dtype),
+            "w_in": init_dense(ki, cfg.d_model, cfg.d_ff, dtype),
+            "w_out": init_dense(ko, cfg.d_ff, cfg.d_model, dtype),
+        },
+    }
+
+
+def _mlp_res(p, x, cfg):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    return x + gated_mlp(p, h, cfg.activation)
+
+
+def dense_block(p, x, cfg: ModelConfig, positions, *, causal=True):
+    x, kv = attention(p["attn"], x, cfg, positions, causal=causal)
+    x = constrain(x, "batch", "seq", None)
+    x = _mlp_res(p["mlp"], x, cfg)
+    return x, (jnp.float32(0.0), kv)
+
+
+def dense_block_decode(p, x, cfg: ModelConfig, k_cache, v_cache, t, positions,
+                       kpos=None):
+    x, (k_cache, v_cache) = attention_decode(
+        p["attn"], x, cfg, k_cache, v_cache, t, positions, kpos
+    )
+    x = _mlp_res(p["mlp"], x, cfg)
+    return x, (k_cache, v_cache)
+
+
+# ===========================================================================
+# cross-attention (encoder-decoder)
+# ===========================================================================
+
+def init_cross_attention(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    return _init_attn(key, cfg, dtype)
+
+
+def cross_attention(p, x, cfg: ModelConfig, enc_kv):
+    """Decoder cross-attention; enc_kv = (k, v) precomputed from encoder
+    output: (B, S_enc, KV, hd)."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k, v = enc_kv
+    o = flash_attention(q, k, v, causal=False)
+    return x + o.reshape(B, S, -1) @ p["wo"]
+
+
+def encode_kv(p, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (once per
+    sequence; reused by every decode step)."""
+    B, S, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"]).reshape(B, S, KV, hd)
+    v = (enc_out @ p["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ===========================================================================
+# MoE block (top-2, GShard-style grouped capacity dispatch)
+# ===========================================================================
+
+def init_moe_block(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    ka, kr, kg, ki, ko = jax.random.split(key, 5)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    scale = 1.0 / math.sqrt(D)
+    fscale = 1.0 / math.sqrt(F)
+
+    def expert(k, din, dout, s):
+        return (jax.random.normal(k, (E, din, dout), jnp.float32) * s).astype(dtype)
+
+    return {
+        "attn": _init_attn(ka, cfg, dtype),
+        "moe": {
+            "norm": init_norm(D, dtype),
+            "router": init_dense(kr, D, E, jnp.float32),  # fp32 router
+            "w_gate": expert(kg, D, F, scale),
+            "w_in": expert(ki, D, F, scale),
+            "w_out": expert(ko, F, D, fscale),
+        },
+    }
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """Grouped top-k dispatch with capacity (GShard), mesh-aligned.
+
+    Groups are (batch, seq-block) pairs — reshaping (B, S, D) to
+    (B, S/gs, gs, D) only *splits* the sequence dim, so when B is
+    data-sharded and S model-sharded the grouping moves NO bytes (the
+    flat (B*S/gs, gs) form re-partitions the whole activation tensor
+    across the mesh every layer — measured 4.3 TB/dev of all-gather on
+    mixtral train_4k; see EXPERIMENTS.md §Perf iteration M2).
+
+    Returns (y, aux) where aux is the load-balancing loss.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    gs = min(cfg.moe_group_size, S)
+    nsb = S // gs
+    xg = x.reshape(B, nsb, gs, D)
+    xg = constrain(xg, "batch", "seq", None, None)
+    cap = max(int(gs * K / E * cfg.moe_capacity_factor), 1)
+
+    logits = jnp.einsum(
+        "bnsd,de->bnse", xg.astype(jnp.float32), p["router"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    density = jnp.mean(probs, axis=2)                       # (B,n,E)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), E)
+    density_hard = jnp.mean(top1, axis=2)
+    aux = E * jnp.mean(jnp.sum(density * density_hard, -1))
+
+    gate_vals, gate_idx = lax.top_k(probs, K)               # (B,n,gs,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B,n,gs,K,E)
+    flat = onehot.reshape(B, nsb, gs * K, E)
+    pos = jnp.cumsum(flat, axis=2) - flat
+    pos = pos.reshape(B, nsb, gs, K, E)
+    keep = (pos < cap) * onehot
+    slot = jnp.einsum("bnske->bnsk", pos * keep).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("bnske,bnskc->bnsec", keep, slot_oh)
+    combine = jnp.einsum("bnsk,bnske,bnskc->bnsec", gate_vals, keep, slot_oh)
+
+    xin = jnp.einsum("bnsec,bnsd->ebncd", dispatch, xg.astype(jnp.float32))
+    # "tp": seq-blocks gathered over model, expert hidden sharded over
+    #       model (GShard baseline); "dp": tokens stay fully sharded and
+    #       expert weights gather (REFUTED for the 100B archs: weight
+    #       gathers dominate — kept for ablation)
+    if cfg.moe_parallel == "dp":
+        seq_ax, ff_ax = "seq", None
+    else:
+        seq_ax, ff_ax = None, "d_ff"
+    xin = constrain(xin.astype(x.dtype), "expert", "batch", seq_ax, None, None)
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.activation]
+    h = act(jnp.einsum("ebncd,edf->ebncf", xin, p["w_gate"])) * jnp.einsum(
+        "ebncd,edf->ebncf", xin, p["w_in"]
+    )
+    h = constrain(h, "expert", "batch", seq_ax, None, ff_ax)
+    out = jnp.einsum("ebncf,efd->ebncd", h, p["w_out"])
+    y = jnp.einsum("bnsec,ebncd->bnsd", combine.astype(x.dtype), out)
+    return y.reshape(B, S, D), aux
+
+
+def moe_block(p, x, cfg: ModelConfig, positions, *, causal=True):
+    x, kv = attention(p["attn"], x, cfg, positions, causal=causal)
+    x = constrain(x, "batch", "seq", None)
+    h = rms_norm(x, p["moe"]["norm"], cfg.norm_eps)
+    y, aux = moe_ffn(p["moe"], h, cfg)
+    return x + y, (aux, kv)
+
+
+def moe_block_decode(p, x, cfg: ModelConfig, k_cache, v_cache, t, positions,
+                     kpos=None):
+    x, (k_cache, v_cache) = attention_decode(
+        p["attn"], x, cfg, k_cache, v_cache, t, positions, kpos
+    )
+    h = rms_norm(x, p["moe"]["norm"], cfg.norm_eps)
+    y, _ = moe_ffn(p["moe"], h, cfg)
+    return x + y, (k_cache, v_cache)
+
+
+# ===========================================================================
+# Mamba2 block (SSD with scalar per-head decay)
+# ===========================================================================
+
+def _mamba_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    ds = cfg.ssm_state
+    conv_ch = d_inner + 2 * ds
+    return d_inner, H, ds, conv_ch
+
+
+def init_mamba2_block(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d_inner, H, ds, conv_ch = _mamba_dims(cfg)
+    D = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_proj = 2 * d_inner + 2 * ds + H  # z, xBC, dt
+    return {
+        "ssm": {
+            "norm": init_norm(D, dtype),
+            "in_proj": init_dense(k1, D, d_proj, dtype),
+            "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_ch),
+                                         jnp.float32) * 0.2).astype(dtype),
+            "conv_bias": jnp.zeros((conv_ch,), dtype),
+            "A_log": jnp.zeros((H,), jnp.float32),        # A = -exp(0) = -1
+            "dt_bias": jnp.zeros((H,), jnp.float32),
+            "skip_D": jnp.ones((H,), jnp.float32),
+            "out_norm": init_norm(d_inner, dtype),
+            "out_proj": init_dense(k3, d_inner, D, dtype),
+        }
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d.  x: (B,S,C); w: (width,C)."""
+    width, C = w.shape
+    # dimension numbers: NHC x HIO -> NHC, depthwise via feature_group_count
+    out = lax.conv_general_dilated(
+        x,
+        w.astype(x.dtype)[:, None, :],  # (H=width, I=1, O=C)
+        window_strides=(1,),
+        padding=[(width - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=C,
+    )
+    return out + b.astype(x.dtype)
+
+
+def _mamba_inner(p, h, cfg, conv_in_state=None):
+    """Shared projection/conv/split for train+decode.  h: (B,S,D)."""
+    d_inner, H, ds, conv_ch = _mamba_dims(cfg)
+    proj = h @ p["in_proj"]
+    z, xBC, dt = jnp.split(proj, [d_inner, d_inner + conv_ch], axis=-1)
+    return z, xBC, dt
+
+
+def mamba2_block(p, x, cfg: ModelConfig, positions=None):
+    ps = p["ssm"]
+    d_inner, H, ds, conv_ch = _mamba_dims(cfg)
+    B, S, D = x.shape
+    h = rms_norm(x, ps["norm"], cfg.norm_eps)
+    z, xBC, dt = _mamba_inner(ps, h, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC, ps["conv_w"], ps["conv_bias"]))
+    xc, B_, C_ = jnp.split(xBC, [d_inner, d_inner + ds], axis=-1)
+    hd = cfg.ssm_head_dim
+    v = xc.reshape(B, S, H, hd)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + ps["dt_bias"])   # (B,S,H)
+    log_decay = -jnp.exp(ps["A_log"])[None, None, :] * dtp
+    # B_/C_ are shared across heads (ngroups=1): pass 3D, broadcast
+    # per-chunk inside the recurrence (saves H x HBM traffic)
+    y, _ = la.chunked_scalar_decay(
+        C_, B_, v * dtp[..., None].astype(v.dtype), log_decay
+    )
+    y = y + ps["skip_D"].astype(v.dtype)[None, None, :, None] * v
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), ps["out_norm"], cfg.norm_eps)
+    return x + y @ ps["out_proj"], (jnp.float32(0.0), None)
+
+
+def mamba2_block_decode(p, x, cfg: ModelConfig, conv_state, ssm_state):
+    """x: (B,1,D); conv_state: (B,width-1,conv_ch); ssm_state:
+    (B,H,ds,hd) fp32."""
+    ps = p["ssm"]
+    d_inner, H, ds, conv_ch = _mamba_dims(cfg)
+    B = x.shape[0]
+    h = rms_norm(x, ps["norm"], cfg.norm_eps)
+    z, xBC, dt = _mamba_inner(ps, h, cfg)
+    window = jnp.concatenate([conv_state, xBC], axis=1)  # (B,width,ch)
+    conv_state = window[:, 1:]
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                      ps["conv_w"].astype(jnp.float32)) + ps["conv_bias"].astype(jnp.float32)
+    xBC1 = jax.nn.silu(conv).astype(x.dtype)
+    xc, B_, C_ = jnp.split(xBC1, [d_inner, d_inner + ds], axis=-1)
+    hd = cfg.ssm_head_dim
+    v = xc.reshape(B, H, hd)
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + ps["dt_bias"])  # (B,H)
+    log_decay = -jnp.exp(ps["A_log"])[None, :] * dtp
+    k = jnp.broadcast_to(B_[:, None, :], (B, H, ds))
+    q = jnp.broadcast_to(C_[:, None, :], (B, H, ds))
+    y, ssm_state = la.step_scalar_decay(
+        q, k, v * dtp[..., None].astype(v.dtype), log_decay, ssm_state
+    )
+    y = y + ps["skip_D"].astype(v.dtype)[None, :, None] * v
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), ps["out_norm"], cfg.norm_eps)
+    return x + y @ ps["out_proj"], (conv_state, ssm_state)
+
+
+# ===========================================================================
+# RWKV6 block (Finch: data-dependent per-channel decay)
+# ===========================================================================
+
+def _rwkv_dims(cfg: ModelConfig):
+    hd = cfg.ssm_head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv6_block(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = _rwkv_dims(cfg)
+    ks = jax.random.split(key, 10)
+    lora = 64
+    p = {
+        "norm_t": init_norm(D, dtype),
+        "norm_c": init_norm(D, dtype),
+        "ln_x": init_norm(D, dtype),
+        "u": (jax.random.normal(ks[0], (H, hd), jnp.float32) * 0.1),
+        "w0": jnp.full((D,), -2.0, jnp.float32),  # w = exp(-exp(w0)) ~ 0.87
+        "wr": init_dense(ks[1], D, D, dtype),
+        "wk": init_dense(ks[2], D, D, dtype),
+        "wv": init_dense(ks[3], D, D, dtype),
+        "wg": init_dense(ks[4], D, D, dtype),
+        "wo": init_dense(ks[5], D, D, dtype),
+        "w_lora_a": init_dense(ks[6], D, lora, dtype),
+        "w_lora_b": (jax.random.normal(ks[7], (lora, D), jnp.float32) * 0.01).astype(dtype),
+        "ck": init_dense(ks[8], D, F, dtype),
+        "cv": init_dense(ks[9], F, D, dtype),
+        "cr": init_dense(jax.random.fold_in(key, 99), D, D, dtype),
+    }
+    for name in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w", "mu_ck", "mu_cr"):
+        p[name] = jnp.full((D,), 0.5, dtype)
+    return {"rwkv": p}
+
+
+def _shift(x, last):
+    """Token shift: previous token's features.  x: (B,S,D); last: (B,D)
+    from the previous segment (zeros at sequence start)."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def rwkv6_block(p, x, cfg: ModelConfig, positions=None, shift_t=None, shift_c=None):
+    pr = p["rwkv"]
+    B, S, D = x.shape
+    H, hd = _rwkv_dims(cfg)
+    if shift_t is None:
+        shift_t = jnp.zeros((B, D), x.dtype)
+    if shift_c is None:
+        shift_c = jnp.zeros((B, D), x.dtype)
+
+    # --- time mix ---
+    h = rms_norm(x, pr["norm_t"], cfg.norm_eps)
+    hx = _shift(h, shift_t)
+
+    def mixed(mu):
+        return h + (hx - h) * mu
+
+    r = (mixed(pr["mu_r"]) @ pr["wr"]).reshape(B, S, H, hd)
+    k = (mixed(pr["mu_k"]) @ pr["wk"]).reshape(B, S, H, hd)
+    v = (mixed(pr["mu_v"]) @ pr["wv"]).reshape(B, S, H, hd)
+    g = mixed(pr["mu_g"]) @ pr["wg"]
+    # data-dependent decay (the Finch contribution): w0 + lora(x)
+    ww = pr["w0"] + (
+        jnp.tanh(mixed(pr["mu_w"]) @ pr["w_lora_a"]) @ pr["w_lora_b"]
+    ).astype(jnp.float32)
+    log_decay = -jnp.exp(ww).reshape(B, S, H, hd)
+
+    y, _ = la.chunked_vector_decay(r, k, v, log_decay, pr["u"])
+    y = rms_norm(y.reshape(B, S, D), pr["ln_x"], cfg.norm_eps)
+    x = x + (y * jax.nn.silu(g)) @ pr["wo"]
+
+    # --- channel mix ---
+    h2 = rms_norm(x, pr["norm_c"], cfg.norm_eps)
+    h2x = _shift(h2, shift_c)
+    kk = h2 + (h2x - h2) * pr["mu_ck"]
+    rr = h2 + (h2x - h2) * pr["mu_cr"]
+    kk = jnp.square(jax.nn.relu(kk @ pr["ck"]))
+    x = x + jax.nn.sigmoid(rr @ pr["cr"]) * (kk @ pr["cv"])
+    return x, (jnp.float32(0.0), (h[:, -1, :], h2[:, -1, :]))
+
+
+def rwkv6_block_decode(p, x, cfg: ModelConfig, shift_t, shift_c, wkv_state):
+    """x: (B,1,D); shift_t/c: (B,D); wkv_state: (B,H,hd,hd) fp32."""
+    pr = p["rwkv"]
+    B, _, D = x.shape
+    H, hd = _rwkv_dims(cfg)
+
+    h = rms_norm(x, pr["norm_t"], cfg.norm_eps)[:, 0]     # (B,D)
+    hx = shift_t
+
+    def mixed(mu):
+        return h + (hx - h) * mu
+
+    r = (mixed(pr["mu_r"]) @ pr["wr"]).reshape(B, H, hd)
+    k = (mixed(pr["mu_k"]) @ pr["wk"]).reshape(B, H, hd)
+    v = (mixed(pr["mu_v"]) @ pr["wv"]).reshape(B, H, hd)
+    g = mixed(pr["mu_g"]) @ pr["wg"]
+    ww = pr["w0"] + (
+        jnp.tanh(mixed(pr["mu_w"]) @ pr["w_lora_a"]) @ pr["w_lora_b"]
+    ).astype(jnp.float32)
+    log_decay = -jnp.exp(ww).reshape(B, H, hd)
+    y, wkv_state = la.step_vector_decay(r, k, v, log_decay, pr["u"], wkv_state)
+    y = rms_norm(y.reshape(B, D), pr["ln_x"], cfg.norm_eps)
+    x = x + ((y * jax.nn.silu(g)) @ pr["wo"])[:, None, :]
+    shift_t = h
+
+    h2 = rms_norm(x, pr["norm_c"], cfg.norm_eps)[:, 0]
+    kk = h2 + (shift_c - h2) * pr["mu_ck"]
+    rr = h2 + (shift_c - h2) * pr["mu_cr"]
+    kk = jnp.square(jax.nn.relu(kk @ pr["ck"]))
+    x = x + (jax.nn.sigmoid(rr @ pr["cr"]) * (kk @ pr["cv"]))[:, None, :]
+    shift_c = h2
+    return x, (shift_t, shift_c, wkv_state)

@@ -1,0 +1,60 @@
+"""Modality frontend STUBS (per the assignment: "the modality frontend is
+a STUB — input_specs() provides precomputed frame/patch embeddings").
+
+The backbone consumes (B, S, d_model) embeddings; these helpers define
+the stub shapes and, for smoke tests, generate random embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["audio_frame_spec", "vision_patch_spec", "mrope_position_spec",
+           "random_frontend_batch"]
+
+
+def audio_frame_spec(cfg: ModelConfig, batch: int, frames: int):
+    """Precomputed audio frame embeddings (seamless-m4t speech encoder
+    input after the conformer feature stub)."""
+    return jax.ShapeDtypeStruct((batch, frames, cfg.d_model), jnp.bfloat16)
+
+
+def vision_patch_spec(cfg: ModelConfig, batch: int):
+    """Precomputed vision patch embeddings (qwen2-vl ViT stub)."""
+    return jax.ShapeDtypeStruct((batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+
+
+def mrope_position_spec(batch: int, seq: int):
+    """(3, B, S) t/h/w position ids for M-RoPE (text tokens share all
+    three streams; patch tokens get spatial ids)."""
+    return jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+
+
+def random_frontend_batch(cfg: ModelConfig, key, batch: int, seq: int) -> Dict:
+    """Random stub tensors for smoke tests."""
+    out = {}
+    if cfg.frontend == "audio":
+        out["enc_embeds"] = (
+            jax.random.normal(key, (batch, seq, cfg.d_model)) * 0.02
+        ).astype(jnp.bfloat16)
+    elif cfg.frontend == "vision":
+        out["patch_embeds"] = (
+            jax.random.normal(key, (batch, cfg.num_patches, cfg.d_model)) * 0.02
+        ).astype(jnp.bfloat16)
+        # t/h/w ids: patches get a 16x16-ish grid, text advances t
+        npatch = cfg.num_patches
+        side = int(npatch ** 0.5)
+        t = jnp.concatenate([jnp.zeros((npatch,), jnp.int32),
+                             jnp.arange(1, seq - npatch + 1)])
+        h = jnp.concatenate([jnp.repeat(jnp.arange(side), side),
+                             jnp.arange(1, seq - npatch + 1)])
+        w = jnp.concatenate([jnp.tile(jnp.arange(side), side),
+                             jnp.arange(1, seq - npatch + 1)])
+        pos3 = jnp.stack([t, h, w])[:, None, :].repeat(batch, 1)
+        out["positions"] = pos3
+    return out

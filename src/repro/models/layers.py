@@ -1,0 +1,507 @@
+"""Core transformer layers: RMSNorm, RoPE / M-RoPE, chunked (flash-style)
+attention with GQA / sliding-window / qk-norm / bias, and gated MLP.
+
+Pure functional JAX: every layer is ``apply(params_dict, x, ...)`` with
+parameters as plain dicts of arrays; bf16 matmuls, fp32 softmax/norm
+accumulators.  Sequence-chunked online-softmax attention keeps the score
+matrix out of HBM (required for the 32k prefill shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "mrope",
+    "flash_attention",
+    "decode_attention",
+    "gated_mlp",
+    "init_dense",
+    "init_norm",
+]
+
+ATTN_CHUNK = 1024  # kv-chunk for online softmax
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, dims: int, theta: float) -> jax.Array:
+    """(..., dims/2) angles for integer positions."""
+    freqs = theta ** (-jnp.arange(0, dims, 2, dtype=jnp.float32) / dims)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def _apply_angles(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); angles: (B, S, D/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def rope(q, k, positions, theta: float = 1e4):
+    """Standard RoPE.  positions: (B, S) int."""
+    d = q.shape[-1]
+    ang = _rope_angles(positions, d, theta)
+    return _apply_angles(q, ang).astype(q.dtype), _apply_angles(k, ang).astype(k.dtype)
+
+
+def mrope(q, k, positions3, sections: Tuple[int, int, int], theta: float = 1e4):
+    """Multimodal RoPE (Qwen2-VL): head_dim is split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    positions3: (3, B, S) — temporal/height/width position ids (equal for
+    text tokens, spatial for vision patches; provided by the frontend
+    stub).
+    """
+    d = q.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    # build per-pair angles by section
+    parts = []
+    for i, sec in enumerate(sections):
+        freqs_i = theta ** (
+            -(jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+        )  # full ladder; slice below keeps interleaving simple
+        parts.append(
+            positions3[i][..., None].astype(jnp.float32)
+            * freqs_i[sum(sections[:i]) : sum(sections[: i + 1])]
+        )
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, d/2)
+    return _apply_angles(q, ang).astype(q.dtype), _apply_angles(k, ang).astype(k.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (flash-style, pure jnp)
+# ---------------------------------------------------------------------------
+
+def _mask(
+    qpos: jax.Array, kpos: jax.Array, causal: bool, window: Optional[int]
+) -> jax.Array:
+    """(Sq, Sk) boolean validity mask from absolute positions."""
+    ok = jnp.ones((qpos.shape[-1], kpos.shape[-1]), bool)
+    if causal:
+        ok = ok & (qpos[:, None] >= kpos[None, :])
+    if window is not None:
+        ok = ok & (qpos[:, None] - kpos[None, :] < window)
+    return ok
+
+
+
+def _heads_shardable(H: int) -> bool:
+    """True iff the merged H dim divides the physical heads axis — the
+    merged-head layout then lets score/cotangent tensors shard.  For
+    non-divisible head counts (qwen2's 14, qwen2-vl's 12) the split
+    (KVH, G) layout is kept and XLA's inference picks a sharding
+    (typically over the query-sequence dim), which measures ~3.7x fewer
+    per-device FLOPs than forcing the merged layout."""
+    from repro.distributed.sharding import active
+
+    mesh, rules = active()
+    if mesh is None:
+        return False
+    phys = rules.resolve("heads", mesh, H)
+    return phys is not None
+
+
+def _flash_forward(q, k, v, causal, window, q_offset, chunk, merged):
+    """Online-softmax forward; returns (out, m, l) with fp32 stats.
+
+    Heads are kept MERGED (H = KVH*G) and k/v repeated per chunk: the
+    score tensors then shard over the model axis whenever H divides it
+    (a split (KVH, G) layout cannot — e.g. mixtral's KVH=8, G=6 on a
+    16-way axis — and silently replicates, costing TB of gathers)."""
+    B, Sq, H, D = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+
+    nchunks = max(Sk // chunk, 1)
+    chunk = Sk // nchunks
+    assert Sk % nchunks == 0, (Sk, chunk)
+
+    kc = k.reshape(B, nchunks, chunk, KVH, D)
+    vc = v.reshape(B, nchunks, chunk, KVH, D)
+    qpos = q_offset + jnp.arange(Sq)
+
+    qq = q if merged else q.reshape(B, Sq, KVH, G, D)
+
+    def step(carry, inputs):
+        acc, m, l = carry
+        kb, vb, cidx = inputs
+        kpos = cidx * chunk + jnp.arange(chunk)
+        if merged:
+            kb = jnp.repeat(kb, G, axis=2)      # (B, C, H, D)
+            vb = jnp.repeat(vb, G, axis=2)
+            s = jnp.einsum(
+                "bqhd,bchd->bqhc", qq, kb, preferred_element_type=jnp.float32
+            ) * scale
+            s = constrain(s, "batch", None, "heads", None)
+        else:
+            s = jnp.einsum(
+                "bqkgd,bckd->bqkgc", qq, kb,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = s.reshape(B, Sq, H, chunk)
+        ok = _mask(qpos, kpos, causal, window)  # (Sq, chunk)
+        s = jnp.where(ok[None, :, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(ok[None, :, None, :], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if merged:
+            pv = jnp.einsum(
+                "bqhc,bchd->bqhd", p.astype(v.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            pv = jnp.einsum(
+                "bqkgc,bckd->bqkgd",
+                p.reshape(B, Sq, KVH, G, chunk).astype(v.dtype), vb,
+                preferred_element_type=jnp.float32,
+            ).reshape(B, Sq, H, D)
+        acc_new = acc * alpha[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, H, D), jnp.float32)
+    m0 = jnp.full((B, Sq, H), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    (acc, m, l), _ = lax.scan(
+        step,
+        (acc0, m0, l0),
+        (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            jnp.arange(nchunks),
+        ),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.astype(q.dtype), m, l
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_vjp(causal: bool, window, q_offset: int, chunk: int, merged: bool):
+    """custom_vjp flash attention specialized to static config.
+
+    The flash *backward* recomputes p per kv-chunk from the saved
+    softmax stats (m, l) and accumulates dq/dk/dv chunked — cotangents
+    never materialize (Sq, Sk) scores, stay in the inputs' dtype outside
+    the chunk loop, and (crucially for SP sharding) never create the
+    full-sequence f32 carry tensors that autodiff-through-scan does
+    (those were the dominant all-gathers on every train cell).
+    """
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        out, _, _ = _flash_forward(q, k, v, causal, window, q_offset, chunk,
+                                   merged)
+        return out
+
+    def fwd(q, k, v):
+        out, m, l = _flash_forward(q, k, v, causal, window, q_offset, chunk,
+                                   merged)
+        return out, (q, k, v, out, m, l)
+
+    def bwd(res, do):
+        q, k, v, out, m, l = res
+        B, Sq, H, D = q.shape
+        _, Sk, KVH, _ = k.shape
+        G = H // KVH
+        scale = 1.0 / math.sqrt(D)
+        nchunks = max(Sk // chunk, 1)
+        ck = Sk // nchunks
+
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        inv_l = 1.0 / jnp.maximum(l, 1e-37)
+        # delta = rowsum(do * out)  (B,Sq,H)
+        delta = jnp.einsum(
+            "bqhd,bqhd->bqh", do.astype(jnp.float32), out.astype(jnp.float32)
+        )
+        kc = k.reshape(B, nchunks, ck, KVH, D)
+        vc = v.reshape(B, nchunks, ck, KVH, D)
+        qpos = q_offset + jnp.arange(Sq)
+
+        qg = q if merged else q.reshape(B, Sq, KVH, G, D)
+        dog = do if merged else do.reshape(B, Sq, KVH, G, D)
+
+        def step(dq_acc, inputs):
+            kb, vb, cidx = inputs
+            kpos = cidx * ck + jnp.arange(ck)
+            if merged:
+                kbr = jnp.repeat(kb, G, axis=2)
+                vbr = jnp.repeat(vb, G, axis=2)
+                s = jnp.einsum(
+                    "bqhd,bchd->bqhc", qg, kbr,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                s = constrain(s, "batch", None, "heads", None)
+                ok = _mask(qpos, kpos, causal, window)
+                p = jnp.exp(s - m_safe[..., None]) * inv_l[..., None]
+                p = jnp.where(ok[None, :, None, :], p, 0.0)
+                dv_f = jnp.einsum("bqhc,bqhd->bchd", p, dog.astype(jnp.float32))
+                dp = jnp.einsum(
+                    "bqhd,bchd->bqhc", dog, vbr,
+                    preferred_element_type=jnp.float32,
+                )
+                ds = p * (dp - delta[..., None]) * scale
+                ds = constrain(ds, "batch", None, "heads", None)
+                dq_acc = dq_acc + jnp.einsum(
+                    "bqhc,bchd->bqhd", ds.astype(q.dtype), kbr,
+                    preferred_element_type=jnp.float32,
+                )
+                dk_f = jnp.einsum("bqhc,bqhd->bchd", ds, qg.astype(jnp.float32))
+                dk_c = dk_f.reshape(B, ck, KVH, G, D).sum(3)
+                dv_c = dv_f.reshape(B, ck, KVH, G, D).sum(3)
+            else:
+                ms = m_safe.reshape(B, Sq, KVH, G)
+                il = inv_l.reshape(B, Sq, KVH, G)
+                dl = delta.reshape(B, Sq, KVH, G)
+                s = jnp.einsum(
+                    "bqkgd,bckd->bqkgc", qg, kb,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                ok = _mask(qpos, kpos, causal, window)
+                p = jnp.exp(s - ms[..., None]) * il[..., None]
+                p = jnp.where(ok[None, :, None, None, :], p, 0.0)
+                dv_c = jnp.einsum("bqkgc,bqkgd->bckd", p,
+                                  dog.astype(jnp.float32))
+                dp = jnp.einsum(
+                    "bqkgd,bckd->bqkgc", dog, vb,
+                    preferred_element_type=jnp.float32,
+                )
+                ds = p * (dp - dl[..., None]) * scale
+                dq_acc = dq_acc + jnp.einsum(
+                    "bqkgc,bckd->bqkgd", ds.astype(q.dtype), kb,
+                    preferred_element_type=jnp.float32,
+                ).reshape(B, Sq, H, D)
+                dk_c = jnp.einsum("bqkgc,bqkgd->bckd", ds,
+                                  qg.astype(jnp.float32))
+            return dq_acc, (dk_c.astype(k.dtype), dv_c.astype(v.dtype))
+
+        dq0 = jnp.zeros((B, Sq, H, D), jnp.float32)
+        if merged:
+            dq0 = constrain(dq0, "batch", None, "heads", None)
+        dq, (dks, dvs) = lax.scan(
+            step,
+            dq0,
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+             jnp.arange(nchunks)),
+        )
+        dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, KVH, D)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, KVH, D)
+        return dq.astype(q.dtype), dk, dv
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+def flash_attention(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Sk, KVH, D)
+    v: jax.Array,          # (B, Sk, KVH, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    chunk: int = ATTN_CHUNK,
+) -> jax.Array:
+    """Online-softmax attention over kv chunks; GQA via head grouping.
+    Never materializes the (Sq, Sk) score matrix; custom chunked VJP
+    (see _flash_vjp).  Head layout (merged vs split) picked per the
+    active mesh (see _heads_shardable)."""
+    merged = _heads_shardable(q.shape[2])
+    return _flash_vjp(causal, window, q_offset, chunk, merged)(q, k, v)
+
+
+def ring_update(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write one token into a (possibly sequence-sharded) ring-buffer
+    cache at ``slot`` along axis 1, touching only the owning shard.
+
+    A plain ``dynamic_update_slice`` on a sharded dim is lowered by GSPMD
+    to a *select over the full local shard* (full local rewrite per layer
+    per step).  Here we shard_map over the sequence axis: each shard runs
+    a ``lax.cond`` that either does a local in-place DUS (owning shard)
+    or passes its block through untouched — traffic is one row.
+    cache: (B, S, KV, hd); new: (B, 1, KV, hd).
+    """
+    from repro.distributed.sharding import active
+
+    mesh, rules = active()
+    phys = rules.resolve("kv_seq", mesh, cache.shape[1]) if mesh else None
+    new = new.astype(cache.dtype)
+    zero = jnp.zeros((), jnp.int32)
+    if phys is None or mesh is None:
+        return lax.dynamic_update_slice(cache, new, (zero, slot, zero, zero))
+    if isinstance(phys, tuple):
+        phys = phys[0]
+    batch_phys = rules.resolve("batch", mesh, cache.shape[0])
+    from jax.sharding import PartitionSpec as P
+
+    def upd(c, n, s):
+        ax = lax.axis_index(phys)
+        s_loc = c.shape[1]
+        local = s[0] - ax * s_loc
+        inb = (local >= 0) & (local < s_loc)
+
+        def write(c):
+            return lax.dynamic_update_slice(
+                c, n, (zero, jnp.clip(local, 0, s_loc - 1), zero, zero)
+            )
+
+        return lax.cond(inb, write, lambda c: c, c)
+
+    spec_c = P(batch_phys, phys, None, None)
+    return jax.shard_map(
+        upd,
+        mesh=mesh,
+        in_specs=(spec_c, P(batch_phys, None, None, None), P()),
+        out_specs=spec_c,
+        check_vma=False,
+    )(cache, new, slot[None])
+
+
+def ring_update_stacked(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Batched deferred cache write: one sharded update for ALL layers.
+    cache: (L, B, S, KV, hd); new: (L, B, 1, KV, hd).  Traffic = L rows
+    (vs. L full-cache restacks when the layer scan carries the caches)."""
+    from repro.distributed.sharding import active
+
+    mesh, rules = active()
+    phys = rules.resolve("kv_seq", mesh, cache.shape[2]) if mesh else None
+    new = new.astype(cache.dtype)
+    zero = jnp.zeros((), jnp.int32)
+    if phys is None or mesh is None:
+        return lax.dynamic_update_slice(
+            cache, new, (zero, zero, slot, zero, zero)
+        )
+    if isinstance(phys, tuple):
+        phys = phys[0]
+    batch_phys = rules.resolve("batch", mesh, cache.shape[1])
+    from jax.sharding import PartitionSpec as P
+
+    def upd(c, n, s):
+        ax = lax.axis_index(phys)
+        s_loc = c.shape[2]
+        local = s[0] - ax * s_loc
+        inb = (local >= 0) & (local < s_loc)
+
+        def write(c):
+            return lax.dynamic_update_slice(
+                c, n, (zero, zero, jnp.clip(local, 0, s_loc - 1), zero, zero)
+            )
+
+        return lax.cond(inb, write, lambda c: c, c)
+
+    spec_c = P(None, batch_phys, phys, None, None)
+    return jax.shard_map(
+        upd,
+        mesh=mesh,
+        in_specs=(spec_c, P(None, batch_phys, None, None, None), P()),
+        out_specs=spec_c,
+        check_vma=False,
+    )(cache, new, slot[None])
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KVH, D) — S may be sharded over 'model'
+    v_cache: jax.Array,
+    t: jax.Array,        # current position (scalar int32)
+    *,
+    window: Optional[int] = None,
+    kpos: Optional[jax.Array] = None,  # (S,) absolute position per slot
+                                       # (-1 = empty); for rolling caches
+    current: Optional[tuple] = None,   # deferred-write: (k_new, v_new)
+                                       # (B,1,KVH,D) not yet in the cache
+) -> jax.Array:
+    """Single-token attention against a (possibly sequence-sharded) KV
+    cache.  Elementwise masking + reductions keep the cache sharded;
+    GSPMD inserts the small cross-shard softmax reductions."""
+    B, _, H, D = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, D)
+    if kpos is None:
+        kpos = jnp.arange(S)
+        valid = kpos <= t
+    else:
+        valid = (kpos >= 0) & (kpos <= t)
+    if window is not None:
+        valid = valid & (kpos > t - window)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) / math.sqrt(D)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    if current is not None:
+        # deferred-write mode: the current token's (k, v) are not in the
+        # cache yet; attend to them explicitly (cache row at `slot` is
+        # stale and must be masked out by the caller's kpos)
+        k_cur, v_cur = current
+        s_cur = jnp.einsum(
+            "bkgd,bkd->bkg", qg, k_cur[:, 0].astype(qg.dtype),
+            preferred_element_type=jnp.float32,
+        )[..., None] / math.sqrt(D)
+        s = jnp.concatenate([s, s_cur], axis=-1)
+        p = jax.nn.softmax(s, axis=-1)
+        p_cache, p_cur = p[..., :-1], p[..., -1:]
+        out = jnp.einsum(
+            "bkgs,bskd->bkgd", p_cache.astype(v_cache.dtype), v_cache,
+            preferred_element_type=jnp.float32,
+        ) + p_cur * v_cur[:, 0, :, None, :].astype(jnp.float32)
+        return out.reshape(B, 1, H, D).astype(q.dtype)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU family)
+# ---------------------------------------------------------------------------
+
+def gated_mlp(p: dict, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[activation]
+    h = act(x @ p["w_gate"]) * (x @ p["w_in"])
+    h = constrain(h, "batch", None, "d_ff")
+    return h @ p["w_out"]

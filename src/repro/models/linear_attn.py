@@ -1,0 +1,202 @@
+"""Chunked linear attention with decay — the shared recurrence behind
+Mamba2 (SSD, scalar per-head decay) and RWKV6 (Finch, data-dependent
+per-channel decay).
+
+State per head: S in R^{dk x dv}.
+
+scalar decay (Mamba2, inclusive of current token):
+    S_t = exp(a_t) * S_{t-1} + k_t v_t^T          y_t = q_t @ S_t
+
+vector decay (RWKV6, exclusive + bonus u):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T           y_t = q_t @ (S_{t-1} + diag(u) k_t v_t^T)
+
+Training uses the chunkwise-parallel form (intra-chunk attention matrix +
+inter-chunk state carry, scanned over chunks); decoding uses the O(1)
+single-step update.  fp32 state and accumulators.
+
+Numerical note (vector decay): the chunk form rescales keys by
+exp(-cumsum(log w)); per-step log-decay is clamped to >= -LOG_CLAMP so
+the within-chunk cumulative stays in fp32 range (chunk 32 x 1.2 = 38.4
+=> exp() <= 5e16).  Exactness vs. the sequential reference is preserved
+whenever decays respect the clamp (tests check both paths agree).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "chunked_scalar_decay",
+    "chunked_vector_decay",
+    "step_scalar_decay",
+    "step_vector_decay",
+    "LOG_CLAMP",
+    "VEC_CHUNK",
+]
+
+LOG_CLAMP = 1.2   # max |log decay| per step for the vector-decay path
+VEC_CHUNK = 32
+SCALAR_CHUNK = 64
+
+
+def _split_chunks(x: jax.Array, n: int) -> jax.Array:
+    """(B, S, ...) -> (n, B, S/n, ...) for scanning."""
+    B, S = x.shape[:2]
+    return jnp.moveaxis(x.reshape(B, n, S // n, *x.shape[2:]), 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# scalar decay (Mamba2 SSD)
+# ---------------------------------------------------------------------------
+
+def chunked_scalar_decay(
+    q: jax.Array,            # (B, S, H, dk) — or (B, S, dk) shared heads
+    k: jax.Array,            # (B, S, H, dk) — or (B, S, dk) shared heads
+    v: jax.Array,            # (B, S, H, dv)
+    log_decay: jax.Array,    # (B, S, H)  <= 0
+    state0: Optional[jax.Array] = None,  # (B, H, dk, dv) fp32
+    chunk: int = SCALAR_CHUNK,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,dv), final state (B,H,dk,dv)).
+
+    Mamba2's B/C projections are shared across heads (ngroups=1): pass
+    them 3D and the head broadcast happens per-chunk inside the scan —
+    materializing (B,S,H,dk) in HBM costs H x the traffic (the dominant
+    memory term of the hybrid/ssm train cells before this change)."""
+    B, S = q.shape[:2]
+    H = v.shape[2]
+    dk = q.shape[-1]
+    dv = v.shape[-1]
+    shared = q.ndim == 3
+    n = max(S // chunk, 1)
+    chunk = S // n
+    assert S % n == 0
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    qc, kc, vc = (_split_chunks(x, n) for x in (q, k, v))
+    ldc = _split_chunks(log_decay.astype(jnp.float32), n)
+
+    def step(S_in, inp):
+        qb, kb, vb, ld = inp                       # (B, C, H, *)
+        if shared:
+            qb = jnp.broadcast_to(qb[:, :, None, :], (B, chunk, H, dk))
+            kb = jnp.broadcast_to(kb[:, :, None, :], (B, chunk, H, dk))
+        cum = jnp.cumsum(ld, axis=1)               # inclusive (B, C, H)
+        # inter-chunk: y += (q_t e^{cum_t}) @ S_in
+        q_in = qb.astype(jnp.float32) * jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("bchk,bhkv->bchv", q_in, S_in)
+        # intra-chunk: A[t,tau] = (q_t . k_tau) e^{cum_t - cum_tau}, tau <= t
+        logits = jnp.einsum(
+            "bchk,bghk->bhcg", qb.astype(jnp.float32), kb.astype(jnp.float32)
+        )
+        rel = cum[:, :, None, :] - cum[:, None, :, :]       # (B, C, G, H)
+        rel = jnp.moveaxis(rel, -1, 1)                      # (B, H, C, G)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        A = jnp.where(tri[None, None], logits * jnp.exp(rel), 0.0)
+        y_intra = jnp.einsum("bhcg,bghv->bchv", A, vb.astype(jnp.float32))
+        # state update: S_out = e^{cum_C} S_in + sum_tau e^{cum_C - cum_tau} k v
+        decay_all = jnp.exp(cum[:, -1, :])                  # (B, H)
+        k_scaled = kb.astype(jnp.float32) * jnp.exp(
+            cum[:, -1:, :] - cum
+        )[..., None]
+        S_out = (
+            S_in * decay_all[..., None, None]
+            + jnp.einsum("bchk,bchv->bhkv", k_scaled, vb.astype(jnp.float32))
+        )
+        return S_out, y_inter + y_intra
+
+    state, ys = lax.scan(step, state0, (qc, kc, vc, ldc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dv)
+    return y.astype(v.dtype), state
+
+
+def step_scalar_decay(q, k, v, log_decay, state):
+    """Decode step.  q,k: (B,H,dk), v: (B,H,dv), log_decay: (B,H),
+    state: (B,H,dk,dv).  Returns (y (B,H,dv), state)."""
+    state = state * jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    state = state + jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# vector decay (RWKV6)
+# ---------------------------------------------------------------------------
+
+def chunked_vector_decay(
+    q: jax.Array,            # (B, S, H, dk)   ("r" in RWKV)
+    k: jax.Array,            # (B, S, H, dk)
+    v: jax.Array,            # (B, S, H, dv)
+    log_decay: jax.Array,    # (B, S, H, dk)  <= 0   (log w_t)
+    bonus: jax.Array,        # (H, dk)  u
+    state0: Optional[jax.Array] = None,
+    chunk: int = VEC_CHUNK,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,dv), final state (B,H,dk,dv))."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    n = max(S // chunk, 1)
+    chunk = S // n
+    assert S % n == 0
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    ld = jnp.clip(log_decay.astype(jnp.float32), -LOG_CLAMP, 0.0)
+    qc, kc, vc = (_split_chunks(x, n) for x in (q, k, v))
+    ldc = _split_chunks(ld, n)
+
+    def step(S_in, inp):
+        qb, kb, vb, ldb = inp                     # (B, C, H, *)
+        cum = jnp.cumsum(ldb, axis=1)             # inclusive  (B,C,H,dk)
+        cum_ex = cum - ldb                        # exclusive
+        q_in = qb.astype(jnp.float32) * jnp.exp(cum_ex)
+        y_inter = jnp.einsum("bchk,bhkv->bchv", q_in, S_in)
+        k_resc = kb.astype(jnp.float32) * jnp.exp(-cum)
+        # strict lower triangular intra-chunk attention
+        A = jnp.einsum("bchk,bghk->bhcg", q_in, k_resc)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhcg,bghv->bchv", A, vb.astype(jnp.float32))
+        # bonus (current token) term
+        qk = jnp.einsum(
+            "bchk,hk,bchk->bch",
+            qb.astype(jnp.float32),
+            bonus.astype(jnp.float32),
+            kb.astype(jnp.float32),
+        )
+        y_bonus = qk[..., None] * vb.astype(jnp.float32)
+        # state carry
+        W_C = jnp.exp(cum[:, -1])                 # (B,H,dk)
+        k_carry = kb.astype(jnp.float32) * jnp.exp(cum[:, -1:] - cum)
+        S_out = S_in * W_C[..., None] + jnp.einsum(
+            "bchk,bchv->bhkv", k_carry, vb.astype(jnp.float32)
+        )
+        return S_out, y_inter + y_intra + y_bonus
+
+    state, ys = lax.scan(step, state0, (qc, kc, vc, ldc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dv)
+    return y.astype(v.dtype), state
+
+
+def step_vector_decay(q, k, v, log_decay, bonus, state):
+    """Decode step.  q,k,log_decay: (B,H,dk), v: (B,H,dv), bonus: (H,dk),
+    state: (B,H,dk,dv)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(jnp.clip(log_decay.astype(jnp.float32), -LOG_CLAMP, 0.0))
+    att = state + bonus.astype(jnp.float32)[None, :, :, None] * jnp.einsum(
+        "bhk,bhv->bhkv", kf, vf
+    )
+    y = jnp.einsum("bhk,bhkv->bhv", qf, att)
+    state = state * w[..., None] + jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    return y.astype(v.dtype), state

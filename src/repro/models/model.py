@@ -1,0 +1,499 @@
+"""Model assembly: embeddings + scan-over-layers + heads, for every
+assigned architecture family, with train / prefill / decode entrypoints.
+
+Layer parameters are stacked on a leading L axis and applied with
+``lax.scan`` (+ optional ``jax.checkpoint`` remat) — essential both for
+runtime (single compiled block) and for the 40-cell dry-run's compile
+times.
+
+Entry points (all pure functions of (params, batch...)):
+
+    forward(params, batch)              -> (logits, aux)    train shapes
+    prefill(params, batch)              -> (last_logits, cache)
+    decode_step(params, cache, tok, t)  -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import blocks as B
+from repro.models.layers import init_dense, init_norm, rms_norm
+
+__all__ = ["Model", "build_model"]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap a per-layer init over n layer keys -> stacked params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+class Model:
+    """Functional model wrapper; all state lives in explicit pytrees."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            self._block = B.dense_block
+            self._block_init = B.init_dense_block
+            self._block_decode = B.dense_block_decode
+        elif fam == "moe":
+            self._block = B.moe_block
+            self._block_init = B.init_moe_block
+            self._block_decode = B.moe_block_decode
+        elif fam == "ssm":
+            self._block = B.mamba2_block
+            self._block_init = B.init_mamba2_block
+            self._block_decode = B.mamba2_block_decode
+        elif fam == "rwkv":
+            self._block = B.rwkv6_block
+            self._block_init = B.init_rwkv6_block
+            self._block_decode = B.rwkv6_block_decode
+        elif fam == "hybrid":
+            self._block = B.mamba2_block
+            self._block_init = B.init_mamba2_block
+            self._block_decode = B.mamba2_block_decode
+        elif fam == "encdec":
+            self._block = B.dense_block
+            self._block_init = B.init_dense_block
+            self._block_decode = B.dense_block_decode
+        else:
+            raise ValueError(f"unknown family {fam}")
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k_emb, k_layers, k_extra, k_head = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": {"vocab": init_dense(k_emb, cfg.vocab_size, cfg.d_model, dt)},
+            "layers": _stack_init(
+                lambda k: self._block_init(k, cfg, dt), k_layers, cfg.num_layers
+            ),
+            "final_norm": init_norm(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_dense(k_head, cfg.d_model, cfg.vocab_size, dt)
+        if cfg.family == "hybrid":
+            params["shared"] = B.init_dense_block(k_extra, cfg, dt)
+        if cfg.family == "encdec":
+            ke1, ke2, ke3 = jax.random.split(k_extra, 3)
+            params["encoder"] = {
+                "layers": _stack_init(
+                    lambda k: B.init_dense_block(k, cfg, dt), ke1,
+                    cfg.encoder_layers,
+                ),
+                "final_norm": init_norm(cfg.d_model, dt),
+            }
+            params["xattn"] = _stack_init(
+                lambda k: B.init_cross_attention(k, cfg, dt), ke2, cfg.num_layers
+            )
+        return params
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens):
+        e = jnp.take(params["embed"]["vocab"], tokens, axis=0)
+        return e * jnp.asarray(math.sqrt(self.cfg.d_model), e.dtype)
+
+    def _head(self, params, x):
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        w = (
+            params["embed"]["vocab"].T
+            if self.cfg.tie_embeddings
+            else params["lm_head"]
+        )
+        logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+        return constrain(logits, "batch", None, "vocab")
+
+    # ------------------------------------------------------------------
+    # layer stacks (train / prefill direction)
+    # ------------------------------------------------------------------
+    def _run_stack(self, stacked, x, positions, *, causal=True, collect_kv=False):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            h, aux = carry
+            h, (a, kv) = self._block(lp, h, cfg, positions, causal=causal) \
+                if cfg.family in ("dense", "vlm", "moe", "encdec") \
+                else self._block(lp, h, cfg, positions)
+            h = constrain(h, "batch", "seq", None)
+            out = kv if collect_kv else None
+            return (h, aux + a), out
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), kvs = lax.scan(fn, (x, jnp.float32(0.0)), stacked)
+        return x, aux, kvs
+
+    def _run_hybrid(self, params, x, positions):
+        """Zamba2: stacked Mamba2 layers + one shared attention block
+        applied every ``attn_every`` layers."""
+        cfg = self.cfg
+        k = cfg.attn_every
+        L = cfg.num_layers
+        groups = L // k
+        stacked = jax.tree.map(
+            lambda a: a.reshape(groups, k, *a.shape[1:]), params["layers"]
+        )
+        shared = params["shared"]
+
+        def group_body(carry, lp_group):
+            h, aux = carry
+
+            def inner(c, lp):
+                hh, au = c
+                hh, (a, _) = B.mamba2_block(lp, hh, cfg)
+                return (hh, au + a), None
+
+            (h, aux), _ = lax.scan(inner, (h, aux), lp_group)
+            h, (a, _) = B.dense_block(shared, h, cfg, positions)
+            h = constrain(h, "batch", "seq", None)
+            return (h, aux + a), None
+
+        fn = jax.checkpoint(group_body) if cfg.remat else group_body
+        (x, aux), _ = lax.scan(fn, (x, jnp.float32(0.0)), stacked)
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # forward (training shapes; returns full logits)
+    # ------------------------------------------------------------------
+    def forward(self, params, batch: Dict[str, jax.Array]):
+        """batch: tokens (B,S) int32 [+ positions / patch_embeds /
+        enc_embeds per family].  Returns (logits (B,S,V) f32, aux)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        Bsz, S = tokens.shape
+        x = self._embed(params, tokens)
+
+        if cfg.family == "vlm":
+            # prepend precomputed vision patch embeddings (frontend stub)
+            patches = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)[:, :S]
+        x = constrain(x, "batch", "seq", None)
+
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (Bsz, S))
+        if cfg.mrope and positions.ndim == 2:
+            positions = jnp.broadcast_to(positions, (3, *positions.shape))
+
+        if cfg.family == "hybrid":
+            x, aux = self._run_hybrid(params, x, positions)
+        elif cfg.family == "encdec":
+            enc = batch["enc_embeds"].astype(x.dtype)
+            enc = constrain(enc, "batch", "seq", None)
+            enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1]), enc.shape[:2])
+            enc, _, _ = self._run_stack(
+                params["encoder"]["layers"], enc, enc_pos, causal=False
+            )
+            enc = rms_norm(enc, params["encoder"]["final_norm"], cfg.norm_eps)
+            x, aux = self._run_encdec_decoder(params, x, positions, enc)
+        else:
+            x, aux, _ = self._run_stack(params["layers"], x, positions)
+
+        return self._head(params, x), aux
+
+    def _run_encdec_decoder(self, params, x, positions, enc):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            h, aux = carry
+            layer, xa = lp
+            h, (a, _) = B.dense_block(layer, h, cfg, positions)
+            h = B.cross_attention(xa, h, cfg, B.encode_kv(xa, enc, cfg))
+            h = constrain(h, "batch", "seq", None)
+            return (h, aux + a), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = lax.scan(
+            fn, (x, jnp.float32(0.0)), (params["layers"], params["xattn"])
+        )
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # prefill: forward + return serving cache and last-position logits
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        Bsz, S = tokens.shape
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            patches = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)[:, :S]
+        x = constrain(x, "batch", "seq", None)
+        positions = jnp.broadcast_to(jnp.arange(S), (Bsz, S))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions, (3, Bsz, S))
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, aux, kvs = self._run_stack(
+                params["layers"], x, positions, collect_kv=True
+            )
+            k_cache = constrain(kvs[0].astype(_kv_dtype(cfg)),
+                                None, "batch", "kv_seq", None, None)
+            v_cache = constrain(kvs[1].astype(_kv_dtype(cfg)),
+                                None, "batch", "kv_seq", None, None)
+            cache = {"k": k_cache, "v": v_cache}
+        elif cfg.family in ("ssm", "rwkv", "hybrid", "encdec"):
+            raise NotImplementedError(
+                "prefill caches for recurrent/encdec families are built by "
+                "their decode drivers"
+            )
+        logits = self._head(params, x[:, -1:, :])
+        return logits[:, 0], cache
+
+    # ------------------------------------------------------------------
+    # decode: one token, cache carried
+    # ------------------------------------------------------------------
+    def init_cache(
+        self, batch_size: int, max_len: int, enc_len: Optional[int] = None
+    ) -> Dict[str, Any]:
+        """Allocate the decode cache (family-specific)."""
+        cfg = self.cfg
+        L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+        kvdt = _kv_dtype(cfg)
+        if cfg.family in ("dense", "vlm", "moe", "encdec"):
+            S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+            cache = {
+                "k": jnp.zeros((L, batch_size, S, KV, hd), kvdt),
+                "v": jnp.zeros((L, batch_size, S, KV, hd), kvdt),
+                "kpos": jnp.full((S,), -1, jnp.int32),
+            }
+            if cfg.family == "encdec":
+                se = enc_len or max_len
+                cache["xk"] = jnp.zeros((L, batch_size, se, KV, hd), _dtype(cfg))
+                cache["xv"] = jnp.zeros((L, batch_size, se, KV, hd), _dtype(cfg))
+            return cache
+        if cfg.family == "ssm":
+            return self._mamba_cache(cfg.num_layers, batch_size)
+        if cfg.family == "rwkv":
+            H = cfg.d_model // cfg.ssm_head_dim
+            hd2 = cfg.ssm_head_dim
+            return {
+                "shift_t": jnp.zeros((L, batch_size, cfg.d_model), _dtype(cfg)),
+                "shift_c": jnp.zeros((L, batch_size, cfg.d_model), _dtype(cfg)),
+                "wkv": jnp.zeros((L, batch_size, H, hd2, hd2), jnp.float32),
+            }
+        if cfg.family == "hybrid":
+            groups = cfg.num_layers // cfg.attn_every
+            S = min(max_len, cfg.sliding_window or max_len)
+            c = self._mamba_cache(cfg.num_layers, batch_size)
+            c["shared_k"] = jnp.zeros((groups, batch_size, S, KV, hd), kvdt)
+            c["shared_v"] = jnp.zeros((groups, batch_size, S, KV, hd), kvdt)
+            c["kpos"] = jnp.full((S,), -1, jnp.int32)
+            return c
+        raise ValueError(cfg.family)
+
+    def _mamba_cache(self, L, batch_size):
+        cfg = self.cfg
+        d_inner = 2 * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        conv_ch = d_inner + 2 * cfg.ssm_state
+        return {
+            "conv": jnp.zeros(
+                (L, batch_size, cfg.ssm_conv_width - 1, conv_ch), _dtype(cfg)
+            ),
+            "ssm": jnp.zeros(
+                (L, batch_size, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+            ),
+        }
+
+    def decode_step(self, params, cache, tokens: jax.Array, t: jax.Array):
+        """tokens: (B,) int32 current input token; t: scalar position.
+        Returns (logits (B,V) f32, updated cache)."""
+        cfg = self.cfg
+        Bsz = tokens.shape[0]
+        x = self._embed(params, tokens[:, None])
+        pos = jnp.broadcast_to(t, (Bsz, 1))
+        if cfg.mrope:
+            pos = jnp.broadcast_to(pos, (3, Bsz, 1))
+
+        if cfg.family == "encdec":
+            x, cache = self._decode_encdec(params, cache, x, t, pos)
+        elif cfg.family in ("dense", "vlm", "moe"):
+            S = cache["k"].shape[2]
+            slot = t % S
+            if cfg.cache_update == "deferred":
+                from repro.models.layers import ring_update_stacked
+
+                # mask the stale slot row during attention; new (k, v)
+                # rows are attended explicitly and written once for all
+                # layers after the scan (one sharded update)
+                kpos_mask = jnp.where(
+                    jnp.arange(S) == slot, -1, cache["kpos"]
+                )
+
+                def body(h, inp):
+                    lp, kc, vc = inp
+                    h, (k_new, v_new) = self._block_decode(
+                        lp, h, cfg, kc, vc, t, pos, kpos_mask
+                    )
+                    return h, (k_new, v_new)
+
+                x, (k_rows, v_rows) = lax.scan(
+                    body, x, (params["layers"], cache["k"], cache["v"])
+                )
+                kpos = jnp.where(jnp.arange(S) == slot, t, cache["kpos"])
+                cache = {
+                    "k": ring_update_stacked(cache["k"], k_rows, slot),
+                    "v": ring_update_stacked(cache["v"], v_rows, slot),
+                    "kpos": kpos,
+                }
+            else:
+                kpos = jnp.where(jnp.arange(S) == slot, t, cache["kpos"])
+
+                def body(h, inp):
+                    lp, kc, vc = inp
+                    h, (kc, vc) = self._block_decode(
+                        lp, h, cfg, kc, vc, t, pos, kpos
+                    )
+                    return h, (kc, vc)
+
+                x, (k_new, v_new) = lax.scan(
+                    body, x, (params["layers"], cache["k"], cache["v"])
+                )
+                cache = {"k": k_new, "v": v_new, "kpos": kpos}
+        elif cfg.family == "ssm":
+            def body(h, inp):
+                lp, conv, ssm = inp
+                h, (conv, ssm) = B.mamba2_block_decode(lp, h, cfg, conv, ssm)
+                return h, (conv, ssm)
+
+            x, (conv, ssm) = lax.scan(
+                body, x, (params["layers"], cache["conv"], cache["ssm"])
+            )
+            cache = {"conv": conv, "ssm": ssm}
+        elif cfg.family == "rwkv":
+            def body(h, inp):
+                lp, st, sc, wkv = inp
+                h, (st, sc, wkv) = B.rwkv6_block_decode(lp, h, cfg, st, sc, wkv)
+                return h, (st, sc, wkv)
+
+            x, (st, sc, wkv) = lax.scan(
+                body,
+                x,
+                (params["layers"], cache["shift_t"], cache["shift_c"], cache["wkv"]),
+            )
+            cache = {"shift_t": st, "shift_c": sc, "wkv": wkv}
+        elif cfg.family == "hybrid":
+            x, cache = self._decode_hybrid(params, cache, x, t, pos)
+        else:
+            raise ValueError(cfg.family)
+
+        logits = self._head(params, x)
+        return logits[:, 0], cache
+
+    def _decode_hybrid(self, params, cache, x, t, pos):
+        cfg = self.cfg
+        k = cfg.attn_every
+        groups = cfg.num_layers // k
+        S = cache["shared_k"].shape[2]
+        slot = t % S
+        kpos = jnp.where(jnp.arange(S) == slot, t, cache["kpos"])
+        g = lambda a: jax.tree.map(
+            lambda v: v.reshape(groups, k, *v.shape[1:]), a
+        )
+        stacked = g(params["layers"])
+        conv_g = cache["conv"].reshape(groups, k, *cache["conv"].shape[1:])
+        ssm_g = cache["ssm"].reshape(groups, k, *cache["ssm"].shape[1:])
+
+        def group_body(h, inp):
+            lp_group, conv, ssm, kc, vc = inp
+
+            def inner(hh, ii):
+                lpi, ci, si = ii
+                hh, (ci, si) = B.mamba2_block_decode(lpi, hh, cfg, ci, si)
+                return hh, (ci, si)
+
+            h, (conv, ssm) = lax.scan(inner, h, (lp_group, conv, ssm))
+            h, (kc, vc) = B.dense_block_decode(
+                params["shared"], h, cfg, kc, vc, t, pos, kpos
+            )
+            return h, (conv, ssm, kc, vc)
+
+        x, (conv, ssm, kc, vc) = lax.scan(
+            group_body, x,
+            (stacked, conv_g, ssm_g, cache["shared_k"], cache["shared_v"]),
+        )
+        cache = {
+            "conv": conv.reshape(cfg.num_layers, *conv.shape[2:]),
+            "ssm": ssm.reshape(cfg.num_layers, *ssm.shape[2:]),
+            "shared_k": kc,
+            "shared_v": vc,
+            "kpos": kpos,
+        }
+        return x, cache
+
+
+    # ------------------------------------------------------------------
+    # encoder-decoder serving helpers
+    # ------------------------------------------------------------------
+    def encode(self, params, enc_embeds: jax.Array) -> jax.Array:
+        """Run the encoder once over frontend-stub embeddings."""
+        cfg = self.cfg
+        enc = constrain(enc_embeds.astype(_dtype(cfg)), "batch", "seq", None)
+        pos = jnp.broadcast_to(jnp.arange(enc.shape[1]), enc.shape[:2])
+        enc, _, _ = self._run_stack(
+            params["encoder"]["layers"], enc, pos, causal=False
+        )
+        return rms_norm(enc, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    def make_cross_cache(self, params, enc_out: jax.Array):
+        """Precompute per-layer cross-attention K/V (reused every decode
+        step): (L, B, S_enc, KV, hd) pair."""
+        cfg = self.cfg
+        ks, vs = jax.vmap(lambda xa: B.encode_kv(xa, enc_out, cfg))(
+            params["xattn"]
+        )
+        return ks, vs
+
+    def _decode_encdec(self, params, cache, x, t, pos):
+        cfg = self.cfg
+        S = cache["k"].shape[2]
+        slot = t % S
+        kpos = jnp.where(jnp.arange(S) == slot, t, cache["kpos"])
+
+        def body(h, inp):
+            lp, xa, kc, vc, xk, xv = inp
+            h, (kc, vc) = B.dense_block_decode(lp, h, cfg, kc, vc, t, pos, kpos)
+            h = B.cross_attention(xa, h, cfg, (xk, xv))
+            return h, (kc, vc)
+
+        x, (k_new, v_new) = lax.scan(
+            body,
+            x,
+            (params["layers"], params["xattn"], cache["k"], cache["v"],
+             cache["xk"], cache["xv"]),
+        )
+        return x, {
+            "k": k_new, "v": v_new, "kpos": kpos,
+            "xk": cache["xk"], "xv": cache["xv"],
+        }
+
+
+def _kv_dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "int8": jnp.int8}[cfg.kv_cache_dtype]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,3 @@
+"""repro.roofline — three-term roofline analysis from compiled dry-runs."""
+
+from repro.roofline.analysis import HW_V5E, Hardware, RooflineReport, analyze, collective_bytes

@@ -1,0 +1,184 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+``cost_analysis`` provides FLOPs and bytes for the *partitioned,
+per-device* program, so the per-chip terms divide by 1 (the chips factor
+is already applied by SPMD partitioning); collective bytes are parsed
+out of the (partitioned) HLO text since cost_analysis does not count
+them.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (45 effective).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+__all__ = ["HW_V5E", "Hardware", "collective_bytes", "RooflineReport",
+           "analyze"]
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    link_bw: float             # bytes/s per ICI link
+    dcn_bw: float = 25e9       # bytes/s per host cross-pod
+
+
+HW_V5E = Hardware("tpu_v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=45e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+#: ops we count as collectives, with an approximate wire-bytes multiplier
+#: per *operand shard byte* (ring algorithms)
+_COLLECTIVES = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather ring
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' -> bytes."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+_TUPLE_SHAPE_RE = re.compile(r"(\w+\[[\d,]*\])")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum (approximate wire) bytes of every collective in the
+    partitioned HLO, by op kind.  Handles tuple-shaped results and the
+    async -start/-done forms (done ops are not double counted)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        result, kind = m.groups()
+        nbytes = sum(_shape_bytes(s) for s in _TUPLE_SHAPE_RE.findall(result))
+        out[kind] += nbytes * _COLLECTIVES[kind]
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    coll_bytes: float           # per device (wire estimate)
+    coll_by_kind: Dict[str, float]
+    model_flops: float          # 6 N D (global, useful)
+    hw: Hardware = HW_V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.hw.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips x HLO_FLOPs): remat/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """fraction of the dominant-term-bound step time that is the
+        compute term — i.e. how close the step is to compute-roofline."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / t if t else 0.0
+
+    def row(self) -> str:
+        return (
+            f"| {self.arch} | {self.shape} | {self.mesh} | "
+            f"{self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} | "
+            f"{self.t_collective*1e3:.2f} | {self.bottleneck} | "
+            f"{self.useful_flops_ratio:.2f} | {self.roofline_fraction:.2f} |"
+        )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for train; for
+    inference shapes, 2 N D per generated/prefilled token."""
+    n = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind in
+                                   ("train", "prefill") else 1)
+    per_tok = 6 * n if shape.kind == "train" else 2 * n
+    return float(per_tok) * tokens
+
+
+def analyze(arch, shape, mesh_name, chips, cost, hlo_text, cfg, shape_cfg,
+            hw: Hardware = HW_V5E) -> RooflineReport:
+    """Build the report from the *loop-aware* HLO walk (hlo_cost) — the
+    builtin cost_analysis is trip-count-blind for while loops (see
+    tests/test_roofline.py) and is kept only as a cross-check field."""
+    from repro.roofline.hlo_cost import parse_hlo_cost
+
+    parsed = parse_hlo_cost(hlo_text)
+    coll = {
+        k: v * _COLLECTIVES.get(k, 1.0) for k, v in parsed.coll.items()
+    }
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=parsed.flops,
+        hlo_bytes=parsed.bytes,
+        coll_bytes=sum(coll.values()),
+        coll_by_kind=coll,
+        model_flops=model_flops_estimate(cfg, shape_cfg),
+        hw=hw,
+    )

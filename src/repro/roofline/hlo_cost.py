@@ -1,0 +1,362 @@
+"""Loop-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+regardless of trip count — with scan-over-layers (and microbatch /
+flash-chunk scans) that under-counts FLOPs, bytes, and collectives by
+orders of magnitude (verified in tests/test_roofline.py).  This module
+re-derives the three roofline inputs by walking the partitioned HLO:
+
+* computations are parsed into blocks; a module-wide symbol table maps
+  every ``%value`` to its result shape (operands are printed without
+  inline shapes in scheduled HLO dumps);
+* ``while`` ops multiply body+condition cost by the trip count recovered
+  from the largest integer constant in the loop condition computation
+  (jax scans lower to ``compare(iter, constant(N)), direction=LT``);
+* ``dot``/``convolution`` FLOPs come from operand shapes + contraction
+  dims;
+* bytes = operand + output bytes of top-level ops (fusion internals stay
+  in registers/VMEM; the fusion call-site operands/outputs are the HBM
+  traffic);
+* collective bytes are accumulated per kind with the same trip
+  multipliers.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "parse_hlo_cost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_COMP_START = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\w+\[[\d,]*\]\S*)\s+"
+    r"([\w\-]+)\("
+)
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_OPS = frozenset((
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "custom-call",
+    "rng-bit-generator", "opt-barrier",
+))
+
+
+def _shapes_in(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    return [
+        (m.group(1), tuple(int(d) for d in m.group(2).split(",") if d))
+        for m in _SHAPE.finditer(text)
+        if m.group(1) in _DTYPE_BYTES
+    ]
+
+
+def _bytes_of_shape_text(text: Optional[str]) -> int:
+    if not text:
+        return 0
+    return sum(
+        _DTYPE_BYTES[dt] * (math.prod(dims) if dims else 1)
+        for dt, dims in _shapes_in(text)
+    )
+
+
+def _elems_of_result(text: str) -> int:
+    s = _shapes_in(text)
+    if not s:
+        return 0
+    return math.prod(s[0][1]) if s[0][1] else 1
+
+
+@dataclass
+class _Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    by_op: Dict[str, float] = field(default_factory=dict)  # op -> bytes
+    coll_shapes: Dict[str, float] = field(default_factory=dict)
+
+    def add_coll(self, kind: str, v: float, mult: float = 1.0):
+        self.coll[kind] = self.coll.get(kind, 0.0) + v * mult
+
+    def add_op(self, op: str, nbytes: float, mult: float = 1.0):
+        if nbytes:
+            self.by_op[op] = self.by_op.get(op, 0.0) + nbytes * mult
+
+
+@dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    coll: Dict[str, float]
+    by_op: Dict[str, float] = field(default_factory=dict)
+    coll_shapes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+    def top_ops(self, n: int = 8):
+        return sorted(self.by_op.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _fusion_out_bytes(comp_lines, shapes, result_text) -> int:
+    """Call-site output traffic of a fusion, honoring XLA's in-place
+    dynamic-update-slice outputs (aliased buffers: traffic = update
+    region only, which the internal walk already counted).
+
+    Handles single-DUS roots, bitcast/copy-wrapped DUS roots, and
+    multi-output fusions whose ROOT is a tuple mixing DUS and non-DUS
+    elements (scan ys-stacking produces these).
+    """
+    root_line = None
+    dus_values = set()
+    defs = {}
+    for line in comp_lines:
+        om = _OP_LINE.match(line)
+        if om:
+            name, res, op = om.groups()
+            defs[name] = (op, res)
+            if op == "dynamic-update-slice":
+                dus_values.add(name)
+        if line.lstrip().startswith("ROOT"):
+            root_line = line
+    if root_line is None or not dus_values:
+        return 2 * _bytes_of_shape_text(result_text)
+
+    rm = _OP_LINE.match(root_line)
+    if rm is None:
+        return 2 * _bytes_of_shape_text(result_text)
+    _, root_res, root_op = rm.groups()
+
+    def is_dus_chain(name, depth=0):
+        if depth > 4 or name not in defs:
+            return False
+        op, _ = defs[name]
+        if op == "dynamic-update-slice":
+            return True
+        if op in ("bitcast", "copy", "reshape", "convert"):
+            ops_ = _OPERAND.findall(
+                comp_line_for(name)
+            )
+            return bool(ops_) and is_dus_chain(ops_[0], depth + 1)
+        return False
+
+    def comp_line_for(name):
+        for line in comp_lines:
+            om = _OP_LINE.match(line)
+            if om and om.group(1) == name:
+                idx = line.index("(", line.index(om.group(3)))
+                return line[idx:]
+        return ""
+
+    if root_op == "dynamic-update-slice" or (
+        root_op in ("bitcast", "copy", "reshape", "convert")
+        and is_dus_chain(_OPERAND.findall(comp_line_for(rm.group(1)))[0]
+                         if _OPERAND.findall(comp_line_for(rm.group(1)))
+                         else "", 0)
+    ):
+        return 0
+    if root_op == "tuple":
+        # count only the non-DUS tuple elements
+        nb = 0
+        operands = _OPERAND.findall(comp_line_for(rm.group(1)))
+        for name in operands:
+            if is_dus_chain(name):
+                continue
+            op_res = defs.get(name)
+            nb += 2 * _bytes_of_shape_text(op_res[1] if op_res else None)
+        return nb
+    return 2 * _bytes_of_shape_text(result_text)
+
+
+def parse_hlo_cost(hlo: str) -> HloCost:
+    # --- split into computations + build the symbol table -----------------
+    comps: Dict[str, List[str]] = {}
+    entry: Optional[str] = None
+    shapes: Dict[str, str] = {}  # %value -> result type text
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_START.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            s = line.strip()
+            if s == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+            om = _OP_LINE.match(line)
+            if om:
+                shapes[om.group(1)] = om.group(2)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+
+    memo: Dict[str, _Cost] = {}
+
+    def operand_bytes(line: str, op: str) -> int:
+        idx = line.index(op + "(")
+        inside = line[idx + len(op) + 1 :]
+        inside = inside.split("), ")[0]
+        total = 0
+        for name in _OPERAND.findall(inside):
+            total += _bytes_of_shape_text(shapes.get(name))
+        return total
+
+    def first_operand_shape(line: str, op: str) -> Tuple[int, ...]:
+        idx = line.index(op + "(")
+        m = _OPERAND.search(line[idx:])
+        if not m:
+            return ()
+        s = _shapes_in(shapes.get(m.group(1), ""))
+        return s[0][1] if s else ()
+
+    def trip_count(cond_name: str) -> int:
+        consts = [
+            int(c)
+            for line in comps.get(cond_name, ())
+            for c in _CONST.findall(line)
+        ]
+        return max(consts) if consts else 1
+
+    def comp_cost(name: str, fused: bool = False) -> _Cost:
+        key = f"{name}|{fused}"
+        if key in memo:
+            return memo[key]
+        total = _Cost()
+        memo[key] = total  # cycle guard
+        for line in comps.get(name, ()):
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            _, result, op = m.groups()
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                trips = trip_count(cm.group(1)) if cm else 1
+                for sub_name in ([bm.group(1)] if bm else []) :
+                    sub = comp_cost(sub_name)
+                    total.flops += trips * sub.flops
+                    total.bytes += trips * sub.bytes
+                    for k, v in sub.coll.items():
+                        total.add_coll(k, v, trips)
+                    for k, v in sub.by_op.items():
+                        total.add_op(k, v, trips)
+                    for k, v in sub.coll_shapes.items():
+                        total.coll_shapes[k] = total.coll_shapes.get(k, 0.0) + v * trips
+                continue
+            if op in ("fusion", "call"):
+                cm = _CALLS.search(line) or re.search(
+                    r"to_apply=%?([\w.\-]+)", line
+                )
+                if cm and cm.group(1) in comps:
+                    # inside a fusion only slicing/dots/collectives touch
+                    # memory; elementwise stays in registers
+                    sub = comp_cost(cm.group(1), fused=True)
+                    total.flops += sub.flops
+                    total.bytes += sub.bytes
+                    for k, v in sub.coll.items():
+                        total.add_coll(k, v)
+                    for k, v in sub.by_op.items():
+                        total.add_op(k, v)
+                    for k, v in sub.coll_shapes.items():
+                        total.coll_shapes[k] = total.coll_shapes.get(k, 0.0) + v
+                if cm and cm.group(1) in comps:
+                    nb = _fusion_out_bytes(comps[cm.group(1)], shapes, result)
+                else:
+                    nb = 2 * _bytes_of_shape_text(result)
+                total.bytes += nb
+                total.add_op("fusion-io", nb)
+                if nb >= (1 << 20):
+                    total.add_op(f"fusion-io {result[:44]}", nb)
+                continue
+            if op == "dot":
+                lhs = first_operand_shape(line, "dot")
+                contract = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                if cm and cm.group(1):
+                    for d in cm.group(1).split(","):
+                        if int(d) < len(lhs):
+                            contract *= lhs[int(d)]
+                total.flops += 2.0 * _elems_of_result(result) * contract
+                nb = operand_bytes(line, "dot") + _bytes_of_shape_text(result)
+                total.bytes += nb
+                total.add_op("dot", nb)
+                continue
+            if fused and op not in ("dynamic-slice", "dynamic-update-slice",
+                                    "convolution", "gather", "scatter"):
+                # register-resident elementwise inside a fusion
+                total.flops += _elems_of_result(result)
+                continue
+            if op == "convolution":
+                wm = re.search(r"window=\{size=([\dx]+)", line)
+                window = 1
+                if wm:
+                    for d in wm.group(1).split("x"):
+                        window *= int(d)
+                total.flops += 2.0 * _elems_of_result(result) * window
+                total.bytes += operand_bytes(line, "convolution") + \
+                    _bytes_of_shape_text(result)
+                continue
+            base = op.replace("-start", "")
+            if base in _COLLECTIVE_KINDS:
+                if op.endswith("-done"):
+                    continue
+                nb = _bytes_of_shape_text(result)
+                total.add_coll(base, nb)
+                total.bytes += nb
+                total.add_op(base, nb)
+                key = f"{base} {result[:48]}"
+                total.coll_shapes[key] = total.coll_shapes.get(key, 0.0) + nb
+                continue
+            if op in _SKIP_OPS:
+                continue
+            if op == "dynamic-slice":
+                # traffic is the slice, not the sliced-from operand
+                nb = 2 * _bytes_of_shape_text(result)
+                total.bytes += nb
+                total.add_op("dynamic-slice", nb)
+                continue
+            if op == "dynamic-update-slice":
+                # in-place on TPU: read + write the update region only
+                idx = line.index(op + "(")
+                ops_ = _OPERAND.findall(line[idx:])
+                upd = _bytes_of_shape_text(shapes.get(ops_[1])) if len(ops_) > 1 else 0
+                total.bytes += 2 * upd
+                total.add_op("dynamic-update-slice", 2 * upd)
+                continue
+            if op in ("broadcast", "convert"):
+                # always fused into consumers on TPU (and CPU): no HBM
+                # traffic of their own; count the (tiny) flops only
+                total.flops += _elems_of_result(result)
+                continue
+            # other top-level op (copy, transpose, reduce, elementwise...)
+            out_b = _bytes_of_shape_text(result)
+            total.flops += out_b / 4.0  # ~1 flop per element (minor)
+            nb = operand_bytes(line, op) + out_b
+            total.bytes += nb
+            total.add_op(op, nb)
+        return total
+
+    root = comp_cost(entry)
+    return HloCost(flops=root.flops, bytes=root.bytes, coll=dict(root.coll),
+                   by_op=dict(root.by_op), coll_shapes=dict(root.coll_shapes))

@@ -1,0 +1,4 @@
+"""repro.train — optimizer, train/serve steps, checkpointing, data."""
+
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.train_step import make_loss_fn, make_train_step

@@ -1,0 +1,130 @@
+"""Elastic scaling + straggler mitigation (scale deliverable).
+
+At 1000+ nodes the failure model is: a pod/slice drops out (hardware,
+preemption), or a host straggles (thermal throttling, ECC retries).  The
+policies here are deliberately *mechanism-level* so they run on this
+container and on a real cluster:
+
+* **Elastic re-mesh** (`plan_remesh`): given surviving device count,
+  pick the largest valid (data, model) mesh <= survivors that preserves
+  the model-parallel degree (weights reshard cheaply along data/pod
+  only), rescale the per-host batch, and return the new mesh spec.
+  `repro.train.checkpoint.restore_checkpoint(shardings=...)` already
+  re-shards the state onto the new mesh — together they implement
+  checkpoint/restart elasticity.
+
+* **Straggler mitigation** (`StragglerMonitor`): EWMA of per-step wall
+  time; a step slower than `threshold` x EWMA flags a straggler event.
+  The recommended action at scale is within-step: XLA's collective
+  scheduling already overlaps; across steps the monitor recommends
+  checkpoint-and-remesh when a host is persistently slow (the same
+  elastic path as failures — slow node == failed node policy, standard
+  at pod scale).
+
+* **Failure detection** (`heartbeat_check`): in multi-controller JAX the
+  runtime surfaces device loss as errors on collectives; the driver
+  wraps steps in `try` and escalates to the elastic path.  Here the hook
+  is a callable so tests can inject failures.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+__all__ = ["plan_remesh", "StragglerMonitor", "ElasticPolicy"]
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    global_batch: int
+
+
+def plan_remesh(
+    survivors: int,
+    model_parallel: int,
+    global_batch: int,
+    multi_pod: bool = False,
+    pod_size: int = 256,
+) -> MeshPlan:
+    """Largest usable mesh after losing devices.
+
+    Keeps the model axis fixed (weight shards survive in-place) and
+    shrinks the data (and pod) axes; the global batch is scaled down
+    proportionally in whole microbatch units so per-device batch stays
+    constant (loss scale unchanged).
+    """
+    if survivors < model_parallel:
+        raise RuntimeError(
+            f"cannot keep model_parallel={model_parallel} with "
+            f"{survivors} devices"
+        )
+    if multi_pod and survivors >= pod_size * 2:
+        pods = survivors // pod_size
+        data = pod_size // model_parallel
+        frac = (pods * pod_size) / (2 * pod_size)
+        return MeshPlan(
+            (pods, data, model_parallel),
+            ("pod", "data", "model"),
+            max(int(global_batch * frac), 1),
+        )
+    data = survivors // model_parallel
+    # data axis must divide the batch; round down to a power of two
+    data = 2 ** int(math.log2(data)) if data > 0 else 1
+    orig_data = survivors // model_parallel
+    frac = data / max(orig_data, 1)
+    return MeshPlan(
+        (data, model_parallel),
+        ("data", "model"),
+        max(global_batch * data // max(orig_data, 1), 1),
+    )
+
+
+class StragglerMonitor:
+    """EWMA step-time monitor with a slow-step escalation policy."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 1.5,
+                 patience: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.ewma: Optional[float] = None
+        self.slow_streak = 0
+        self.events: List[Tuple[int, float, float]] = []
+
+    def observe(self, step: int, seconds: float) -> str:
+        """Returns "ok" | "slow" | "remesh"."""
+        if self.ewma is None:
+            self.ewma = seconds
+            return "ok"
+        verdict = "ok"
+        if seconds > self.threshold * self.ewma:
+            self.slow_streak += 1
+            self.events.append((step, seconds, self.ewma))
+            verdict = "slow"
+            if self.slow_streak >= self.patience:
+                verdict = "remesh"
+        else:
+            self.slow_streak = 0
+        # slow steps do not pollute the baseline
+        if verdict == "ok":
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * seconds
+        return verdict
+
+
+@dataclass
+class ElasticPolicy:
+    """Driver-facing bundle: detect -> checkpoint -> remesh -> resume."""
+
+    model_parallel: int
+    global_batch: int
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+
+    def on_failure(self, survivors: int, multi_pod: bool = False) -> MeshPlan:
+        return plan_remesh(
+            survivors, self.model_parallel, self.global_batch, multi_pod
+        )

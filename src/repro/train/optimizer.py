@@ -1,0 +1,116 @@
+"""AdamW in pure JAX with the distributed-optimization features the
+scale deliverable asks for:
+
+* **ZeRO-style sharded state** — moments inherit the parameter sharding
+  (already model/data sharded for the big archs) and can additionally be
+  sharded over the data axis via the state partitioner in
+  ``repro.launch``.
+* **moment dtype control** — bf16 moments for the 100B+ archs
+  (``cfg.opt_moment_dtype``), halving optimizer HBM.
+* **global-norm clipping** and decoupled weight decay.
+* optional **int8 gradient compression** for the cross-pod (DCN)
+  all-reduce: error-feedback quantization applied before the pod-axis
+  reduction (``compress_pod_grads``).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "global_norm",
+           "quantize_grad_int8", "dequantize_grad_int8"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"
+
+
+def _mdt(cfg: AdamWConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    mdt = _mdt(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(step, cfg: AdamWConfig):
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_schedule(step, cfg)
+    mdt = _mdt(cfg)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        update = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * update
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, metrics
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression (cross-pod DCN traffic reduction)
+# ---------------------------------------------------------------------------
+
+def quantize_grad_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: g ~ q * scale."""
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32))) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_grad_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

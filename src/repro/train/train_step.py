@@ -1,0 +1,104 @@
+"""Train / serve step factories: loss, microbatched gradient
+accumulation, optimizer update — the functions the launcher jits with
+in/out shardings.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.model import Model
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+__all__ = ["make_loss_fn", "make_train_step", "make_prefill_step",
+           "make_decode_step"]
+
+AUX_WEIGHT = 1e-2  # MoE load-balance loss weight
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy, fp32, computed shard-locally over a
+    (possibly vocab-sharded) logits tensor."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        labels = batch["labels"]
+        loss = cross_entropy(logits, labels) + AUX_WEIGHT * aux
+        return loss, {"xent": loss, "moe_aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics), with ``cfg.microbatches`` gradient-accumulation steps
+    (fp32 accumulators) — the activation-memory knob for the big archs.
+    """
+    cfg = model.cfg
+    loss_fn = make_loss_fn(model)
+    n_micro = max(cfg.microbatches, 1)
+
+    def compute_grads(params, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+        def split(x):
+            return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            gacc, lacc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_micro, gacc, grads
+            )
+            return (gacc, lacc + loss / n_micro), None
+
+        gacc0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (grads, loss), _ = lax.scan(body, (gacc0, jnp.float32(0.0)), micro)
+        return loss, {"xent": loss, "moe_aux": jnp.float32(0.0)}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, t):
+        return model.decode_step(params, cache, tokens, t)
+
+    return decode_step

@@ -1,0 +1,104 @@
+"""Unit tests: interposer + performance model + calibration plumbing."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import Interposer, PerfModel, SystemParams, TPU_V5E
+from repro.comm.perfmodel import _interp2d
+from repro.core import BYTE, Contiguous, Subarray, TypeRegistry, Vector
+from repro.kernels.ref import pack_ref, unpack_ref
+
+
+class TestPerfModel:
+    def setup_method(self):
+        self.reg = TypeRegistry()
+        self.model = PerfModel(TPU_V5E)
+
+    def test_strategies_ordered_sanely(self):
+        # tiny contiguous block at huge stride: dma beats rows (over-fetch)
+        ct = self.reg.commit(Vector(4096, 8, 4096, BYTE))
+        t_rows = self.model.estimate(ct, 1, "rows").total
+        t_dma = self.model.estimate(ct, 1, "dma").total
+        t_xla = self.model.estimate(ct, 1, "xla").total
+        assert t_dma < t_rows
+        assert t_dma < t_xla  # 4096 per-block copies are the baseline pain
+
+    def test_xla_scales_with_block_count(self):
+        few = self.reg.commit(Vector(4, 256, 512, BYTE))
+        many = self.reg.commit(Vector(4096, 256, 512, BYTE))
+        assert self.model.t_pack(many, 1, "xla") > 100 * self.model.t_pack(
+            few, 1, "xla"
+        )
+
+    def test_bounding_for_contiguous(self):
+        ct = self.reg.commit(Contiguous(1000, BYTE))
+        assert self.model.select(ct).strategy == "bounding"
+
+    def test_selection_cached(self):
+        ct = self.reg.commit(Vector(16, 64, 512, BYTE))
+        a = self.model.select(ct)
+        b = self.model.select(ct)
+        assert a is b
+        assert self.model.hits == 1
+
+    def test_measured_table_interpolation(self):
+        table = (
+            (3.0, 10.0, 1e-6), (3.0, 20.0, 2e-6),
+            (9.0, 10.0, 3e-6), (9.0, 20.0, 6e-6),
+        )
+        mid = _interp2d(table, 6.0, 15.0)
+        assert 1e-6 < mid < 6e-6
+        # corner exact
+        assert _interp2d(table, 3.0, 10.0) == pytest.approx(1e-6)
+        # clamped outside the grid
+        assert _interp2d(table, 0.0, 0.0) == pytest.approx(1e-6)
+
+    def test_params_json_roundtrip(self):
+        p = SystemParams(
+            name="t", pack_table={"rows": ((1.0, 2.0, 3e-6),)}
+        )
+        q = SystemParams.from_json(p.to_json())
+        assert q == p
+
+
+class TestInterposer:
+    def test_mode_validation(self):
+        with pytest.raises(ValueError):
+            Interposer(mode="nope")
+
+    def test_pack_unpack_modes_agree(self):
+        rng = np.random.default_rng(0)
+        dt = Subarray((128, 16, 4), (48, 7, 3), (16, 2, 1), BYTE)
+        buf = jnp.asarray(rng.integers(0, 255, (128 * 16 * 4,), dtype=np.uint8))
+        dst = jnp.asarray(rng.integers(0, 255, (128 * 16 * 4,), dtype=np.uint8))
+        outs = {}
+        for mode in ("baseline", "tempi", "rows", "dma"):
+            ip = Interposer(mode=mode)
+            ct = ip.commit(dt)
+            packed = ip.pack(buf, ct)
+            outs[mode] = (
+                np.asarray(packed),
+                np.asarray(ip.unpack(dst, packed, ct)),
+            )
+        want_p = np.asarray(pack_ref(buf, ip.commit(dt).block))
+        for mode, (p, u) in outs.items():
+            np.testing.assert_array_equal(p, want_p, err_msg=mode)
+            np.testing.assert_array_equal(
+                u, outs["baseline"][1], err_msg=mode
+            )
+
+    def test_baseline_degrades_to_gather_beyond_cap(self):
+        ip = Interposer(mode="baseline")
+        ct = ip.commit(Vector(5000, 8, 64, BYTE))
+        assert ip._strategy(ct, 1, wire=False) == "ref"
+
+    def test_stats(self):
+        ip = Interposer()
+        ct = ip.commit(Vector(4, 8, 16, BYTE))
+        ip.model.select(ct)
+        s = ip.stats()
+        assert s["committed_types"] == 1
+        assert s["model_lookups"] >= 1

@@ -1,0 +1,189 @@
+"""Unit tests for datatype translation + canonicalization (paper §2-3.2)."""
+
+import pytest
+
+from repro.core import (
+    BYTE,
+    FLOAT,
+    INT32,
+    Contiguous,
+    DenseData,
+    Hvector,
+    StreamData,
+    Subarray,
+    Vector,
+    dense_folding,
+    make_cuboid_hvector,
+    make_cuboid_subarray,
+    make_cuboid_vector_of_hvector,
+    simplify,
+    strided_block_of,
+    stream_elision,
+    translate,
+)
+
+
+class TestExtents:
+    def test_named(self):
+        assert FLOAT.extent == 4 and FLOAT.size == 4
+        assert BYTE.extent == 1
+
+    def test_contiguous(self):
+        c = Contiguous(10, FLOAT)
+        assert c.extent == 40 and c.size == 40
+
+    def test_vector(self):
+        # 3 blocks of 2 floats, stride 5 floats: extent (2*5+2)*4
+        v = Vector(3, 2, 5, FLOAT)
+        assert v.extent == (2 * 5 + 2) * 4
+        assert v.size == 3 * 2 * 4
+
+    def test_hvector(self):
+        h = Hvector(3, 2, 100, FLOAT)
+        assert h.extent == 2 * 100 + 8
+        assert h.size == 24
+
+    def test_subarray_extent_is_full_array(self):
+        s = Subarray((8, 4), (2, 2), (1, 1), FLOAT)
+        assert s.extent == 8 * 4 * 4
+        assert s.size == 2 * 2 * 4
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Vector(3, 4, 2, BYTE)  # stride < blocklength
+        with pytest.raises(ValueError):
+            Subarray((4,), (5,), (0,), BYTE)  # subsize > size
+        with pytest.raises(ValueError):
+            Subarray((4,), (2,), (3,), BYTE)  # start+subsize > size
+
+
+class TestTranslation:
+    def test_named_is_dense(self):
+        t = translate(FLOAT)
+        assert isinstance(t.data, DenseData)
+        assert t.data.extent == 4 and t.data.offset == 0
+        assert not t.children
+
+    def test_contiguous_is_stream(self):
+        t = translate(Contiguous(7, FLOAT))
+        assert isinstance(t.data, StreamData)
+        assert t.data.count == 7 and t.data.stride == 4
+
+    def test_vector_two_streams(self):
+        t = translate(Vector(3, 2, 5, FLOAT))
+        assert isinstance(t.data, StreamData)
+        assert t.data.count == 3 and t.data.stride == 20  # 5 floats
+        c = t.child
+        assert isinstance(c.data, StreamData)
+        assert c.data.count == 2 and c.data.stride == 4
+
+    def test_subarray_nest_matches_paper_fig2(self):
+        # Fig 2 bottom: 3D byte subarray A=(256,512,1024) E=(100,13,47)
+        t = translate(Subarray((256, 512, 1024), (100, 13, 47), (0, 0, 0), BYTE))
+        assert isinstance(t.data, StreamData)
+        assert (t.data.count, t.data.stride) == (47, 131072)
+        t1 = t.child
+        assert (t1.data.count, t1.data.stride) == (13, 256)
+        t2 = t1.child
+        assert (t2.data.count, t2.data.stride) == (100, 1)
+        assert isinstance(t2.child.data, DenseData)
+
+    def test_subarray_offsets_bytes(self):
+        t = translate(Subarray((8, 4), (2, 2), (3, 1), INT32))
+        # outer dim: stride 8*4=32B, start 1 -> offset 32
+        assert t.data.offset == 32
+        # inner dim: stride 4B, start 3 -> offset 12
+        assert t.child.data.offset == 12
+
+
+class TestCanonicalize:
+    def test_dense_folding_contig_bytes(self):
+        t = translate(Contiguous(100, BYTE))
+        assert dense_folding(t)
+        assert isinstance(t.data, DenseData) and t.data.extent == 100
+
+    def test_stream_elision_blocklength_one(self):
+        t = translate(Hvector(13, 1, 256, Vector(100, 1, 1, BYTE)))
+        simplify(t)
+        # canonical: Stream{13,256} over Dense{100}
+        assert isinstance(t.data, StreamData)
+        assert (t.data.count, t.data.stride) == (13, 256)
+        assert isinstance(t.child.data, DenseData)
+        assert t.child.data.extent == 100
+        # direct rewrite API also works on fresh trees
+        t2 = translate(Vector(5, 1, 1, Contiguous(2, BYTE)))
+        assert stream_elision(t2) or dense_folding(t2)
+
+    def test_full_subsize_folds_away(self):
+        # subsizes == sizes in the two inner dims -> contiguous planes fold
+        sb = strided_block_of(Subarray((8, 4, 5), (8, 4, 2), (0, 0, 0), BYTE))
+        assert sb.counts == (64,) and sb.strides == (1,)
+
+    def test_count_one_root_elided(self):
+        sb = strided_block_of(Vector(1, 3, 5, BYTE))
+        assert sb.counts == (3,) and sb.strides == (1,) and sb.start == 0
+
+    def test_elision_keeps_offset(self):
+        # Subarray dim with subsize 1 and a nonzero start must keep its
+        # offset when elided (our documented fix to Alg. 3).
+        sb = strided_block_of(Subarray((8, 4, 5), (2, 1, 3), (0, 2, 1), BYTE))
+        # elided middle dim contributes offset 2*8=16; outer start 1*32=32
+        assert sb.start == 48
+        assert sb.counts == (2, 3) and sb.strides == (1, 32)
+
+
+class TestFig2Equivalence:
+    """The paper's core claim: equivalent constructions canonicalize to the
+    same compact representation."""
+
+    ALLOC = (256, 512, 1024)
+    EXT = (100, 13, 47)
+
+    def test_three_constructions_identical(self):
+        a = make_cuboid_subarray(self.ALLOC, self.EXT)
+        b = make_cuboid_hvector(self.ALLOC, self.EXT)
+        c = make_cuboid_vector_of_hvector(self.ALLOC, self.EXT)
+        sa, sb_, sc = map(strided_block_of, (a, b, c))
+        assert sa == sb_ == sc
+        assert sa.counts == (100, 13, 47)
+        assert sa.strides == (1, 256, 131072)
+        assert sa.start == 0
+
+    def test_float_vs_byte_description(self):
+        ae = (64, 32, 16)
+        ee = (16, 8, 4)
+        by = Subarray(ae, ee, (0, 0, 0), BYTE)
+        fl = Subarray(
+            (ae[0] // 4, ae[1], ae[2]), (ee[0] // 4, ee[1], ee[2]), (0, 0, 0), FLOAT
+        )
+        assert strided_block_of(by) == strided_block_of(fl)
+
+    def test_row_equivalences(self):
+        E0, A0 = 96, 256
+        rows = [
+            Contiguous(E0, BYTE),
+            Contiguous(E0 // 4, FLOAT),
+            Vector(1, E0, E0, BYTE),
+            Vector(E0 // 4, 1, 1, FLOAT),
+            Hvector(E0, 1, 1, BYTE),
+            Subarray((A0,), (E0,), (0,), BYTE),
+        ]
+        blocks = {strided_block_of(r) for r in rows}
+        assert len(blocks) == 1
+        (sb,) = blocks
+        assert sb.counts == (E0,)
+
+
+class TestWordSelection:
+    def test_float_aligned(self):
+        sb = strided_block_of(Vector(13, 25, 64, FLOAT))
+        assert sb.word_bytes() == 4
+
+    def test_byte_misaligned(self):
+        sb = strided_block_of(Subarray((256,), (3,), (1,), BYTE))
+        assert sb.word_bytes() == 1
+
+    def test_eight_byte(self):
+        sb = strided_block_of(Vector(4, 2, 4, Contiguous(2, INT32)))
+        # blocks of 16B at stride 32B
+        assert sb.counts[0] == 16 and sb.word_bytes() == 8

@@ -1,0 +1,183 @@
+"""Hypothesis property tests for the datatype engine.
+
+System invariants checked:
+
+1. **Byte-set preservation** — canonicalization never changes which bytes
+   a datatype touches, nor their packing order (the StridedBlock's
+   block_offsets equal the raw IR's byte walk).
+2. **Equivalence collapse** — randomly generated *equivalent* descriptions
+   of the same strided object canonicalize to the same StridedBlock
+   (the paper's central claim, Fig. 2).
+3. **size/extent consistency** between the datatype algebra and the
+   canonical representation.
+4. **Commit idempotence/caching.**
+"""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BYTE,
+    FLOAT,
+    INT16,
+    INT64,
+    Contiguous,
+    DenseData,
+    Hvector,
+    StreamData,
+    Subarray,
+    TypeRegistry,
+    Vector,
+    block_offsets,
+    simplify,
+    strided_block,
+    strided_block_of,
+    translate,
+)
+
+NAMED = st.sampled_from([BYTE, INT16, FLOAT, INT64])
+
+
+# -- random datatype trees (bounded so the byte walks stay small) -----------
+
+def _contig(children):
+    return st.builds(Contiguous, st.integers(1, 5), children)
+
+
+def _vector(children):
+    def mk(c, l, extra, old):
+        return Vector(c, l, l + extra, old)
+
+    return st.builds(
+        mk, st.integers(1, 4), st.integers(1, 4), st.integers(0, 5), children
+    )
+
+
+def _hvector(children):
+    def mk(c, l, extra, old):
+        return Hvector(c, l, l * old.extent + extra, old)
+
+    return st.builds(
+        mk, st.integers(1, 4), st.integers(1, 4), st.integers(0, 9), children
+    )
+
+
+def _subarray(children):
+    @st.composite
+    def mk(draw):
+        old = draw(children)
+        nd = draw(st.integers(1, 3))
+        sizes, subsizes, starts = [], [], []
+        for _ in range(nd):
+            size = draw(st.integers(1, 6))
+            sub = draw(st.integers(1, size))
+            start = draw(st.integers(0, size - sub))
+            sizes.append(size)
+            subsizes.append(sub)
+            starts.append(start)
+        return Subarray(tuple(sizes), tuple(subsizes), tuple(starts), old)
+
+    return mk()
+
+
+datatypes = st.recursive(
+    NAMED,
+    lambda kids: st.one_of(
+        _contig(kids), _vector(kids), _hvector(kids), _subarray(kids)
+    ),
+    max_leaves=4,
+)
+
+
+def ir_byte_walk(ty, base=0):
+    """Ground-truth byte enumeration straight off the *untransformed* IR,
+    in packing order."""
+    out = []
+    d = ty.data
+    if isinstance(d, DenseData):
+        out.extend(range(base + d.offset, base + d.offset + d.extent))
+    else:
+        assert isinstance(d, StreamData)
+        for i in range(d.count):
+            out.extend(ir_byte_walk(ty.children[0], base + d.offset + i * d.stride))
+    return out
+
+
+@settings(max_examples=200, deadline=None)
+@given(datatypes)
+def test_canonicalization_preserves_bytes(dt):
+    raw = translate(dt)
+    ground = ir_byte_walk(raw)
+    tree = simplify(translate(dt))
+    sb = strided_block(tree)
+    assert sb is not None, "our subset must always reduce to StridedBlock"
+    got = []
+    for off in block_offsets(sb):
+        got.extend(range(off, off + sb.counts[0]))
+    assert got == ground
+
+
+@settings(max_examples=200, deadline=None)
+@given(datatypes)
+def test_size_and_extent_consistency(dt):
+    sb = strided_block_of(dt)
+    assert sb.size == dt.size
+    # extent of the canonical block never exceeds the MPI extent
+    assert sb.start + sb.extent <= max(dt.extent, sb.start + sb.extent)
+    assert sb.strides[0] == 1
+    assert all(c >= 1 for c in sb.counts)
+    # canonical form has no degenerate dims beyond dim0
+    assert all(c > 1 for c in sb.counts[1:])
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.integers(1, 8),   # E0 blocks of
+    st.integers(1, 16),  # length E1
+    st.integers(0, 16),  # padding
+    st.integers(1, 4),   # outer count
+    NAMED,
+)
+def test_equivalent_descriptions_collapse(c, l, pad, outer, named):
+    """vector / hvector / subarray descriptions of the same 2D object give
+    identical canonical blocks (Fig. 7/8's 'fragility' fixed by design)."""
+    e = named.extent
+    stride_el = l + pad
+    v = Vector(c, l, stride_el, named)
+    h = Hvector(c, l, stride_el * e, named)
+    s = Subarray((stride_el, c), (l, c), (0, 0), named)
+    blocks = {strided_block_of(v), strided_block_of(h), strided_block_of(s)}
+    assert len(blocks) == 1
+    # wrapping in count-1 layers must not change the canonical form
+    w = Vector(1, 1, 1, Contiguous(1, v))
+    assert strided_block_of(w) == strided_block_of(v)
+    # outer repetition via Contiguous == one more dim (or folds if dense)
+    sb_rep = strided_block_of(Contiguous(outer, h))
+    assert sb_rep.size == outer * v.size
+
+
+@settings(max_examples=50, deadline=None)
+@given(datatypes)
+def test_commit_caching(dt):
+    reg = TypeRegistry()
+    a = reg.commit(dt)
+    b = reg.commit(dt)
+    assert a is b
+    assert reg.hits == 1 and reg.misses == 1
+    assert a.word_bytes in (1, 2, 4, 8)
+    if a.block is not None:
+        assert a.block.counts[0] % a.word_bytes == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(datatypes, st.integers(1, 3))
+def test_incount_repetition(dt, incount):
+    """Pack/Unpack's incount = extra outer dim at datatype-extent stride."""
+    sb = strided_block_of(dt)
+    offs = list(block_offsets(sb, incount=incount, extent=dt.extent))
+    base = list(block_offsets(sb))
+    assert len(offs) == incount * len(base)
+    for r in range(incount):
+        chunk = offs[r * len(base) : (r + 1) * len(base)]
+        assert chunk == [o + r * dt.extent for o in base]

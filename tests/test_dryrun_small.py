@@ -1,0 +1,53 @@
+"""Integration: the dry-run machinery on a small emulated mesh.
+
+Compiles one cell per family kind (dense train / moe train / ssm decode /
+swa long-decode / encdec prefill) on an 8-device (2x2x2) multi-pod mesh
+in a subprocess — the same code path as the 512-device production runs,
+shrunk for CI.
+"""
+
+import pytest
+
+from tests._subproc import run_with_devices
+
+CODE = r"""
+import jax
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import smoke_config
+from repro.distributed.sharding import DEFAULT_RULES, use_rules
+from repro.launch.mesh import make_test_mesh
+from repro.launch.dryrun import build_cell
+from repro.roofline.hlo_cost import parse_hlo_cost
+
+mesh = make_test_mesh(data=2, model=2, pod=2)
+
+cells = [
+    ("qwen2-0.5b", ShapeConfig("train", 64, 8, "train")),
+    ("mixtral-8x22b", ShapeConfig("train", 64, 8, "train")),
+    ("rwkv6-7b", ShapeConfig("decode", 64, 8, "decode")),
+    ("h2o-danube-1.8b", ShapeConfig("long", 128, 8, "long-decode")),
+    ("seamless-m4t-large-v2", ShapeConfig("prefill", 64, 8, "prefill")),
+    ("zamba2-2.7b", ShapeConfig("decode", 64, 8, "decode")),
+]
+
+for arch, shape in cells:
+    cfg = smoke_config(arch)
+    with use_rules(mesh, DEFAULT_RULES):
+        fn, args, shardings, donate = build_cell(cfg, shape, mesh, DEFAULT_RULES)
+        jfn = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = parse_hlo_cost(compiled.as_text())
+        assert cost.flops > 0, arch
+        print(f"{arch}/{shape.kind}: OK flops={cost.flops:.2e} "
+              f"coll={cost.coll_bytes:.2e}")
+print("DRYRUN_SMALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh():
+    out = run_with_devices(CODE, ndev=8, timeout=900)
+    assert "DRYRUN_SMALL_OK" in out
+    assert out.count("OK flops") == 6

@@ -1,0 +1,85 @@
+"""Unit tests for the logical-axis sharding rules."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    param_logical_axes,
+    param_partition_spec,
+)
+
+
+def fake_mesh():
+    """Axis-name-only stand-in (resolve only reads names + shape)."""
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+    return M()
+
+
+def fake_mesh_pod():
+    class M:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 4, "model": 2}
+    return M()
+
+
+class TestResolve:
+    def test_missing_axes_dropped(self):
+        m = fake_mesh()
+        assert DEFAULT_RULES.resolve("batch", m) == "data"  # pod absent
+        mp = fake_mesh_pod()
+        assert DEFAULT_RULES.resolve("batch", mp) == ("pod", "data")
+
+    def test_divisibility_fallback(self):
+        m = fake_mesh()
+        # batch of 1 cannot shard over data=4 -> replicated
+        assert DEFAULT_RULES.resolve("batch", m, dim=1) is None
+        assert DEFAULT_RULES.resolve("batch", m, dim=8) == "data"
+        # multi-axis: drop trailing axes until it divides
+        mp = fake_mesh_pod()
+        assert DEFAULT_RULES.resolve("batch", mp, dim=2) == "pod"
+
+    def test_none_logical(self):
+        assert DEFAULT_RULES.resolve(None, fake_mesh()) is None
+
+
+class TestParamRules:
+    def test_attention_weights(self):
+        assert param_logical_axes("layers/attn/wq", 2) == ("fsdp", "heads")
+        assert param_logical_axes("layers/attn/wo", 2) == ("heads", "fsdp")
+        # stacked leading layer dim replicated
+        assert param_logical_axes("layers/attn/wq", 3) == (None, "fsdp", "heads")
+
+    def test_norms_and_biases_replicated(self):
+        assert param_logical_axes("layers/attn/norm", 1) == (None,)
+        assert param_logical_axes("layers/attn/bias_q", 1) == (None,)
+        assert param_logical_axes("layers/rwkv/mu_r", 1) == (None,)
+        assert param_logical_axes("layers/rwkv/ln_x", 1) == (None,)
+
+    def test_moe_experts(self):
+        assert param_logical_axes("layers/moe/w_in", 4) == (
+            None, "expert", "fsdp", "d_ff")
+
+    def test_rwkv_channel_mix(self):
+        assert param_logical_axes("layers/rwkv/cv", 2) == ("d_ff", "fsdp")
+        assert param_logical_axes("layers/rwkv/wr", 2) == ("fsdp", "heads")
+
+    def test_embed_and_head(self):
+        assert param_logical_axes("embed/vocab", 2) == ("vocab", "fsdp")
+        assert param_logical_axes("lm_head", 2) == ("fsdp", "vocab")
+
+    def test_spec_respects_shape(self):
+        m = fake_mesh()
+        # kv-head projection whose out dim doesn't divide model axis
+        spec = param_partition_spec("layers/attn/wk", 2, DEFAULT_RULES, m,
+                                    shape=(64, 3))
+        assert spec == P(None, None)
+        spec2 = param_partition_spec("layers/attn/wk", 2, DEFAULT_RULES, m,
+                                     shape=(64, 4))
+        assert spec2 == P(None, "model")
