@@ -21,7 +21,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from repro.comm import Interposer
+from repro.compat import shard_map
+from repro.comm import Communicator, policy_for_mode
 from repro.halo import HaloSpec, halo_exchange, make_halo_types
 
 spec = HaloSpec(grid=(2, 2, 2), interior=(16, 16, 16), radius=2)
@@ -32,10 +33,10 @@ state0 = jnp.asarray(
     np.random.default_rng(0).normal(size=(R * az, ay, ax)).astype(np.float32))
 
 for mode in ("baseline", "tempi"):
-    ip = Interposer(mode=mode)
-    types = make_halo_types(spec, ip)
-    fn = jax.jit(jax.shard_map(
-        lambda x: halo_exchange(x, spec, ip, "ranks", types),
+    comm = Communicator(axis_name="ranks", policy=policy_for_mode(mode))
+    types = make_halo_types(spec, comm)
+    fn = jax.jit(shard_map(
+        lambda x: halo_exchange(x, spec, comm, "ranks", types),
         mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"),
         check_vma=False))
     out = fn(state0); jax.block_until_ready(out)
@@ -45,13 +46,14 @@ for mode in ("baseline", "tempi"):
         out = fn(out)
     jax.block_until_ready(out)
     us = (time.perf_counter() - t0) / iters * 1e6
-    print(f"fig12/exchange/{mode},{us:.2f},ranks=8;interior=16^3;r=2")
+    print(f"fig12/exchange/{mode},{us:.2f},"
+          f"ranks=8;interior=16^3;r=2;wire_ops={comm.stats()['wire_ops']}")
 
     # pack-only phase (one face datatype, 26x per iteration in exchange)
     from repro.halo.exchange import _region_type
-    ct = ip.commit(_region_type(spec, (0, 0, 1), "send"))
+    ct = comm.commit(_region_type(spec, (0, 0, 1), "send"))
     local = jnp.zeros((az, ay, ax), jnp.float32)
-    pfn = jax.jit(lambda b: ip.pack(b, ct))
+    pfn = jax.jit(lambda b: comm.pack(b, ct))
     o = pfn(local); jax.block_until_ready(o)
     t0 = time.perf_counter()
     for _ in range(10):

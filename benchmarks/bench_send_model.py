@@ -19,10 +19,13 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit, time_host_us
+from repro.comm import default_registry
+from repro.comm.api import ROWS
 from repro.comm.perfmodel import PerfModel, TPU_V5E
 from repro.core import BYTE, TypeRegistry, Vector
 
 REG = TypeRegistry()
+STRATEGIES = default_registry()
 PITCH = 512
 
 
@@ -34,30 +37,33 @@ def run() -> None:
         n = kib * 1024
         emit(f"fig9/link/{kib}KiB", model.t_link(n) * 1e6, "modeled_tpu")
 
-    # Fig. 10: pack/unpack per strategy over (size x block)
+    # Fig. 10: pack/unpack per registered kernel strategy over
+    # (size x block)
     for kib in (1, 64, 1024):
         for blk in (8, 32, 128, 512):
             count = max(kib * 1024 // blk, 1)
             ct = REG.commit(Vector(count, blk, max(PITCH, 2 * blk), BYTE))
-            for strat in ("rows", "dma", "xla"):
+            for strat in STRATEGIES.measurable():
                 emit(
-                    f"fig10/pack/{kib}KiB/blk{blk}/{strat}",
-                    model.t_pack(ct, 1, strat) * 1e6,
+                    f"fig10/pack/{kib}KiB/blk{blk}/{strat.name}",
+                    strat.model_pack(model, ct, 1) * 1e6,
                     "modeled_tpu",
                 )
             emit(
-                f"fig10/unpack/{kib}KiB/blk{blk}/rows",
-                model.t_unpack(ct, 1, "rows") * 1e6,
+                f"fig10/unpack/{kib}KiB/blk{blk}/{ROWS.name}",
+                ROWS.model_unpack(model, ct, 1) * 1e6,
                 "modeled_tpu",
             )
 
-    # Fig. 11: automatic selection quality + overhead
+    # Fig. 11: automatic selection quality + overhead over every
+    # applicable registered strategy
     for kib, blk in ((1, 8), (1, 512), (1024, 8), (1024, 512), (4096, 32)):
         count = max(kib * 1024 // blk, 1)
         ct = REG.commit(Vector(count, blk, max(PITCH, 2 * blk), BYTE))
         ests = {
-            s: model.estimate(ct, 1, s).total
-            for s in ("rows", "dma", "xla", "bounding")
+            s.name: s.plan(model, ct, 1).total
+            for s in STRATEGIES.selectable()
+            if s.applicable(ct)
         }
         pick = model.select(ct)
         best = min(ests.values())

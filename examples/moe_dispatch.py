@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.comm import Interposer
+from repro.compat import shard_map
+from repro.comm import BaselinePolicy, Communicator
 from repro.core import FLOAT, Subarray
 
 
@@ -40,8 +41,11 @@ def main():
     # canonical TEMPI case, vs. the expert-major layout where rows are
     # contiguous and packing is trivial.
     results = {}
-    for mode in ("baseline", "tempi"):
-        ip = Interposer(mode=mode)
+    comms = {
+        "baseline": Communicator(axis_name="expert", policy=BaselinePolicy()),
+        "tempi": Communicator(axis_name="expert"),
+    }
+    for mode, comm in comms.items():
         # datatype for "the capacity block destined to expert e":
         # subarray of the (E, cap, D) fp32 buffer selecting row e
         cts = []
@@ -52,15 +56,15 @@ def main():
                 starts=(0, e, 0),
                 oldtype=FLOAT,
             )
-            cts.append(ip.commit(dt))
-        strategies = {ip.model.select(c).strategy for c in cts}
+            cts.append(comm.commit(dt))
+        strategies = {comm.select(c, wire=False).name for c in cts}
 
         def dispatch(buf):
             # pack every expert's block, all_to_all, receive (E, seg)
-            return ip.all_to_all_packed(buf, cts, "expert")
+            return comm.all_to_all_packed(buf, cts)
 
         fn = jax.jit(
-            jax.shard_map(
+            shard_map(
                 dispatch, mesh=mesh,
                 in_specs=P("expert"), out_specs=P("expert"),
                 check_vma=False,
@@ -79,7 +83,7 @@ def main():
         dt_s = (time.perf_counter() - t0) / 3
         results[mode] = np.asarray(out)
         print(f"mode={mode:9s} committed={len(cts)} datatypes "
-              f"strategies={sorted(strategies) if mode=='tempi' else 'xla-blocks'} "
+              f"strategies={sorted(strategies)} "
               f"dispatch time={dt_s*1e3:.1f}ms")
 
     np.testing.assert_array_equal(results["baseline"], results["tempi"])

@@ -22,7 +22,7 @@ from repro.core import (
     make_cuboid_vector_of_hvector,
     strided_block_of,
 )
-from repro.comm import Interposer
+from repro.comm import Communicator
 from repro.kernels import pack, unpack
 
 
@@ -48,25 +48,27 @@ def main():
     packed = pack(buf, ct)                      # TEMPI kernels
     print(f"  packed {packed.shape[0]} bytes from a {buf.shape[0]}-byte buffer")
     restored = unpack(jnp.zeros_like(buf), packed, ct)
-    ref = pack(buf, ct, strategy="ref")
+    from repro.comm.api import REF
+    ref = pack(buf, ct, strategy=REF)
     assert (np.asarray(packed) == np.asarray(ref)).all()
     print("  kernel output == gather oracle: OK")
 
     print("\n=== 4. performance-model strategy selection (paper §5) ===")
-    ip = Interposer(mode="tempi")
+    comm = Communicator()
     from repro.core import Subarray, Vector
     cases = {
         "large, tiny blocks": Vector(4096, 16, 512, BYTE),
         "small, dense": Subarray((64, 4), (60, 4), (0, 0), BYTE),
         "contiguous": Subarray((4096,), (4096,), (0,), BYTE),
     }
+    print(f"  registered strategies: {', '.join(comm.strategies.names())}")
     for name, dt in cases.items():
-        c = ip.commit(dt)
-        est = ip.model.select(c)
+        c = comm.commit(dt)
+        est = comm.model.select(c, registry=comm.strategies)
         print(f"  {name:20s} -> {est.strategy:9s} "
               f"(pack {est.t_pack*1e6:6.1f}us + link {est.t_link*1e6:6.1f}us "
               f"+ unpack {est.t_unpack*1e6:6.1f}us)")
-    print(f"  model cache: {ip.model.hits}/{ip.model.lookups} hits "
+    print(f"  model cache: {comm.model.hits}/{comm.model.lookups} hits "
           "(repeat selections are dictionary lookups, paper §6.3)")
 
 

@@ -1,7 +1,47 @@
-"""repro.comm — the TEMPI interposer layer: datatype-aware collectives,
-performance-model strategy selection, and system calibration."""
+"""repro.comm — the TEMPI communication layer: the Communicator API with
+pluggable datatype strategies, performance-model selection, fused
+neighborhood collectives, system calibration, and the deprecated
+string-mode Interposer shim."""
 
+from repro.comm.api import (
+    BaselinePolicy,
+    Communicator,
+    FixedPolicy,
+    ModelPolicy,
+    MODES,
+    Policy,
+    Request,
+    SendRequest,
+    Strategy,
+    StrategyRegistry,
+    as_communicator,
+    default_registry,
+    policy_for_mode,
+    register_strategy,
+    resolve_strategy,
+)
 from repro.comm.interposer import Interposer
 from repro.comm.perfmodel import PerfModel, StrategyEstimate, SystemParams, TPU_V5E
 
-__all__ = ["Interposer", "PerfModel", "StrategyEstimate", "SystemParams", "TPU_V5E"]
+__all__ = [
+    "BaselinePolicy",
+    "Communicator",
+    "FixedPolicy",
+    "Interposer",
+    "MODES",
+    "ModelPolicy",
+    "PerfModel",
+    "Policy",
+    "Request",
+    "SendRequest",
+    "Strategy",
+    "StrategyEstimate",
+    "StrategyRegistry",
+    "SystemParams",
+    "TPU_V5E",
+    "as_communicator",
+    "default_registry",
+    "policy_for_mode",
+    "register_strategy",
+    "resolve_strategy",
+]

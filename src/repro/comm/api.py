@@ -1,0 +1,997 @@
+"""The Communicator API: pluggable datatype strategies, request-based
+nonblocking transfers, and fused neighborhood collectives.
+
+This module is the *single* home of every strategy and mode name in the
+system.  TEMPI's central claim is that an interposed layer can pick the
+best datatype-handling implementation per call site; the seam that makes
+that claim extensible is a registry of :class:`Strategy` plugins rather
+than string comparisons scattered through the runtime:
+
+* a :class:`Strategy` bundles the §5 cost model terms (``model_pack`` /
+  ``model_unpack`` / ``wire_bytes`` -> :meth:`Strategy.plan`) with the
+  execution paths (``pack`` / ``unpack`` / ``unpack_wire`` and the
+  per-repetition ``pack_leaf`` / ``unpack_leaf`` kernels used by
+  ``repro.kernels.ops``);
+* a :class:`StrategyRegistry` holds the installed strategies; the
+  :class:`~repro.comm.perfmodel.PerfModel` selects among *whatever is
+  registered* — the paper's "one-shot" analogue (:class:`Bounding`) is
+  an ordinary plugin, not a special case hardwired in ``sendrecv``;
+* a :class:`Communicator` binds a mesh axis + :class:`SystemParams` and
+  exposes MPI-shaped entry points: ``commit``, ``pack``/``unpack``,
+  request-based ``isend``/``irecv`` (the wire op is issued eagerly so
+  XLA can overlap independent exchanges; :meth:`Request.wait`
+  materializes the unpack), and a fused
+  :meth:`Communicator.neighbor_alltoallv` — the paper's actual
+  ``MPI_Alltoallv`` halo transport — that packs every region into one
+  buffer with a host-computed offset table and issues a **single**
+  collective.
+
+``repro.comm.interposer.Interposer`` remains as a thin deprecated shim
+over :class:`Communicator` (mode strings map to :class:`Policy` objects
+via :func:`policy_for_mode`).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.commit import CommittedType, TypeRegistry
+from repro.core.datatypes import Datatype
+from repro.core.strided_block import StridedBlock
+from repro.kernels import ops
+from repro.kernels import ref as refk
+from repro.kernels.geometry import (
+    VMEM_BUDGET_BYTES,
+    PackGeometry,
+    plan_geometry,
+)
+from repro.kernels.pack import pack_dma, pack_rows
+from repro.kernels.unpack import unpack_dma, unpack_rows
+from repro.comm.perfmodel import (
+    PerfModel,
+    StrategyEstimate,
+    SystemParams,
+    TPU_V5E,
+)
+
+__all__ = [
+    "Strategy",
+    "StrategyRegistry",
+    "default_registry",
+    "register_strategy",
+    "resolve_strategy",
+    "static_choice",
+    "Policy",
+    "ModelPolicy",
+    "BaselinePolicy",
+    "FixedPolicy",
+    "policy_for_mode",
+    "MODES",
+    "Request",
+    "SendRequest",
+    "Communicator",
+    "as_communicator",
+]
+
+StrategyLike = Union[str, "Strategy", None]
+
+#: baseline per-block copy emulation explodes HLO size past this many
+#: blocks; beyond it the baseline degrades to the gather path (still a
+#: fair stand-in: the real baselines issue that many cudaMemcpyAsyncs)
+BASELINE_BLOCK_CAP = 1024
+
+
+# ===========================================================================
+# Strategy protocol
+# ===========================================================================
+
+class Strategy:
+    """One way to move a committed datatype: cost model + execution.
+
+    Subclass and :func:`register_strategy` (or register on a private
+    :class:`StrategyRegistry`) to add a transfer strategy; the
+    performance model then selects it whenever it wins.  Override points:
+
+    ``applicable``    can this strategy handle the type at all?
+    ``model_pack`` /  the §5 cost terms (seconds); ``plan`` assembles the
+    ``model_unpack``  full T = T_pack + T_link + T_unpack estimate
+    ``wire_bytes``    bytes this strategy puts on the wire
+    ``pack``          produce the wire payload from the user buffer
+    ``unpack``        scatter *packed member bytes* into the buffer
+    ``unpack_wire``   consume the wire payload (differs from ``unpack``
+                      only when the wire format isn't the packed bytes,
+                      e.g. :class:`Bounding`'s contiguous window)
+    ``pack_leaf`` /   per-repetition 2D/3D kernel dispatch used by
+    ``unpack_leaf``   ``repro.kernels.ops`` once geometry is planned
+    """
+
+    name: str = "abstract"
+    #: only meaningful when bytes cross the wire (no local pack/unpack)
+    wire_only: bool = False
+    #: participates in automatic PerfModel selection
+    selectable: bool = True
+    #: calibration sweep cap on block count (None = unbounded)
+    calibration_cap: Optional[int] = None
+
+    # -- applicability ----------------------------------------------------
+    def applicable(self, ct: CommittedType) -> bool:
+        return True
+
+    # -- §5 cost model ----------------------------------------------------
+    def model_pack(self, model: PerfModel, ct: CommittedType, incount: int) -> float:
+        raise NotImplementedError
+
+    def model_unpack(self, model: PerfModel, ct: CommittedType, incount: int) -> float:
+        # unpack is slower: strided writes (paper §6.3 observes the same
+        # pack/unpack asymmetry)
+        return 1.5 * self.model_pack(model, ct, incount)
+
+    def wire_bytes(self, ct: CommittedType, incount: int = 1) -> int:
+        return ct.size * incount
+
+    def plan(
+        self, model: PerfModel, ct: CommittedType, incount: int, hops: int = 1
+    ) -> StrategyEstimate:
+        """Full strategy estimate (paper Eqs. 1-3 analogue)."""
+        return StrategyEstimate(
+            self.name,
+            self.model_pack(model, ct, incount),
+            model.t_link(self.wire_bytes(ct, incount), hops),
+            self.model_unpack(model, ct, incount),
+        )
+
+    # -- execution --------------------------------------------------------
+    def pack(
+        self,
+        buf: jax.Array,
+        ct: CommittedType,
+        incount: int = 1,
+        interpret: Optional[bool] = None,
+    ) -> jax.Array:
+        return ops.pack(buf, ct, incount=incount, strategy=self, interpret=interpret)
+
+    def unpack(
+        self,
+        buf: jax.Array,
+        packed: jax.Array,
+        ct: CommittedType,
+        incount: int = 1,
+        interpret: Optional[bool] = None,
+    ) -> jax.Array:
+        return ops.unpack(
+            buf, packed, ct, incount=incount, strategy=self, interpret=interpret
+        )
+
+    def unpack_wire(
+        self,
+        comm: "Communicator",
+        dst: jax.Array,
+        wire: jax.Array,
+        recv_ct: CommittedType,
+        send_ct: Optional[CommittedType] = None,
+        incount: int = 1,
+    ) -> jax.Array:
+        """Consume received wire bytes.  Default: the wire carries packed
+        member bytes; scatter them with the strategy the communicator
+        selects for the receive type."""
+        u = comm.select(recv_ct, incount, wire=False)
+        return u.unpack(dst, wire, recv_ct, incount)
+
+    # -- per-repetition kernel dispatch (called from repro.kernels.ops) ---
+    def pack_leaf(
+        self,
+        b: jax.Array,
+        sb: StridedBlock,
+        geom: Optional[PackGeometry],
+        interpret: bool,
+    ) -> jax.Array:
+        raise TypeError(f"strategy {self.name!r} has no local pack kernel")
+
+    def unpack_leaf(
+        self,
+        b: jax.Array,
+        packed: jax.Array,
+        sb: StridedBlock,
+        geom: Optional[PackGeometry],
+        interpret: bool,
+    ) -> jax.Array:
+        raise TypeError(f"strategy {self.name!r} has no local unpack kernel")
+
+    # ---------------------------------------------------------------------
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<Strategy {self.name}>"
+
+
+def _analytic_prologue(model, strategy, ct, incount):
+    """Shared cost-model prologue: generic-type fallback and measured
+    pack-table lookup.  Returns (params, size, block, measured|None)."""
+    p = model.params
+    size = ct.size * incount
+    sb = ct.block
+    if sb is None:
+        return p, size, None, p.kernel_launch + 2 * size / p.hbm_bw
+    return p, size, sb, model.measured(strategy.name, sb.counts[0], size)
+
+
+class Rows(Strategy):
+    """Pitched row kernel, then one contiguous collective ≙ the paper's
+    "device" method: Pallas double-buffers full-pitch row groups."""
+
+    name = "rows"
+
+    def applicable(self, ct: CommittedType) -> bool:
+        return ct.block is not None and plan_geometry(ct.block) is not None
+
+    def model_pack(self, model, ct, incount):
+        p, size, sb, m = _analytic_prologue(model, self, ct, incount)
+        if sb is None or m is not None:
+            return m
+        geom = plan_geometry(sb)
+        over = geom.overfetch if geom else 1.0
+        touched = size * over + size  # pitched read + contiguous write
+        return p.kernel_launch + touched / p.hbm_bw
+
+    def pack_leaf(self, b, sb, geom, interpret):
+        if geom is None:
+            return refk.pack_ref(b, sb)
+        return ops.run_pack_kernel(b, geom, pack_rows, interpret)
+
+    def unpack_leaf(self, b, packed, sb, geom, interpret):
+        if geom is None:
+            return refk.unpack_ref(b, packed, sb)
+        if geom.planes > 1 and geom.plane_rows < geom.rows:
+            # interleaved planes: row read-modify-write would lose
+            # updates; use the windowed DMA kernel instead
+            kernel = _dma_unpack_kernel
+        else:
+            kernel = unpack_rows
+        return ops.run_unpack_kernel(b, packed, geom, kernel, interpret)
+
+
+def _dma_pack_kernel(src2d, geom, interpret=False):
+    return pack_dma(src2d, geom, VMEM_BUDGET_BYTES, interpret=interpret)
+
+
+def _dma_unpack_kernel(dst2d, pk3, geom, interpret=False):
+    return unpack_dma(dst2d, pk3, geom, VMEM_BUDGET_BYTES, interpret)
+
+
+class Dma(Strategy):
+    """Strided-descriptor DMA kernel ≙ the paper's "staged" method: one
+    DMA per row-chunk, no pitch over-fetch."""
+
+    name = "dma"
+
+    def applicable(self, ct: CommittedType) -> bool:
+        return ct.block is not None and plan_geometry(ct.block) is not None
+
+    def model_pack(self, model, ct, incount):
+        p, size, sb, m = _analytic_prologue(model, self, ct, incount)
+        if sb is None or m is not None:
+            return m
+        nblocks = sb.num_blocks * incount
+        chunks = max(nblocks // 128, 1)  # descriptors per ~128-row chunk
+        return p.kernel_launch + chunks * p.dma_setup + 2 * size / p.hbm_bw
+
+    def pack_leaf(self, b, sb, geom, interpret):
+        if geom is None:
+            return refk.pack_ref(b, sb)
+        return ops.run_pack_kernel(b, geom, _dma_pack_kernel, interpret)
+
+    def unpack_leaf(self, b, packed, sb, geom, interpret):
+        if geom is None:
+            return refk.unpack_ref(b, packed, sb)
+        return ops.run_unpack_kernel(b, packed, geom, _dma_unpack_kernel, interpret)
+
+
+class XlaBlocks(Strategy):
+    """Per-block XLA copies into a contiguous buffer — the naive
+    CUDA-aware-MPI baseline every implementation shares."""
+
+    name = "xla"
+    calibration_cap = 512  # unrolled per-block HLO blows up past this
+
+    def model_pack(self, model, ct, incount):
+        p, size, sb, m = _analytic_prologue(model, self, ct, incount)
+        if sb is None or m is not None:
+            return m
+        nblocks = sb.num_blocks * incount
+        return nblocks * p.xla_copy_overhead + 2 * size / p.hbm_bw
+
+    def pack_leaf(self, b, sb, geom, interpret):
+        if geom is None:
+            return refk.pack_ref(b, sb)
+        return refk.pack_xla_blocks(b, sb)
+
+    def unpack_leaf(self, b, packed, sb, geom, interpret):
+        if geom is None:
+            return refk.unpack_ref(b, packed, sb)
+        return refk.unpack_xla_blocks(b, packed, sb)
+
+
+class Gather(Strategy):
+    """Oracle gather/scatter fallback (offset-list walk).  Correct for
+    every type; never auto-selected."""
+
+    name = "ref"
+    selectable = False
+
+    def model_pack(self, model, ct, incount):
+        # modeled like the per-block baseline: a gather touches every
+        # block individually
+        p, size, sb, m = _analytic_prologue(model, self, ct, incount)
+        if sb is None or m is not None:
+            return m
+        return sb.num_blocks * incount * p.xla_copy_overhead + 2 * size / p.hbm_bw
+
+    def pack_leaf(self, b, sb, geom, interpret):
+        return refk.pack_ref(b, sb)
+
+    def unpack_leaf(self, b, packed, sb, geom, interpret):
+        return refk.unpack_ref(b, packed, sb)
+
+
+class Auto(Strategy):
+    """Static geometry heuristic used when no calibrated model drives the
+    choice: the pitched row kernel wins while its over-fetch stays
+    moderate (automatic double-buffering); the strided-DMA kernel wins
+    for small blocks at large pitches.  Not a modeled strategy — it
+    defers to :func:`static_choice` per leaf."""
+
+    name = "auto"
+    selectable = False
+
+    def model_pack(self, model, ct, incount):
+        geom = plan_geometry(ct.block) if ct.block is not None else None
+        return static_choice(geom).model_pack(model, ct, incount)
+
+    def pack_leaf(self, b, sb, geom, interpret):
+        return static_choice(geom).pack_leaf(b, sb, geom, interpret)
+
+    def unpack_leaf(self, b, packed, sb, geom, interpret):
+        return static_choice(geom).unpack_leaf(b, packed, sb, geom, interpret)
+
+
+class Bounding(Strategy):
+    """The paper's "one-shot" analogue: ship the contiguous bounding
+    window of the object with no sender-side pack at all; the receiver
+    extracts the member bytes.  Wins when the object is dense in its
+    extent — zero staging, pays over-transfer instead of pack cost."""
+
+    name = "bounding"
+    wire_only = True
+
+    def applicable(self, ct: CommittedType) -> bool:
+        return ct.block is not None
+
+    def model_pack(self, model, ct, incount):
+        return 0.0  # no pack at all
+
+    def model_unpack(self, model, ct, incount):
+        return 0.0  # extraction is priced in plan(), not here
+
+    def wire_bytes(self, ct, incount=1):
+        sb = ct.block
+        if sb is None:
+            return ct.extent * incount
+        return sb.extent + (incount - 1) * ct.extent
+
+    def plan(self, model, ct, incount, hops=1):
+        sb = ct.block
+        if sb is not None and sb.size == sb.extent:
+            t_extract = 0.0  # fully dense: the wire bytes ARE the data
+        else:
+            # receiver must extract the member bytes from the bounding
+            # window and splice them into the destination (two kernels)
+            t_extract = ROWS.model_pack(model, ct, incount) + ROWS.model_unpack(
+                model, ct, incount
+            )
+        return StrategyEstimate(
+            self.name, 0.0, model.t_link(self.wire_bytes(ct, incount), hops),
+            t_extract,
+        )
+
+    def pack(self, buf, ct, incount=1, interpret=None):
+        sb = ct.block
+        if sb is None:
+            raise ValueError(f"{self.name} needs a strided block")
+        ext = self.wire_bytes(ct, incount)
+        return lax.dynamic_slice(ops.byte_view(buf), (sb.start,), (ext,))
+
+    def unpack_wire(self, comm, dst, wire, recv_ct, send_ct=None, incount=1):
+        # extract member bytes from the received window: same geometry as
+        # the send type, rebased to start 0
+        send_ct = send_ct or recv_ct
+        sb = send_ct.block
+        rb = StridedBlock(0, sb.counts, sb.strides)
+        if incount > 1:
+            parts = [
+                ops.pack_block(
+                    lax.dynamic_slice(
+                        wire, (r * send_ct.extent,), (sb.extent,)
+                    ),
+                    rb,
+                )
+                for r in range(incount)
+            ]
+            packed = jnp.concatenate(parts)
+        else:
+            packed = ops.pack_block(wire, rb)
+        u = comm.select(recv_ct, incount, wire=False)
+        return u.unpack(dst, packed, recv_ct, incount)
+
+    def unpack(self, buf, packed, ct, incount=1, interpret=None):
+        raise TypeError(
+            f"{self.name} has no local unpack; use unpack_wire on the "
+            "received window"
+        )
+
+
+# ===========================================================================
+# registry
+# ===========================================================================
+
+class StrategyRegistry:
+    """Installed strategies, by name.  The default registry carries the
+    paper's menu; register plugins here (or on a copy, for isolated
+    experiments) and the model immediately selects among them."""
+
+    def __init__(self, strategies: Sequence[Strategy] = ()):
+        self._by_name: Dict[str, Strategy] = {}
+        self._version = 0  # bumped on mutation; invalidates model caches
+        for s in strategies:
+            self.register(s)
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def register(self, strategy: Union[Strategy, type]) -> Strategy:
+        if isinstance(strategy, type):
+            strategy = strategy()
+        if not strategy.name or strategy.name == Strategy.name:
+            raise ValueError("strategy needs a distinct .name")
+        if strategy.name in self._by_name:
+            raise ValueError(f"strategy {strategy.name!r} already registered")
+        self._by_name[strategy.name] = strategy
+        self._version += 1
+        return strategy
+
+    def get(self, name: StrategyLike) -> Strategy:
+        if isinstance(name, Strategy):
+            return name
+        if name is None:
+            name = Auto.name
+        s = self._by_name.get(name)
+        if s is None:
+            raise ValueError(
+                f"unknown strategy {name!r}; registered: {self.names()}"
+            )
+        return s
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._by_name)
+
+    def selectable(self) -> Tuple[Strategy, ...]:
+        return tuple(s for s in self._by_name.values() if s.selectable)
+
+    def measurable(self) -> Tuple[Strategy, ...]:
+        """Strategies with a real pack kernel worth calibrating."""
+        return tuple(
+            s for s in self._by_name.values() if s.selectable and not s.wire_only
+        )
+
+    def copy(self) -> "StrategyRegistry":
+        return StrategyRegistry(tuple(self._by_name.values()))
+
+    def __iter__(self):
+        return iter(self._by_name.values())
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._by_name
+
+    def __len__(self) -> int:
+        return len(self._by_name)
+
+
+ROWS = Rows()
+DMA = Dma()
+XLA = XlaBlocks()
+REF = Gather()
+AUTO = Auto()
+BOUNDING = Bounding()
+
+_DEFAULT_REGISTRY = StrategyRegistry((ROWS, DMA, XLA, REF, AUTO, BOUNDING))
+
+
+def default_registry() -> StrategyRegistry:
+    """The process-global strategy registry."""
+    return _DEFAULT_REGISTRY
+
+
+def register_strategy(strategy: Union[Strategy, type]) -> Strategy:
+    """Install a strategy plugin into the default registry."""
+    return _DEFAULT_REGISTRY.register(strategy)
+
+
+def resolve_strategy(
+    strategy: StrategyLike, registry: Optional[StrategyRegistry] = None
+) -> Strategy:
+    """Name -> Strategy (None resolves to the static-auto strategy)."""
+    return (registry or _DEFAULT_REGISTRY).get(strategy)
+
+
+def static_choice(geom: Optional[PackGeometry]) -> Strategy:
+    """Geometry-only kernel choice used by :class:`Auto` (the calibrated
+    model refines this crossover, as the paper's model picks one-shot vs
+    device)."""
+    if geom is None:
+        return REF
+    return ROWS if geom.overfetch <= 4.0 else DMA
+
+
+# ===========================================================================
+# policies (strategy-selection behaviours; the old Interposer "modes")
+# ===========================================================================
+
+class Policy:
+    """Decides the strategy per (committed type, incount, wire?) call."""
+
+    def select(
+        self, comm: "Communicator", ct: CommittedType, incount: int, wire: bool
+    ) -> Strategy:
+        raise NotImplementedError
+
+
+class ModelPolicy(Policy):
+    """Performance-model selection over the registered strategies (§5) —
+    the paper's TEMPI behaviour."""
+
+    def select(self, comm, ct, incount, wire):
+        est = comm.model.select(
+            ct, incount, allow_bounding=wire, registry=comm.strategies
+        )
+        return comm.strategies.get(est.strategy)
+
+
+class BaselinePolicy(Policy):
+    """Naive per-block copies (emulating the datatype handling every
+    CUDA-aware MPI shares), degrading to the gather path past the HLO
+    block cap."""
+
+    def __init__(self, block_cap: int = BASELINE_BLOCK_CAP):
+        self.block_cap = block_cap
+
+    def select(self, comm, ct, incount, wire):
+        if ct.block is not None and ct.block.num_blocks * incount > self.block_cap:
+            return comm.strategies.get(REF.name)
+        return comm.strategies.get(XLA.name)
+
+
+class FixedPolicy(Policy):
+    """Force one strategy for experiments.  Wire-only strategies (e.g.
+    bounding) cannot serve local pack/unpack calls; those fall back to
+    the static-auto heuristic so ``unpack``/``sendrecv`` keep working."""
+
+    def __init__(self, strategy: StrategyLike):
+        self.strategy = resolve_strategy(strategy)
+
+    def select(self, comm, ct, incount, wire):
+        s = comm.strategies.get(self.strategy)
+        if s.wire_only and not wire:
+            return comm.strategies.get(AUTO.name)
+        return s
+
+
+#: legacy Interposer mode names (kept for the shim + CLI flags)
+MODES = ("baseline", "tempi", Rows.name, Dma.name, XlaBlocks.name, Gather.name)
+
+
+def policy_for_mode(mode: str) -> Policy:
+    """Map a legacy mode string to a Policy (ValueError on unknown)."""
+    if mode == "baseline":
+        return BaselinePolicy()
+    if mode == "tempi":
+        return ModelPolicy()
+    if mode in MODES:
+        return FixedPolicy(mode)
+    raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+
+
+# ===========================================================================
+# requests (nonblocking semantics)
+# ===========================================================================
+
+_PENDING = object()
+
+
+class Request:
+    """Handle to a pending communication.  The wire transport is issued
+    when the request is created (so XLA is free to overlap independent
+    exchanges); :meth:`wait` materializes the receive-side unpack."""
+
+    def __init__(self, thunk: Optional[Callable[[], jax.Array]] = None,
+                 value: jax.Array = _PENDING):
+        self._thunk = thunk
+        self._value = value
+
+    @property
+    def completed(self) -> bool:
+        return self._value is not _PENDING
+
+    def wait(self) -> jax.Array:
+        if self._value is _PENDING:
+            self._value = self._thunk()
+            self._thunk = None
+        return self._value
+
+
+class SendRequest(Request):
+    """An issued wire transfer: holds the (traced) received payload plus
+    the metadata ``irecv`` needs to unpack it."""
+
+    def __init__(self, wire: jax.Array, strategy: Strategy,
+                 send_ct: CommittedType, incount: int):
+        super().__init__(value=wire)
+        self.strategy = strategy
+        self.send_ct = send_ct
+        self.incount = incount
+
+
+# ===========================================================================
+# fused neighborhood alltoallv planning (host-side, cached)
+# ===========================================================================
+
+@dataclass(frozen=True)
+class NeighborPlan:
+    """Host-computed layout of a fused neighborhood exchange.
+
+    Transfers whose destination is the same rank *for every rank* (the
+    periodic-grid delta classes of a halo exchange) share one wire
+    segment; when each rank's group->peer map is injective the whole
+    exchange is ONE ``all_to_all`` over destination-ordered rows
+    (``fused``); otherwise it degrades to one ``ppermute`` per group —
+    still far fewer wire ops than one per transfer.
+    """
+
+    nranks: int
+    groups: Tuple[Tuple[int, ...], ...]          # transfer ids per group
+    offsets: Tuple[Tuple[int, ...], ...]         # byte offset per transfer
+    seg_bytes: int                               # padded row size
+    fused: bool
+    send_rows: Tuple[Tuple[int, ...], ...]       # [rank][dest] -> group|G
+    recv_rows: Tuple[Tuple[int, ...], ...]       # [rank][group] -> source
+
+
+@functools.lru_cache(maxsize=256)
+def plan_neighbor_alltoallv(
+    sizes: Tuple[int, ...],
+    perms: Tuple[Tuple[Tuple[int, int], ...], ...],
+) -> NeighborPlan:
+    """Group ``len(sizes)`` transfers (one perm each) into a fused wire
+    layout.  Every perm must be a full permutation of the same rank set."""
+    n = len(perms)
+    ranks = sorted({s for p in perms for s, _ in p})
+    nranks = len(ranks)
+    if ranks != list(range(nranks)):
+        raise ValueError("perms must cover ranks 0..R-1")
+    dst: List[Dict[int, int]] = []
+    src: List[Dict[int, int]] = []
+    for i, p in enumerate(perms):
+        d = dict(p)
+        if sorted(d) != ranks or sorted(d.values()) != ranks:
+            raise ValueError(f"perm {i} is not a permutation of the ranks")
+        dst.append(d)
+        src.append({v: k for k, v in d.items()})
+
+    # group transfers by their full destination vector (rank-uniform)
+    key_to_group: Dict[Tuple[int, ...], int] = {}
+    groups: List[List[int]] = []
+    for i in range(n):
+        key = tuple(dst[i][r] for r in range(nranks))
+        g = key_to_group.setdefault(key, len(groups))
+        if g == len(groups):
+            groups.append([])
+        groups[g].append(i)
+    ngroups = len(groups)
+
+    offsets, totals = [], []
+    for members in groups:
+        offs, acc = [], 0
+        for i in members:
+            offs.append(acc)
+            acc += sizes[i]
+        offsets.append(tuple(offs))
+        totals.append(acc)
+    seg = max(totals) if totals else 0
+
+    # per-rank tables
+    send_rows, recv_rows = [], []
+    fused = ngroups <= nranks
+    for r in range(nranks):
+        dests = [dst[members[0]][r] for members in groups]
+        if len(set(dests)) != ngroups:
+            fused = False
+        row = [ngroups] * nranks  # ngroups = the zero dummy row
+        for g, d in enumerate(dests):
+            row[d] = g
+        send_rows.append(tuple(row))
+        recv_rows.append(tuple(src[members[0]][r] for members in groups))
+
+    return NeighborPlan(
+        nranks=nranks,
+        groups=tuple(tuple(m) for m in groups),
+        offsets=tuple(offsets),
+        seg_bytes=seg,
+        fused=fused,
+        send_rows=tuple(send_rows),
+        recv_rows=tuple(recv_rows),
+    )
+
+
+# ===========================================================================
+# the Communicator
+# ===========================================================================
+
+class Communicator:
+    """Datatype-aware communication endpoint bound to a mesh axis.
+
+    Parameters
+    ----------
+    axis_name: default mesh axis for the collective entry points (each
+        accepts a per-call override).
+    params: system parameter table for the performance model.
+    registry: datatype commit cache (``MPI_Type_commit`` analogue).
+    strategies: strategy registry; defaults to the process-global one.
+    policy: strategy-selection behaviour; defaults to model selection.
+    """
+
+    def __init__(
+        self,
+        axis_name: Optional[str] = None,
+        params: SystemParams = TPU_V5E,
+        registry: Optional[TypeRegistry] = None,
+        strategies: Optional[StrategyRegistry] = None,
+        policy: Optional[Policy] = None,
+    ):
+        self.axis_name = axis_name
+        self.registry = registry or TypeRegistry()
+        self.strategies = strategies or default_registry()
+        self.model = PerfModel(params)
+        self.policy = policy or ModelPolicy()
+        self.wire_ops = 0  # collectives issued through this communicator
+
+    # ------------------------------------------------------------------
+    def _axis(self, axis_name: Optional[str]) -> str:
+        axis = axis_name or self.axis_name
+        if axis is None:
+            raise ValueError(
+                "no axis_name: bind one at construction or pass it per call"
+            )
+        return axis
+
+    # ------------------------------------------------------------------
+    # commit (MPI_Type_commit)
+    # ------------------------------------------------------------------
+    def commit(self, dt: Datatype) -> CommittedType:
+        return self.registry.commit(dt)
+
+    # ------------------------------------------------------------------
+    # strategy selection
+    # ------------------------------------------------------------------
+    def select(
+        self, ct: CommittedType, incount: int = 1, wire: bool = True
+    ) -> Strategy:
+        """The strategy the active policy picks for this call site."""
+        return self.policy.select(self, ct, incount, wire)
+
+    # ------------------------------------------------------------------
+    # MPI_Pack / MPI_Unpack (paper §6.2)
+    # ------------------------------------------------------------------
+    def pack(self, buf: jax.Array, ct: CommittedType, incount: int = 1) -> jax.Array:
+        return self.select(ct, incount, wire=False).pack(buf, ct, incount)
+
+    def unpack(
+        self, buf: jax.Array, packed: jax.Array, ct: CommittedType, incount: int = 1
+    ) -> jax.Array:
+        return self.select(ct, incount, wire=False).unpack(buf, packed, ct, incount)
+
+    # ------------------------------------------------------------------
+    # point-to-point (requests; paper §6.3)
+    # ------------------------------------------------------------------
+    def isend(
+        self,
+        buf: jax.Array,
+        ct: CommittedType,
+        perm: Sequence[Tuple[int, int]],
+        axis_name: Optional[str] = None,
+        incount: int = 1,
+    ) -> SendRequest:
+        """Pack ``ct`` out of ``buf`` and issue the wire transport NOW;
+        the returned request carries the (traced) received payload."""
+        axis = self._axis(axis_name)
+        s = self.select(ct, incount, wire=True)
+        payload = s.pack(buf, ct, incount)
+        wire = lax.ppermute(payload, axis, list(perm))
+        self.wire_ops += 1
+        return SendRequest(wire, s, ct, incount)
+
+    def irecv(
+        self,
+        buf: jax.Array,
+        ct: CommittedType,
+        send_req: SendRequest,
+        incount: Optional[int] = None,
+    ) -> Request:
+        """Bind a destination buffer + receive type to an issued send;
+        ``wait()`` materializes the unpack."""
+        inc = send_req.incount if incount is None else incount
+        return Request(
+            thunk=lambda: send_req.strategy.unpack_wire(
+                self, buf, send_req.wait(), ct, send_req.send_ct, inc
+            )
+        )
+
+    def sendrecv(
+        self,
+        src_buf: jax.Array,
+        dst_buf: jax.Array,
+        send_ct: CommittedType,
+        perm: Sequence[Tuple[int, int]],
+        axis_name: Optional[str] = None,
+        recv_ct: Optional[CommittedType] = None,
+        incount: int = 1,
+    ) -> jax.Array:
+        """Blocking pack -> permute -> unpack; returns the updated
+        ``dst_buf``."""
+        req = self.isend(src_buf, send_ct, perm, axis_name, incount)
+        return self.irecv(dst_buf, recv_ct or send_ct, req).wait()
+
+    # ------------------------------------------------------------------
+    # fused neighborhood alltoallv (the paper's MPI_Alltoallv halo path)
+    # ------------------------------------------------------------------
+    def ineighbor_alltoallv(
+        self,
+        buf: jax.Array,
+        send_cts: Sequence[CommittedType],
+        recv_cts: Sequence[CommittedType],
+        perms: Sequence[Sequence[Tuple[int, int]]],
+        axis_name: Optional[str] = None,
+    ) -> Request:
+        """Nonblocking fused neighborhood exchange: transfer ``i`` packs
+        ``send_cts[i]`` out of ``buf``, ships it along ``perms[i]``, and
+        unpacks into ``recv_cts[i]`` of the same buffer.  All regions are
+        packed into one contiguous buffer with a host-computed offset
+        table and the whole exchange is ONE collective (see
+        :class:`NeighborPlan`); ``wait()`` materializes the unpacks."""
+        if not (len(send_cts) == len(recv_cts) == len(perms)):
+            raise ValueError("send_cts, recv_cts, perms must align")
+        axis = self._axis(axis_name)
+        n = len(send_cts)
+        if n == 0:
+            return Request(value=buf)
+        strats = [self.select(ct, 1, wire=True) for ct in send_cts]
+        sizes = tuple(strats[i].wire_bytes(send_cts[i], 1) for i in range(n))
+        plan = plan_neighbor_alltoallv(
+            sizes, tuple(tuple(map(tuple, p)) for p in perms)
+        )
+
+        payloads = [strats[i].pack(buf, send_cts[i]) for i in range(n)]
+        rows = []
+        for members, offs in zip(plan.groups, plan.offsets):
+            parts = [payloads[i] for i in members]
+            used = offs[-1] + sizes[members[-1]]
+            if used < plan.seg_bytes:
+                parts.append(jnp.zeros((plan.seg_bytes - used,), jnp.uint8))
+            rows.append(jnp.concatenate(parts) if len(parts) > 1 else parts[0])
+
+        if plan.fused:
+            # destination-ordered rows via the per-rank table, then one
+            # all_to_all; received rows come back in source-rank order
+            stacked = jnp.stack(rows + [jnp.zeros((plan.seg_bytes,), jnp.uint8)])
+            me = lax.axis_index(axis)
+            send = jnp.asarray(np.asarray(plan.send_rows, np.int32))[me]
+            sendbuf = jnp.take(stacked, send, axis=0)
+            got = lax.all_to_all(sendbuf, axis, split_axis=0, concat_axis=0)
+            self.wire_ops += 1
+            back = jnp.asarray(np.asarray(plan.recv_rows, np.int32))[me]
+            by_group = jnp.take(got, back, axis=0)
+            group_rows = [by_group[g] for g in range(len(plan.groups))]
+        else:  # pragma: no cover - exercised only by irregular graphs
+            group_rows = []
+            for members, row in zip(plan.groups, rows):
+                group_rows.append(
+                    lax.ppermute(row, axis, list(perms[members[0]]))
+                )
+                self.wire_ops += 1
+
+        def materialize() -> jax.Array:
+            out = buf
+            for g, (members, offs) in enumerate(zip(plan.groups, plan.offsets)):
+                for i, off in zip(members, offs):
+                    wire = lax.dynamic_slice(group_rows[g], (off,), (sizes[i],))
+                    out = strats[i].unpack_wire(
+                        self, out, wire, recv_cts[i], send_cts[i], 1
+                    )
+            return out
+
+        return Request(thunk=materialize)
+
+    def neighbor_alltoallv(
+        self,
+        buf: jax.Array,
+        send_cts: Sequence[CommittedType],
+        recv_cts: Sequence[CommittedType],
+        perms: Sequence[Sequence[Tuple[int, int]]],
+        axis_name: Optional[str] = None,
+    ) -> jax.Array:
+        """Blocking :meth:`ineighbor_alltoallv`."""
+        return self.ineighbor_alltoallv(
+            buf, send_cts, recv_cts, perms, axis_name
+        ).wait()
+
+    # ------------------------------------------------------------------
+    # collectives on datatypes
+    # ------------------------------------------------------------------
+    def all_gather_packed(
+        self,
+        buf: jax.Array,
+        ct: CommittedType,
+        axis_name: Optional[str] = None,
+        incount: int = 1,
+    ) -> jax.Array:
+        """Pack the datatype then all-gather the contiguous payloads.
+        Returns (axis_size, size*incount) bytes."""
+        axis = self._axis(axis_name)
+        packed = self.pack(buf, ct, incount)
+        self.wire_ops += 1
+        return lax.all_gather(packed, axis)
+
+    def all_to_all_packed(
+        self,
+        buf: jax.Array,
+        cts: Sequence[CommittedType],
+        axis_name: Optional[str] = None,
+    ) -> jax.Array:
+        """MPI_Alltoallv over equal-size segments: pack one datatype per
+        peer into a single contiguous buffer, then all_to_all.  All
+        ``cts`` must have equal packed size (pad types to match);
+        returns (npeers, segment) received bytes."""
+        axis = self._axis(axis_name)
+        sizes = {ct.size for ct in cts}
+        if len(sizes) != 1:
+            raise ValueError("all_to_all_packed needs equal-size segments")
+        parts = [self.pack(buf, ct) for ct in cts]
+        sendbuf = jnp.stack(parts)  # (npeers, seg)
+        self.wire_ops += 1
+        return lax.all_to_all(sendbuf, axis, split_axis=0, concat_axis=0)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {
+            "committed_types": len(self.registry),
+            "commit_hits": self.registry.hits,
+            "model_lookups": self.model.lookups,
+            "model_hits": self.model.hits,
+            "strategies": len(self.strategies),
+            "wire_ops": self.wire_ops,
+        }
+
+
+def as_communicator(obj) -> Communicator:
+    """Accept a Communicator or anything wrapping one (the Interposer
+    shim exposes ``.comm``)."""
+    if isinstance(obj, Communicator):
+        return obj
+    comm = getattr(obj, "comm", None)
+    if isinstance(comm, Communicator):
+        return comm
+    raise TypeError(f"expected a Communicator (or shim), got {type(obj)!r}")

@@ -48,22 +48,33 @@ def _time_fn(fn, *args, iters: int = 5) -> float:
 
 
 def measure_pack_table(
-    strategies=("rows", "dma", "xla"),
+    strategies=None,
 ) -> Dict[str, List[Tuple[float, float, float]]]:
+    """Measure every calibratable registered strategy (or an explicit
+    iterable of strategies/names)."""
+    from repro.comm.api import default_registry, resolve_strategy
+
+    if strategies is None:
+        strats = default_registry().measurable()
+    else:
+        strats = tuple(resolve_strategy(s) for s in strategies)
     reg = TypeRegistry()
-    table: Dict[str, List[Tuple[float, float, float]]] = {s: [] for s in strategies}
+    table: Dict[str, List[Tuple[float, float, float]]] = {
+        s.name: [] for s in strats
+    }
     for blk in BLOCK_BYTES:
         pitch = max(PITCH, 2 * blk)
         for total in TOTAL_BYTES:
             nblocks = max(total // blk, 1)
             ct = reg.commit(Vector(nblocks, blk, pitch, BYTE))
             buf = jnp.zeros((ct.extent + 64,), jnp.uint8)
-            for s in strategies:
-                if s == "xla" and nblocks > 512:
-                    continue  # per-block copy baseline: unrolled HLO blows up
+            for s in strats:
+                cap = s.calibration_cap
+                if cap is not None and nblocks > cap:
+                    continue  # per-block unrolled HLO blows up past the cap
                 jfn = jax.jit(lambda b, _ct=ct, _s=s: pack(b, _ct, strategy=_s))
                 sec = _time_fn(jfn, buf)
-                table[s].append(
+                table[s.name].append(
                     (math.log2(blk), math.log2(nblocks * blk), sec)
                 )
     return table

@@ -1,54 +1,41 @@
-"""The interposer: datatype-aware communication over jax.lax collectives
-(paper §4, adapted per DESIGN.md §2).
+"""DEPRECATED shim: the string-mode ``Interposer`` over the Communicator.
 
-TEMPI sits between the application and the system MPI via dynamic-linker
-symbol interposition.  JAX has no symbol table to interpose, so the seam
-is the *collective call site*: every framework transfer of structured
-non-contiguous data goes through an :class:`Interposer`, which
+The interposer seam (paper §4) now lives in :mod:`repro.comm.api`: a
+:class:`~repro.comm.api.Communicator` with a pluggable strategy registry,
+request-based nonblocking transfers, and a fused neighborhood
+alltoallv.  This class remains so existing call sites keep working:
+every method delegates to an underlying Communicator (exposed as
+``.comm``), and the legacy ``mode`` strings map onto
+:class:`~repro.comm.api.Policy` objects via
+:func:`~repro.comm.api.policy_for_mode`.
 
-  1. commits the datatype once (cached canonicalization, §3),
-  2. consults the performance model for a strategy (§5),
-  3. packs with the selected Pallas kernel,
-  4. invokes the *underlying* collective (``lax.ppermute`` /
-     ``all_to_all`` / ``all_gather`` — the "system MPI" here is XLA's
-     collective runtime, which the interposer, like TEMPI, cannot
-     modify),
-  5. unpacks on the receiving side.
+Migration (see docs/comm_api.md):
 
-Switching ``mode`` between ``baseline`` (per-block copies, emulating the
-naive CUDA-aware MPI datatype handling every implementation shares) and
-``tempi`` (canonical kernels + model selection) requires **zero
-application change** — the transparency property of the paper.
+    Interposer(mode="tempi")     -> Communicator()
+    Interposer(mode="baseline")  -> Communicator(policy=BaselinePolicy())
+    Interposer(mode=<strategy>)  -> Communicator(policy=FixedPolicy(...))
+    ip.sendrecv(...)             -> comm.sendrecv(...) (or isend/irecv)
+    26x ip.sendrecv halo loop    -> comm.neighbor_alltoallv(...)
 """
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
 from repro.core.commit import CommittedType, TypeRegistry
 from repro.core.datatypes import Datatype
-from repro.core.strided_block import StridedBlock
-from repro.kernels.ops import byte_view, pack, pack_block, unbyte_view, unpack
-from repro.comm.perfmodel import PerfModel, StrategyEstimate, SystemParams, TPU_V5E
+from repro.comm.api import Communicator, policy_for_mode
+from repro.comm.perfmodel import SystemParams, TPU_V5E
 
 __all__ = ["Interposer", "Mode"]
 
-Mode = str  # "baseline" | "tempi" | "rows" | "dma" | "xla" | "ref"
-
-#: baseline per-block copy emulation explodes HLO size past this many
-#: blocks; beyond it the baseline degrades to the gather path (still a
-#: fair stand-in: the real baselines issue that many cudaMemcpyAsyncs)
-_BASELINE_BLOCK_CAP = 1024
+Mode = str  # legacy alias; see repro.comm.api.MODES for the valid names
 
 
 class Interposer:
-    """Datatype-aware communication layer.
+    """Deprecated facade over :class:`~repro.comm.api.Communicator`.
 
     Parameters
     ----------
@@ -63,48 +50,35 @@ class Interposer:
         params: SystemParams = TPU_V5E,
         registry: Optional[TypeRegistry] = None,
     ):
-        if mode not in ("baseline", "tempi", "rows", "dma", "xla", "ref"):
-            raise ValueError(f"unknown mode {mode!r}")
         self.mode = mode
-        self.registry = registry or TypeRegistry()
-        self.model = PerfModel(params)
+        self.comm = Communicator(
+            params=params, registry=registry, policy=policy_for_mode(mode)
+        )
 
-    # ------------------------------------------------------------------
-    # commit (MPI_Type_commit)
+    # -- state passthroughs -------------------------------------------
+    @property
+    def registry(self) -> TypeRegistry:
+        return self.comm.registry
+
+    @property
+    def model(self):
+        return self.comm.model
+
     # ------------------------------------------------------------------
     def commit(self, dt: Datatype) -> CommittedType:
-        return self.registry.commit(dt)
+        return self.comm.commit(dt)
 
-    # ------------------------------------------------------------------
-    # strategy selection
-    # ------------------------------------------------------------------
     def _strategy(self, ct: CommittedType, incount: int, wire: bool) -> str:
-        if self.mode == "baseline":
-            if ct.block is not None and ct.block.num_blocks * incount > _BASELINE_BLOCK_CAP:
-                return "ref"
-            return "xla"
-        if self.mode != "tempi":
-            return self.mode
-        est = self.model.select(ct, incount, allow_bounding=wire)
-        return est.strategy
+        return self.comm.select(ct, incount, wire=wire).name
 
-    # ------------------------------------------------------------------
-    # MPI_Pack / MPI_Unpack (paper §6.2)
-    # ------------------------------------------------------------------
     def pack(self, buf: jax.Array, ct: CommittedType, incount: int = 1) -> jax.Array:
-        strat = self._strategy(ct, incount, wire=False)
-        return pack(buf, ct, incount=incount, strategy=strat)
+        return self.comm.pack(buf, ct, incount)
 
     def unpack(
         self, buf: jax.Array, packed: jax.Array, ct: CommittedType, incount: int = 1
     ) -> jax.Array:
-        strat = self._strategy(ct, incount, wire=False)
-        return unpack(buf, packed, ct, incount=incount, strategy=strat)
+        return self.comm.unpack(buf, packed, ct, incount)
 
-    # ------------------------------------------------------------------
-    # MPI_Send/Recv analogue: point-to-point permute on a datatype
-    # (paper §6.3).  Must be called inside shard_map with `axis_name`.
-    # ------------------------------------------------------------------
     def sendrecv(
         self,
         src_buf: jax.Array,
@@ -115,59 +89,14 @@ class Interposer:
         recv_ct: Optional[CommittedType] = None,
         incount: int = 1,
     ) -> jax.Array:
-        """Pack ``send_ct`` out of ``src_buf``, permute across ``perm``,
-        unpack into ``dst_buf`` at ``recv_ct`` (default: same type).
+        return self.comm.sendrecv(
+            src_buf, dst_buf, send_ct, perm, axis_name, recv_ct, incount
+        )
 
-        Returns the updated ``dst_buf``.
-        """
-        recv_ct = recv_ct or send_ct
-        strat = self._strategy(send_ct, incount, wire=True)
-        if strat == "bounding" and send_ct.block is not None:
-            return self._sendrecv_bounding(
-                src_buf, dst_buf, send_ct, recv_ct, perm, axis_name, incount
-            )
-        packed = pack(src_buf, send_ct, incount=incount, strategy=strat)
-        wire = lax.ppermute(packed, axis_name, perm)
-        rstrat = self._strategy(recv_ct, incount, wire=False)
-        return unpack(dst_buf, wire, recv_ct, incount=incount, strategy=rstrat)
-
-    def _sendrecv_bounding(
-        self, src_buf, dst_buf, send_ct, recv_ct, perm, axis_name, incount
-    ):
-        """"one-shot" analogue: ship the contiguous bounding window, no
-        sender-side pack; the receiver extracts the member bytes."""
-        sb = send_ct.block
-        ext = sb.extent + (incount - 1) * send_ct.extent
-        wire = lax.dynamic_slice(byte_view(src_buf), (sb.start,), (ext,))
-        recv = lax.ppermute(wire, axis_name, perm)
-        # extract member bytes from the received window: same geometry,
-        # rebased to start 0
-        rb = StridedBlock(0, sb.counts, sb.strides)
-        if incount > 1:
-            parts = [
-                pack_block(
-                    lax.dynamic_slice(recv, (r * send_ct.extent,), (sb.extent,)),
-                    rb,
-                )
-                for r in range(incount)
-            ]
-            packed = jnp.concatenate(parts)
-        else:
-            packed = pack_block(recv, rb)
-        rstrat = self._strategy(recv_ct, incount, wire=False)
-        return unpack(dst_buf, packed, recv_ct, incount=incount, strategy=rstrat)
-
-    # ------------------------------------------------------------------
-    # collectives on datatypes
-    # ------------------------------------------------------------------
     def all_gather_packed(
         self, buf: jax.Array, ct: CommittedType, axis_name: str, incount: int = 1
     ) -> jax.Array:
-        """Pack the datatype then all-gather the contiguous payloads.
-        Returns (axis_size, size*incount) bytes."""
-        strat = self._strategy(ct, incount, wire=False)
-        packed = pack(buf, ct, incount=incount, strategy=strat)
-        return lax.all_gather(packed, axis_name)
+        return self.comm.all_gather_packed(buf, ct, axis_name, incount)
 
     def all_to_all_packed(
         self,
@@ -175,27 +104,8 @@ class Interposer:
         cts: Sequence[CommittedType],
         axis_name: str,
     ) -> jax.Array:
-        """MPI_Alltoallv analogue (the paper's halo-exchange transport):
-        pack one datatype per peer into a single contiguous buffer, then
-        all_to_all the equal-size segments.
-
-        All ``cts`` must have equal packed size (pad types to match);
-        returns (npeers, segment) received bytes.
-        """
-        sizes = {ct.size for ct in cts}
-        if len(sizes) != 1:
-            raise ValueError("all_to_all_packed needs equal-size segments")
-        parts = [
-            pack(buf, ct, strategy=self._strategy(ct, 1, wire=False)) for ct in cts
-        ]
-        sendbuf = jnp.stack(parts)  # (npeers, seg)
-        return lax.all_to_all(sendbuf, axis_name, split_axis=0, concat_axis=0)
+        return self.comm.all_to_all_packed(buf, cts, axis_name)
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, int]:
-        return {
-            "committed_types": len(self.registry),
-            "commit_hits": self.registry.hits,
-            "model_lookups": self.model.lookups,
-            "model_hits": self.model.hits,
-        }
+        return self.comm.stats()

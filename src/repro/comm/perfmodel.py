@@ -38,7 +38,6 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 from repro.core.commit import CommittedType
-from repro.kernels.geometry import plan_geometry
 
 __all__ = ["SystemParams", "StrategyEstimate", "PerfModel", "TPU_V5E"]
 
@@ -134,19 +133,31 @@ def _interp2d(table, x, y) -> Optional[float]:
 class PerfModel:
     """Strategy selection per (committed type, incount, hop count).
 
-    Queries are pure functions of their arguments, so results are cached
-    (paper §4/§6.3) — after the first call for a given type the decision
-    is a dict lookup.
+    The per-strategy cost formulas live on the
+    :class:`~repro.comm.api.Strategy` plugins themselves; this model
+    supplies the shared terms (link time, measured pack tables, system
+    parameters) and picks the cheapest among whatever strategies are
+    registered.  Queries are pure functions of their arguments, so
+    results are cached (paper §4/§6.3) — after the first call for a
+    given type the decision is a dict lookup.
     """
 
     def __init__(self, params: SystemParams = TPU_V5E):
         self.params = params
-        self._cache: Dict[Tuple[int, int, int], StrategyEstimate] = {}
+        self._cache: Dict[Tuple, StrategyEstimate] = {}
         self.lookups = 0
         self.hits = 0
 
-    # -- pack-side term -----------------------------------------------------
-    def _measured(self, strategy: str, contig: int, total: int) -> Optional[float]:
+    @staticmethod
+    def _resolve(strategy, registry=None):
+        from repro.comm.api import resolve_strategy
+
+        return resolve_strategy(strategy, registry)
+
+    # -- measured pack tables -------------------------------------------
+    def measured(self, strategy: str, contig: int, total: int) -> Optional[float]:
+        """Interpolated measured pack time for a named strategy, or None
+        when no calibration table covers it."""
         t = self.params.pack_table
         if not t or strategy not in t:
             return None
@@ -154,36 +165,12 @@ class PerfModel:
             t[strategy], math.log2(max(contig, 1)), math.log2(max(total, 1))
         )
 
-    def t_pack(self, ct: CommittedType, incount: int, strategy: str) -> float:
-        p = self.params
-        size = ct.size * incount
-        sb = ct.block
-        if sb is None:
-            return p.kernel_launch + 2 * size / p.hbm_bw
-        contig = sb.counts[0]
-        m = self._measured(strategy, contig, size)
-        if m is not None:
-            return m
-        geom = plan_geometry(sb)
-        nblocks = sb.num_blocks * incount
-        if strategy == "rows":
-            over = geom.overfetch if geom else 1.0
-            touched = size * over + size  # pitched read + contiguous write
-            return p.kernel_launch + touched / p.hbm_bw
-        if strategy == "dma":
-            chunks = max(nblocks // 128, 1)  # descriptors per ~128-row chunk
-            return p.kernel_launch + chunks * p.dma_setup + 2 * size / p.hbm_bw
-        if strategy == "xla":
-            return nblocks * p.xla_copy_overhead + 2 * size / p.hbm_bw
-        if strategy == "bounding":
-            return 0.0  # no pack at all
-        raise ValueError(strategy)
+    # -- per-strategy terms (delegate to the registered plugin) ---------
+    def t_pack(self, ct: CommittedType, incount: int, strategy) -> float:
+        return self._resolve(strategy).model_pack(self, ct, incount)
 
-    def t_unpack(self, ct: CommittedType, incount: int, strategy: str) -> float:
-        # unpack is slower: strided writes; rows strategy pays pitch
-        # read+write (paper §6.3 observes the same pack/unpack asymmetry)
-        base = self.t_pack(ct, incount, strategy)
-        return base * 1.5 if strategy != "bounding" else 0.0
+    def t_unpack(self, ct: CommittedType, incount: int, strategy) -> float:
+        return self._resolve(strategy).model_unpack(self, ct, incount)
 
     # -- link term ------------------------------------------------------
     def t_link(self, nbytes: int, hops: int = 1) -> float:
@@ -192,29 +179,9 @@ class PerfModel:
 
     # -- full strategy estimates (Eqs. 1-3 analogue) ----------------------
     def estimate(
-        self, ct: CommittedType, incount: int, strategy: str, hops: int = 1
+        self, ct: CommittedType, incount: int, strategy, hops: int = 1
     ) -> StrategyEstimate:
-        size = ct.size * incount
-        if strategy == "bounding":
-            sb = ct.block
-            wire = (sb.extent if sb is not None else ct.extent) * incount
-            if sb is not None and sb.size == sb.extent:
-                t_extract = 0.0  # fully dense: the wire bytes ARE the data
-            else:
-                # receiver must extract the member bytes from the bounding
-                # window and splice them into the destination (two kernels)
-                t_extract = self.t_pack(ct, incount, "rows") + self.t_unpack(
-                    ct, incount, "rows"
-                )
-            return StrategyEstimate(
-                "bounding", 0.0, self.t_link(wire, hops), t_extract
-            )
-        return StrategyEstimate(
-            strategy,
-            self.t_pack(ct, incount, strategy),
-            self.t_link(size, hops),
-            self.t_unpack(ct, incount, strategy),
-        )
+        return self._resolve(strategy).plan(self, ct, incount, hops)
 
     def select(
         self,
@@ -222,19 +189,34 @@ class PerfModel:
         incount: int = 1,
         hops: int = 1,
         allow_bounding: bool = True,
+        registry=None,
     ) -> StrategyEstimate:
-        """Pick the cheapest strategy (cached per call signature)."""
-        key = (id(ct), incount, hops, allow_bounding)
+        """Pick the cheapest applicable registered strategy (cached per
+        call signature).  ``allow_bounding`` admits wire-only strategies
+        (data actually crosses a link, so shipping the bounding window
+        is meaningful)."""
+        if registry is None:
+            from repro.comm.api import default_registry
+
+            registry = default_registry()
+        # keyed on the registry's mutation counter so a newly registered
+        # plugin invalidates prior selections
+        key = (id(ct), incount, hops, allow_bounding, id(registry),
+               registry.version)
         self.lookups += 1
         hit = self._cache.get(key)
         if hit is not None:
             self.hits += 1
             return hit
-        cands = ["xla", "bounding"] if allow_bounding else ["xla"]
-        if ct.block is not None and plan_geometry(ct.block) is not None:
-            cands += ["rows", "dma"]
+        cands = [
+            s
+            for s in registry.selectable()
+            if (allow_bounding or not s.wire_only) and s.applicable(ct)
+        ]
+        if not cands:
+            raise ValueError(f"no applicable strategy registered for {ct!r}")
         best = min(
-            (self.estimate(ct, incount, s, hops) for s in cands),
+            (s.plan(self, ct, incount, hops) for s in cands),
             key=lambda e: e.total,
         )
         self._cache[key] = best

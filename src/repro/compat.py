@@ -1,0 +1,70 @@
+"""Version compatibility shims for the pinned JAX (0.4.37).
+
+The repo targets the modern JAX surface (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``); the pinned
+release still spells those ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` and has no ``axis_types`` / ``jax.sharding.AxisType``.
+Everything in the repo goes through these wrappers so the call sites
+stay written against the modern API.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Sequence
+
+import jax
+
+__all__ = ["shard_map", "make_mesh"]
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, True
+    from jax.experimental.shard_map import shard_map as legacy
+
+    return legacy, False
+
+
+_SHARD_MAP, _SHARD_MAP_IS_MODERN = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              **kwargs):
+    """``jax.shard_map`` with the ``check_vma`` spelling on every version.
+
+    Older releases call the flag ``check_rep`` (same meaning: verify the
+    claimed replication/varying-axes of outputs).
+    """
+    if _SHARD_MAP_IS_MODERN:
+        return _SHARD_MAP(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kwargs,
+        )
+    return _SHARD_MAP(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, **kwargs,
+    )
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices=None, axis_types: Any = None):
+    """``jax.make_mesh`` that tolerates missing ``axis_types`` support.
+
+    ``axis_types`` defaults to all-Auto when the running JAX understands
+    it, and is dropped entirely when it doesn't (the legacy behaviour is
+    equivalent to Auto for every use in this repo).
+    """
+    params = inspect.signature(jax.make_mesh).parameters
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if "axis_types" in params:
+        if axis_types is None:
+            axis_type = getattr(jax.sharding, "AxisType", None)
+            if axis_type is not None:
+                axis_types = (axis_type.Auto,) * len(tuple(axis_names))
+        if axis_types is not None:
+            kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

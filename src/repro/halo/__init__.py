@@ -1,12 +1,20 @@
 """repro.halo — the paper's §6.4 3D stencil halo-exchange case study."""
 
-from repro.halo.exchange import DIRECTIONS, HaloSpec, halo_exchange, make_halo_step, make_halo_types
+from repro.halo.exchange import (
+    DIRECTIONS,
+    HaloSpec,
+    halo_exchange,
+    ihalo_exchange,
+    make_halo_step,
+    make_halo_types,
+)
 from repro.halo.stencil import stencil26, stencil_iterations
 
 __all__ = [
     "DIRECTIONS",
     "HaloSpec",
     "halo_exchange",
+    "ihalo_exchange",
     "make_halo_step",
     "make_halo_types",
     "stencil26",

@@ -6,16 +6,19 @@ local allocation ``(nz+2r, ny+2r, nx+2r)`` (halo shells of radius ``r``).
 The 26 neighbor regions (6 faces, 12 edges, 8 corners, periodic domain)
 are each described by an MPI-style ``Subarray`` datatype — "a variety of
 different 3D strided datatypes" — committed once and exchanged every
-iteration through the :class:`~repro.comm.interposer.Interposer`:
+iteration through a :class:`~repro.comm.api.Communicator`.
 
-    pack (kernel selected per type)  ->  ppermute  ->  unpack
+The paper transports the packed buffers with one ``MPI_Alltoallv``; this
+is exactly :meth:`Communicator.neighbor_alltoallv`: all 26 regions are
+packed (kernel selected per type by the strategy registry) into one
+contiguous buffer with a host-computed offset table, and the whole
+exchange is ONE fused collective — not 26 serialized ``ppermute``
+rounds.  On a periodic process grid the 26 directions collapse into the
+distinct displacement classes mod the grid (7 on a 2x2x2 grid), which is
+what makes the single ``all_to_all`` layout possible; see
+:class:`~repro.comm.api.NeighborPlan`.
 
-The paper transports the packed buffers with one ``MPI_Alltoallv``; JAX
-has no alltoallv, so the transport is one ``lax.ppermute`` per direction
-(26 rounds) — same wire bytes, and the XLA scheduler is free to overlap
-the rounds since they have no data dependencies.
-
-Switching ``Interposer(mode=...)`` between "baseline" and "tempi"
+Switching the communicator policy between baseline and model selection
 reproduces the paper's comparison with zero changes here.
 """
 
@@ -23,20 +26,26 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.comm.interposer import Interposer
+from repro.compat import shard_map
+from repro.comm.api import Communicator, Request, as_communicator
 from repro.core.commit import CommittedType
 from repro.core.datatypes import FLOAT, Named, Subarray
 
-__all__ = ["HaloSpec", "DIRECTIONS", "halo_exchange", "make_halo_types"]
+__all__ = [
+    "HaloSpec",
+    "DIRECTIONS",
+    "halo_exchange",
+    "ihalo_exchange",
+    "make_halo_types",
+    "make_halo_step",
+]
 
 #: the 26 neighbor directions (dz, dy, dx)
 DIRECTIONS: Tuple[Tuple[int, int, int], ...] = tuple(
@@ -111,48 +120,60 @@ def _region_type(spec: HaloSpec, d, kind: str) -> Subarray:
 
 
 def make_halo_types(
-    spec: HaloSpec, ip: Interposer
+    spec: HaloSpec, comm
 ) -> Dict[Tuple[int, int, int], Tuple[CommittedType, CommittedType]]:
     """Commit all 26 (send, recv) datatypes once (paper: 26 MPI_Pack +
-    26 MPI_Unpack per iteration on committed types)."""
+    26 MPI_Unpack per iteration on committed types).  Accepts a
+    Communicator or the deprecated Interposer shim."""
     return {
-        d: (ip.commit(_region_type(spec, d, "send")),
-            ip.commit(_region_type(spec, d, "recv")))
+        d: (comm.commit(_region_type(spec, d, "send")),
+            comm.commit(_region_type(spec, d, "recv")))
         for d in DIRECTIONS
     }
+
+
+def ihalo_exchange(
+    local: jax.Array,
+    spec: HaloSpec,
+    comm,
+    axis_name: str = "ranks",
+    types=None,
+) -> Request:
+    """Nonblocking 26-neighbor halo exchange: the single fused wire
+    transport is issued immediately; ``wait()`` materializes the 26
+    unpacks.  Must run inside shard_map over a 1D mesh axis of
+    ``spec.nranks`` devices."""
+    comm = as_communicator(comm)
+    if types is None:
+        types = make_halo_types(spec, comm)
+    send_cts = [types[d][0] for d in DIRECTIONS]
+    recv_cts = [types[d][1] for d in DIRECTIONS]
+    perms = [spec.perm(d) for d in DIRECTIONS]
+    return comm.ineighbor_alltoallv(local, send_cts, recv_cts, perms, axis_name)
 
 
 def halo_exchange(
     local: jax.Array,
     spec: HaloSpec,
-    ip: Interposer,
+    comm,
     axis_name: str = "ranks",
     types=None,
 ) -> jax.Array:
-    """One full 26-neighbor halo exchange for this rank's ``local`` block.
-
-    Must run inside shard_map over a 1D mesh axis of ``spec.nranks``
-    devices.  Returns ``local`` with all halo shells filled.
-    """
-    if types is None:
-        types = make_halo_types(spec, ip)
-    for d in DIRECTIONS:
-        ct_send, ct_recv = types[d]
-        local = ip.sendrecv(
-            local, local, ct_send, spec.perm(d), axis_name, recv_ct=ct_recv
-        )
-    return local
+    """One full 26-neighbor halo exchange for this rank's ``local`` block
+    (one fused collective on the wire).  Returns ``local`` with all halo
+    shells filled."""
+    return ihalo_exchange(local, spec, comm, axis_name, types).wait()
 
 
-def make_halo_step(spec: HaloSpec, ip: Interposer, mesh: Mesh, axis_name="ranks"):
+def make_halo_step(spec: HaloSpec, comm, mesh: Mesh, axis_name="ranks"):
     """jit-compiled shard_map wrapper: (nranks*az, ay, ax) global array,
     sharded on the leading axis, -> exchanged."""
-    types = make_halo_types(spec, ip)
+    types = make_halo_types(spec, comm)
 
     def step(local):
-        return halo_exchange(local, spec, ip, axis_name, types)
+        return halo_exchange(local, spec, comm, axis_name, types)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         step,
         mesh=mesh,
         in_specs=P(axis_name),

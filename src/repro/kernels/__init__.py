@@ -1,6 +1,12 @@
 """repro.kernels — Pallas TPU pack/unpack kernels for canonical
 StridedBlocks (paper §3.3), with ops.py wrappers and ref.py oracles."""
 
+# import the kernel submodules BEFORE re-exporting ops' pack/unpack
+# functions: `repro.kernels.pack`/`.unpack` are also module names, and a
+# first-time submodule import would otherwise clobber the function
+# bindings on the package.
+from repro.kernels import pack as _pack_kernels  # noqa: F401
+from repro.kernels import unpack as _unpack_kernels  # noqa: F401
 from repro.kernels.geometry import PackGeometry, plan_geometry
 from repro.kernels.ops import (
     byte_view,

@@ -1,16 +1,21 @@
-"""Public pack/unpack operations: jit'd wrappers + strategy dispatch.
+"""Public pack/unpack operations: jit'd wrappers + plan caching.
 
 This is TEMPI's ``MPI_Pack``/``MPI_Unpack`` (paper §6.2) for JAX arrays.
 The committed type's canonical StridedBlock drives everything:
 
     kind CONTIG     -> one contiguous copy (cudaMemcpyAsync analogue)
-    kind KERNEL_2D/3D -> Pallas kernel, strategy chosen among
-                         'rows' (pitched) / 'dma' (strided descriptor)
+    kind KERNEL_2D/3D -> Pallas kernel, chosen by the strategy plugin
     kind KERNEL_ND  -> python loop of 3D kernels over the outer dims
     kind GENERIC or unplannable geometry -> gather fallback (ref path)
 
 ``incount`` repeats the datatype at ``extent`` strides, handled as an
 extra outer dimension exactly as the paper describes (§3.3 last ¶).
+
+Strategy *dispatch* lives in ``repro.comm.api`` (the strategy registry);
+this module owns the strategy-independent machinery: plan caching, the
+1D fast paths, repetition loops, and the word-view plumbing the strategy
+kernels share.  ``strategy`` arguments accept a Strategy object, a
+registered name, or None (the static-auto heuristic).
 
 Buffers can be any dtype/shape; they are re-viewed as bytes and then as
 W-byte words (the paper's word-size specialization) without copying.
@@ -18,8 +23,6 @@ W-byte words (the paper's word-size specialization) without copying.
 
 from __future__ import annotations
 
-import functools
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -28,13 +31,7 @@ import jax.numpy as jnp
 from repro.core.commit import CommittedType, KernelKind
 from repro.core.strided_block import StridedBlock
 from repro.kernels import ref as refk
-from repro.kernels.geometry import (
-    VMEM_BUDGET_BYTES,
-    PackGeometry,
-    plan_geometry,
-)
-from repro.kernels.pack import pack_dma, pack_rows
-from repro.kernels.unpack import unpack_dma, unpack_rows
+from repro.kernels.geometry import PackGeometry, plan_geometry
 
 __all__ = [
     "byte_view",
@@ -43,11 +40,12 @@ __all__ = [
     "words_to_bytes",
     "pack",
     "unpack",
+    "pack_block",
+    "run_pack_kernel",
+    "run_unpack_kernel",
     "default_strategy",
     "STRATEGIES",
 ]
-
-STRATEGIES = ("auto", "rows", "dma", "xla", "ref")
 
 _UINT = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
 
@@ -55,6 +53,30 @@ _UINT = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
 #: committed datatype + incount, so repeated Pack/Unpack of the same type
 #: re-dispatch in a dict lookup.
 _PLAN_CACHE: Dict[Tuple[int, int], Optional["_Plan"]] = {}
+
+
+def _resolve(strategy):
+    from repro.comm.api import resolve_strategy
+
+    return resolve_strategy(strategy)
+
+
+def __getattr__(name):
+    if name == "STRATEGIES":
+        # legacy constant: the registered strategy names (now sourced
+        # from the registry so plugins appear automatically)
+        from repro.comm.api import default_registry
+
+        return default_registry().names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def default_strategy(geom: Optional[PackGeometry]) -> str:
+    """Name of the kernel the static geometry heuristic picks (the
+    calibrated model refines this crossover)."""
+    from repro.comm.api import static_choice
+
+    return static_choice(geom).name
 
 
 def _interpret_default() -> bool:
@@ -148,20 +170,8 @@ def _plan(ct: CommittedType, incount: int) -> _Plan:
     return plan
 
 
-def default_strategy(geom: Optional[PackGeometry]) -> str:
-    """Static heuristic used when no calibrated model is loaded: the
-    pitched row kernel wins while its over-fetch stays moderate (it gets
-    automatic double-buffering); the strided-DMA kernel wins for small
-    blocks at large pitches.  The calibrated model (repro.comm.perfmodel)
-    refines this crossover, as the paper's model picks one-shot vs
-    device."""
-    if geom is None:
-        return "ref"
-    return "rows" if geom.overfetch <= 4.0 else "dma"
-
-
 # ---------------------------------------------------------------------------
-# pack / unpack
+# shared word-view plumbing for the Pallas strategy kernels
 # ---------------------------------------------------------------------------
 
 def _prep_words(b: jax.Array, geom: PackGeometry) -> jax.Array:
@@ -177,8 +187,40 @@ def _prep_words(b: jax.Array, geom: PackGeometry) -> jax.Array:
     return words.reshape(geom.rows_padded, geom.pitch)
 
 
+def run_pack_kernel(b: jax.Array, geom: PackGeometry, kernel, interpret: bool):
+    """Drive a (src2d, geom, interpret) -> (planes, rows, lanes) pack
+    kernel through the shared word-view prep, returning packed bytes."""
+    src2d = _prep_words(b, geom)
+    out = kernel(src2d, geom, interpret=interpret)
+    return words_to_bytes(out.reshape(-1))
+
+
+def run_unpack_kernel(
+    b: jax.Array, packed: jax.Array, geom: PackGeometry, kernel, interpret: bool
+):
+    """Drive a (dst2d, pk3, geom, interpret) -> dst2d unpack kernel:
+    word-view prep, kernel, and tail reassembly for bytes the 2D view
+    does not cover."""
+    n = b.shape[0]
+    covered = geom.rows_padded * geom.pitch * geom.word_bytes
+    dst2d = _prep_words(b, geom)
+    pk3 = as_words(packed, geom.word_bytes).reshape(
+        geom.planes, geom.rows, geom.lanes
+    )
+    out2d = kernel(dst2d, pk3, geom, interpret=interpret)
+    out_b = words_to_bytes(out2d.reshape(-1))
+    if covered >= n:
+        return out_b[:n]
+    # the 2D word view only covers the strided region; keep the tail
+    return jnp.concatenate([out_b, b[covered:]])
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
 def _pack_one(
-    b: jax.Array, plan: _Plan, strategy: str, interpret: bool, base: int
+    b: jax.Array, plan: _Plan, strat, interpret: bool, base: int
 ) -> jax.Array:
     """Pack one repetition (byte offsets shifted by ``base``)."""
     sb = plan.sb
@@ -187,33 +229,19 @@ def _pack_one(
     if sb.ndims == 1:
         return jax.lax.dynamic_slice(b, (sb.start,), (sb.counts[0],))
     geom = plan_geometry(sb) if base else plan.geom
-    if strategy == "auto":
-        strategy = default_strategy(geom)
-    if geom is None or strategy == "ref":
-        return refk.pack_ref(b, sb)
-    if strategy == "xla":
-        return refk.pack_xla_blocks(b, sb)
-    src2d = _prep_words(b, geom)
-    if strategy == "rows":
-        out = pack_rows(src2d, geom, interpret=interpret)
-    elif strategy == "dma":
-        out = pack_dma(src2d, geom, VMEM_BUDGET_BYTES, interpret=interpret)
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}")
-    return words_to_bytes(out.reshape(-1))
+    return strat.pack_leaf(b, sb, geom, interpret)
 
 
 def pack(
     buf: jax.Array,
     ct: CommittedType,
     incount: int = 1,
-    strategy: str = "auto",
+    strategy=None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """MPI_Pack: gather the non-contiguous bytes ``ct`` describes from
     ``buf`` into a contiguous uint8 buffer of ``ct.size * incount``."""
-    if strategy not in STRATEGIES:
-        raise ValueError(f"strategy must be one of {STRATEGIES}")
+    strat = _resolve(strategy)
     if interpret is None:
         interpret = _interpret_default()
     plan = _plan(ct, incount)
@@ -221,9 +249,9 @@ def pack(
     if plan.kind is KernelKind.GENERIC or plan.sb is None:
         return refk.pack_ref(b, ct.block, incount, ct.extent)  # pragma: no cover
     if plan.reps == 1:
-        return _pack_one(b, plan, strategy, interpret, 0)
+        return _pack_one(b, plan, strat, interpret, 0)
     parts = [
-        _pack_one(b, plan, strategy, interpret, r * plan.rep_extent)
+        _pack_one(b, plan, strat, interpret, r * plan.rep_extent)
         for r in range(plan.reps)
     ]
     return jnp.concatenate(parts)
@@ -232,38 +260,27 @@ def pack(
 def pack_block(
     buf: jax.Array,
     sb: StridedBlock,
-    strategy: str = "auto",
+    strategy=None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Low-level pack straight from a StridedBlock (no committed type).
 
     Used by the comm layer for shifted/derived blocks (e.g. extracting
     member bytes out of a received bounding window)."""
+    strat = _resolve(strategy)
     if interpret is None:
         interpret = _interpret_default()
     b = byte_view(buf)
     if sb.ndims == 1:
         return jax.lax.dynamic_slice(b, (sb.start,), (sb.counts[0],))
-    geom = plan_geometry(sb)
-    if strategy == "auto":
-        strategy = default_strategy(geom)
-    if geom is None or strategy == "ref":
-        return refk.pack_ref(b, sb)
-    if strategy == "xla":
-        return refk.pack_xla_blocks(b, sb)
-    src2d = _prep_words(b, geom)
-    if strategy == "rows":
-        out = pack_rows(src2d, geom, interpret=interpret)
-    else:
-        out = pack_dma(src2d, geom, VMEM_BUDGET_BYTES, interpret=interpret)
-    return words_to_bytes(out.reshape(-1))
+    return strat.pack_leaf(b, sb, plan_geometry(sb), interpret)
 
 
 def _unpack_one(
     b: jax.Array,
     packed: jax.Array,
     plan: _Plan,
-    strategy: str,
+    strat,
     interpret: bool,
     base: int,
 ) -> jax.Array:
@@ -273,34 +290,7 @@ def _unpack_one(
     if sb.ndims == 1:
         return jax.lax.dynamic_update_slice(b, packed, (sb.start,))
     geom = plan_geometry(sb) if base else plan.geom
-    if strategy == "auto":
-        strategy = default_strategy(geom)
-    if geom is None or strategy == "ref":
-        return refk.unpack_ref(b, packed, sb)
-    if strategy == "xla":
-        return refk.unpack_xla_blocks(b, packed, sb)
-    n = b.shape[0]
-    covered = geom.rows_padded * geom.pitch * geom.word_bytes
-    dst2d = _prep_words(b, geom)
-    pk3 = as_words(packed, geom.word_bytes).reshape(
-        geom.planes, geom.rows, geom.lanes
-    )
-    if strategy == "rows":
-        if geom.planes > 1 and geom.plane_rows < geom.rows:
-            # interleaved planes: row read-modify-write would lose
-            # updates; use the windowed DMA kernel instead
-            out2d = unpack_dma(dst2d, pk3, geom, VMEM_BUDGET_BYTES, interpret)
-        else:
-            out2d = unpack_rows(dst2d, pk3, geom, interpret=interpret)
-    elif strategy == "dma":
-        out2d = unpack_dma(dst2d, pk3, geom, VMEM_BUDGET_BYTES, interpret)
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}")
-    out_b = words_to_bytes(out2d.reshape(-1))
-    if covered >= n:
-        return out_b[:n]
-    # the 2D word view only covers the strided region; keep the tail
-    return jnp.concatenate([out_b, b[covered:]])
+    return strat.unpack_leaf(b, packed, sb, geom, interpret)
 
 
 def unpack(
@@ -308,14 +298,13 @@ def unpack(
     packed: jax.Array,
     ct: CommittedType,
     incount: int = 1,
-    strategy: str = "auto",
+    strategy=None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """MPI_Unpack: scatter ``packed`` (uint8[size*incount]) into ``buf``
     per the committed datatype; returns the updated buffer (same
     shape/dtype as ``buf``)."""
-    if strategy not in STRATEGIES:
-        raise ValueError(f"strategy must be one of {STRATEGIES}")
+    strat = _resolve(strategy)
     if interpret is None:
         interpret = _interpret_default()
     plan = _plan(ct, incount)
@@ -325,7 +314,7 @@ def unpack(
         out = refk.unpack_ref(b, packed, ct.block, incount, ct.extent)
         return unbyte_view(out, buf.dtype, buf.shape)
     if plan.reps == 1:
-        out = _unpack_one(b, packed, plan, strategy, interpret, 0)
+        out = _unpack_one(b, packed, plan, strat, interpret, 0)
     else:
         out = b
         step = plan.sb.size
@@ -334,7 +323,7 @@ def unpack(
                 out,
                 jax.lax.dynamic_slice(packed, (rep * step,), (step,)),
                 plan,
-                strategy,
+                strat,
                 interpret,
                 rep * plan.rep_extent,
             )

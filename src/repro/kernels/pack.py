@@ -39,6 +39,10 @@ from repro.kernels.geometry import PackGeometry
 
 __all__ = ["pack_rows", "pack_dma", "choose_chunk"]
 
+# pinned-JAX compat: the memory-space enum was renamed
+# TPUMemorySpace -> MemorySpace in newer Pallas releases
+_MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
 
 # ---------------------------------------------------------------------------
 # pitched row kernel
@@ -121,7 +125,7 @@ def pack_dma(
     return pl.pallas_call(
         kern,
         grid=(geom.planes, geom.rows // chunk),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+        in_specs=[pl.BlockSpec(memory_space=_MemorySpace.ANY)],
         out_specs=pl.BlockSpec((1, chunk, geom.lanes), lambda p, i: (p, i, 0)),
         out_shape=jax.ShapeDtypeStruct(
             (geom.planes, geom.rows, geom.lanes), src2d.dtype

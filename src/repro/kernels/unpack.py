@@ -28,7 +28,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.geometry import PackGeometry
-from repro.kernels.pack import choose_chunk
+from repro.kernels.pack import _MemorySpace, choose_chunk
 
 __all__ = ["unpack_rows", "unpack_dma"]
 
@@ -106,9 +106,9 @@ def unpack_dma(
         grid=(geom.planes, geom.rows // chunk),
         in_specs=[
             pl.BlockSpec((1, chunk, geom.lanes), lambda p, i: (p, i, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=_MemorySpace.ANY),
         ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        out_specs=pl.BlockSpec(memory_space=_MemorySpace.ANY),
         out_shape=jax.ShapeDtypeStruct(dst2d.shape, dst2d.dtype),
         input_output_aliases={1: 0},
         scratch_shapes=[

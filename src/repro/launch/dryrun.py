@@ -39,6 +39,7 @@ from repro.distributed.sharding import (
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models.model import Model, build_model
 from repro.roofline.analysis import HW_V5E, analyze
+from repro.roofline.hlo_cost import cost_analysis_dict
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.train_step import make_train_step
 
@@ -220,7 +221,7 @@ def run_cell(
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     report = analyze(
         arch, shape_name, mesh_name, mesh.devices.size, cost, hlo, cfg, shape

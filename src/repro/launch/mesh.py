@@ -6,7 +6,7 @@ importing this module never touches jax device state.
 
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh", "batch_axes"]
 
@@ -20,22 +20,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for CI: same axis names, tiny shapes."""
     if pod:
-        axes = ("pod", "data", "model")
-        return jax.make_mesh(
-            (pod, data, model), axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import shard_map
 from repro.distributed.sharding import constrain
 
 __all__ = [
@@ -390,7 +391,7 @@ def ring_update(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
         return lax.cond(inb, write, lambda c: c, c)
 
     spec_c = P(batch_phys, phys, None, None)
-    return jax.shard_map(
+    return shard_map(
         upd,
         mesh=mesh,
         in_specs=(spec_c, P(batch_phys, None, None, None), P()),
@@ -432,7 +433,7 @@ def ring_update_stacked(cache: jax.Array, new: jax.Array, slot: jax.Array) -> ja
         return lax.cond(inb, write, lambda c: c, c)
 
     spec_c = P(None, batch_phys, phys, None, None)
-    return jax.shard_map(
+    return shard_map(
         upd,
         mesh=mesh,
         in_specs=(spec_c, P(None, batch_phys, None, None, None), P()),

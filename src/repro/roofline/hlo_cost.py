@@ -28,7 +28,24 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HloCost", "parse_hlo_cost"]
+__all__ = ["HloCost", "parse_hlo_cost", "cost_analysis_dict"]
+
+
+def cost_analysis_dict(compiled_or_cost) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older releases return a one-element list of per-program dicts;
+    newer ones return the dict directly.  Accepts either a ``Compiled``
+    object or the raw ``cost_analysis()`` result and always returns a
+    flat ``{metric: value}`` dict (empty when unavailable).
+    """
+    cost = compiled_or_cost
+    ca = getattr(cost, "cost_analysis", None)
+    if callable(ca):
+        cost = ca()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,

@@ -15,6 +15,9 @@ System invariants checked:
 
 import math
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

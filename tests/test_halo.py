@@ -45,10 +45,17 @@ results = {}
 for mode in ("baseline", "tempi"):
     ip = Interposer(mode=mode)
     step = make_halo_step(spec, ip, mesh)
-    out = np.asarray(step(jnp.asarray(locals_np.reshape(R * az, ay, ax))))
+    x0 = jnp.asarray(locals_np.reshape(R * az, ay, ax))
+    out = np.asarray(step(x0))
     results[mode] = out.reshape(R, az, ay, ax)
 
 np.testing.assert_array_equal(results["baseline"], results["tempi"])
+
+# the whole 26-region exchange must ride ONE fused wire transport
+jaxpr = str(jax.make_jaxpr(step)(x0))
+assert jaxpr.count("all_to_all") == 1, jaxpr.count("all_to_all")
+assert "ppermute" not in jaxpr
+print("FUSED_OK")
 
 # oracle: every cell (including halos) must equal the periodic global value
 out = results["tempi"]
@@ -68,7 +75,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from repro.comm import Interposer
+from repro.comm import Communicator
+from repro.compat import shard_map
 from repro.halo import HaloSpec, halo_exchange, make_halo_types, stencil_iterations
 
 grid = (2, 2, 2)
@@ -88,16 +96,16 @@ for rank in range(R):
     locals_np[rank, r:r+nz, r:r+ny, r:r+nx] = gvals[
         cz*nz:(cz+1)*nz, cy*ny:(cy+1)*ny, cx*nx:(cx+1)*nx]
 
-ip = Interposer(mode="tempi")
+comm = Communicator(axis_name="ranks")
 mesh = Mesh(np.array(jax.devices()), ("ranks",))
-types = make_halo_types(spec, ip)
+types = make_halo_types(spec, comm)
 
 def iteration(local):
-    local = halo_exchange(local, spec, ip, "ranks", types)
+    local = halo_exchange(local, spec, comm, "ranks", types)
     return stencil_iterations(local, spec, steps=2)
 
-step = jax.jit(jax.shard_map(iteration, mesh=mesh, in_specs=P("ranks"),
-                             out_specs=P("ranks"), check_vma=False))
+step = jax.jit(shard_map(iteration, mesh=mesh, in_specs=P("ranks"),
+                         out_specs=P("ranks"), check_vma=False))
 out = np.asarray(step(jnp.asarray(locals_np.reshape(R*az, ay, ax)))).reshape(R, az, ay, ax)
 
 # single-"rank" numpy oracle on the periodic global array
@@ -125,6 +133,7 @@ print("STENCIL_OK")
 @pytest.mark.slow
 def test_halo_exchange_8_ranks():
     out = run_with_devices(HALO_CODE, ndev=8)
+    assert "FUSED_OK" in out
     assert "HALO_OK" in out
 
 

@@ -8,11 +8,11 @@ CODE = r"""
 import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.distributed.sharding import DEFAULT_RULES, use_rules
 from repro.models.layers import ring_update, ring_update_stacked
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 B, S, KV, HD = 4, 16, 2, 8
 L = 3
 

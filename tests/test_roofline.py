@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.roofline.hlo_cost import parse_hlo_cost
+from repro.roofline.hlo_cost import cost_analysis_dict, parse_hlo_cost
 from repro.roofline.analysis import collective_bytes
 
 
@@ -36,7 +36,7 @@ def test_scan_trip_count_correction():
     assert cu.flops == pytest.approx(analytic, rel=0.25), cu.flops
     # and the builtin cost_analysis is indeed trip-blind (the reason this
     # module exists) — if XLA ever fixes it, we can drop the parser
-    builtin = _compile(scanned, x, ws).cost_analysis()["flops"]
+    builtin = cost_analysis_dict(_compile(scanned, x, ws))["flops"]
     assert builtin < 0.5 * analytic
 
 
