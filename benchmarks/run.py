@@ -3,7 +3,7 @@
 One module per paper table/figure; every row is ``name,us_per_call,
 derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [fig6|fig7|fig9|fig12]
+    PYTHONPATH=src python -m benchmarks.run [fig6|fig7|fig9|fig12|measure]
 """
 
 from __future__ import annotations
@@ -14,13 +14,20 @@ import traceback
 
 def main() -> None:
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
-    from benchmarks import bench_commit, bench_halo, bench_pack, bench_send_model
+    from benchmarks import (
+        bench_commit,
+        bench_halo,
+        bench_measure,
+        bench_pack,
+        bench_send_model,
+    )
 
     suites = {
         "fig6": bench_commit.run,
         "fig7": bench_pack.run,        # + fig8
         "fig9": bench_send_model.run,  # + fig10/11
         "fig12": bench_halo.run,
+        "measure": bench_measure.run,
     }
     print("name,us_per_call,derived")
     failures = 0

@@ -1,7 +1,11 @@
 """repro.comm — the TEMPI communication layer: the Communicator API with
 pluggable datatype strategies, performance-model selection, fused
-neighborhood collectives, system calibration, and the deprecated
-string-mode Interposer shim."""
+neighborhood collectives, and the deprecated string-mode Interposer
+shim.
+
+Empirical calibration moved to :mod:`repro.measure` (full-term sweeps,
+the on-disk SystemParams store, and the persistent selection cache);
+``repro.comm.calibrate`` remains as a thin shim over it."""
 
 from repro.comm.api import (
     BaselinePolicy,

@@ -130,9 +130,24 @@ class Strategy:
         raise NotImplementedError
 
     def model_unpack(self, model: PerfModel, ct: CommittedType, incount: int) -> float:
-        # unpack is slower: strided writes (paper §6.3 observes the same
-        # pack/unpack asymmetry)
+        sb = ct.block
+        if sb is not None and self._table_covers(sb, incount):
+            m = model.measured_unpack(self.name, sb.counts[0], ct.size * incount)
+            if m is not None:
+                return m
+        # no measured unpack table: strided writes are slower than pack
+        # (paper §6.3 observes the same pack/unpack asymmetry)
         return 1.5 * self.model_pack(model, ct, incount)
+
+    def _table_covers(self, sb: StridedBlock, incount: int) -> bool:
+        """Whether this strategy's measured tables can legitimately
+        answer for an object of this many blocks.  The calibration sweep
+        never measures past ``calibration_cap``, so interpolating there
+        would extrapolate a small-object time onto an object the cap
+        exists to exclude (e.g. pricing 500k unrolled per-block copies
+        at a 512-block measurement) — fall back to the analytic model."""
+        cap = self.calibration_cap
+        return cap is None or sb.num_blocks * incount <= cap
 
     def wire_bytes(self, ct: CommittedType, incount: int = 1) -> int:
         return ct.size * incount
@@ -212,12 +227,16 @@ class Strategy:
 
 def _analytic_prologue(model, strategy, ct, incount):
     """Shared cost-model prologue: generic-type fallback and measured
-    pack-table lookup.  Returns (params, size, block, measured|None)."""
+    pack-table lookup (refused past the strategy's calibration cap —
+    see :meth:`Strategy._table_covers`).  Returns (params, size, block,
+    measured|None)."""
     p = model.params
     size = ct.size * incount
     sb = ct.block
     if sb is None:
         return p, size, None, p.kernel_launch + 2 * size / p.hbm_bw
+    if not strategy._table_covers(sb, incount):
+        return p, size, sb, None
     return p, size, sb, model.measured(strategy.name, sb.counts[0], size)
 
 
@@ -752,6 +771,9 @@ class Communicator:
     registry: datatype commit cache (``MPI_Type_commit`` analogue).
     strategies: strategy registry; defaults to the process-global one.
     policy: strategy-selection behaviour; defaults to model selection.
+    decisions: optional :class:`repro.measure.DecisionCache` — persists
+        strategy selections (fingerprint-keyed) and records the audit
+        log.
     """
 
     def __init__(
@@ -761,11 +783,12 @@ class Communicator:
         registry: Optional[TypeRegistry] = None,
         strategies: Optional[StrategyRegistry] = None,
         policy: Optional[Policy] = None,
+        decisions=None,
     ):
         self.axis_name = axis_name
         self.registry = registry or TypeRegistry()
         self.strategies = strategies or default_registry()
-        self.model = PerfModel(params)
+        self.model = PerfModel(params, decisions=decisions)
         self.policy = policy or ModelPolicy()
         self.wire_ops = 0  # collectives issued through this communicator
 

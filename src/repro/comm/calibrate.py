@@ -1,96 +1,40 @@
-"""System parameter calibration (paper §6.3: "TEMPI provides a binary
-that records system performance parameters to the file system.  This
-binary should be run once before TEMPI is used in an application.").
+"""DEPRECATED shim: system calibration now lives in :mod:`repro.measure`.
 
-Measures pack/unpack kernel latency over a sparse (contiguous-block-size
-x total-object-size) grid on the *running* backend and writes a
-:class:`~repro.comm.perfmodel.SystemParams` JSON.  On a real TPU the
-measurements are wall-clock; on CPU containers they still provide a
-useful relative ordering, and the analytic ``TPU_V5E`` table remains the
-default for roofline work.
+The original module measured pack times only; the measurement subsystem
+(`repro.measure.bench`) measures every model term — pack, unpack, wire,
+and contiguous copy — and `repro.measure.store` persists the result
+keyed by a system fingerprint.  This module keeps the old entry points
+working:
 
-Run:  PYTHONPATH=src python -m repro.comm.calibrate [out.json]
+    measure_pack_table()  -> repro.measure.bench.measure_pack_table
+    calibrate()           -> repro.measure.bench.calibrate_params
+    python -m repro.comm.calibrate [out.json]   (still writes bare
+        SystemParams JSON; prefer `python -m repro.measure`)
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
 import sys
-import time
-from typing import Dict, List, Tuple
-
-import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import BYTE, TypeRegistry, Vector
-from repro.kernels import pack
 from repro.comm.perfmodel import SystemParams, TPU_V5E
+from repro.measure.bench import (
+    BLOCK_BYTES,
+    PITCH,
+    TOTAL_BYTES,
+    calibrate_params,
+    measure_pack_table,
+    time_fn as _time_fn,
+)
 
 __all__ = ["measure_pack_table", "calibrate", "main"]
 
-# paper Fig. 10 sweeps 64 B - 4 MiB objects over block sizes; we use a
-# coarser grid (interpolated at query time)
-BLOCK_BYTES = (8, 32, 128, 512)
-TOTAL_BYTES = (1 << 10, 1 << 14, 1 << 18, 1 << 22)
-PITCH = 512  # paper Fig. 7 uses 512 B pitch
-
-
-def _time_fn(fn, *args, iters: int = 5) -> float:
-    fn(*args)  # compile / warm caches
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
-
-
-def measure_pack_table(
-    strategies=None,
-) -> Dict[str, List[Tuple[float, float, float]]]:
-    """Measure every calibratable registered strategy (or an explicit
-    iterable of strategies/names)."""
-    from repro.comm.api import default_registry, resolve_strategy
-
-    if strategies is None:
-        strats = default_registry().measurable()
-    else:
-        strats = tuple(resolve_strategy(s) for s in strategies)
-    reg = TypeRegistry()
-    table: Dict[str, List[Tuple[float, float, float]]] = {
-        s.name: [] for s in strats
-    }
-    for blk in BLOCK_BYTES:
-        pitch = max(PITCH, 2 * blk)
-        for total in TOTAL_BYTES:
-            nblocks = max(total // blk, 1)
-            ct = reg.commit(Vector(nblocks, blk, pitch, BYTE))
-            buf = jnp.zeros((ct.extent + 64,), jnp.uint8)
-            for s in strats:
-                cap = s.calibration_cap
-                if cap is not None and nblocks > cap:
-                    continue  # per-block unrolled HLO blows up past the cap
-                jfn = jax.jit(lambda b, _ct=ct, _s=s: pack(b, _ct, strategy=_s))
-                sec = _time_fn(jfn, buf)
-                table[s.name].append(
-                    (math.log2(blk), math.log2(nblocks * blk), sec)
-                )
-    return table
-
 
 def calibrate(name: str | None = None) -> SystemParams:
-    backend = jax.default_backend()
-    table = measure_pack_table()
-    base = TPU_V5E if backend == "tpu" else dataclasses.replace(
-        TPU_V5E, name=f"{backend}_measured"
-    )
-    return dataclasses.replace(
-        base,
-        name=name or f"{backend}_calibrated",
-        pack_table={k: tuple(v) for k, v in table.items()},
-    )
+    """Full-term calibration on the running backend (see
+    :func:`repro.measure.bench.calibrate_params`)."""
+    return calibrate_params(name=name)
 
 
 def main() -> None:

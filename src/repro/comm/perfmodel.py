@@ -23,15 +23,14 @@ so the strategy menu becomes
 
 Each strategy time decomposes as  T = T_pack + T_link(bytes) + T_unpack,
 mirroring Eqs. 1–3, with terms read from a :class:`SystemParams` table —
-either analytic TPU v5e constants or a table produced by
-``repro.comm.calibrate`` (the paper's "binary that records system
-performance parameters").
+either analytic TPU v5e constants or the measured full-term tables
+produced by ``repro.measure`` (the paper's "binary that records system
+performance parameters"); see ``docs/measure.md``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import json
 import math
 from dataclasses import dataclass
@@ -42,9 +41,33 @@ from repro.core.commit import CommittedType
 __all__ = ["SystemParams", "StrategyEstimate", "PerfModel", "TPU_V5E"]
 
 
+#: 2D measured table rows: (log2_contig_block_bytes, log2_total_bytes, sec)
+Table2D = Tuple[Tuple[float, float, float], ...]
+#: 1D measured table rows: (log2_total_bytes, sec)
+Table1D = Tuple[Tuple[float, float], ...]
+
+
+def _freeze2d(v) -> Optional[Dict[str, Table2D]]:
+    if not v:
+        return None
+    return {k: tuple(tuple(row) for row in rows) for k, rows in v.items()}
+
+
+def _freeze1d(v) -> Optional[Table1D]:
+    if not v:
+        return None
+    return tuple(tuple(row) for row in v)
+
+
 @dataclass(frozen=True)
 class SystemParams:
-    """Measured or analytic system parameters (paper Fig. 9/10 tables)."""
+    """Measured or analytic system parameters (paper Fig. 9/10 tables).
+
+    The analytic constants are the fallback; a full-term calibration
+    (``repro.measure``) fills the optional measured tables and the model
+    then consults them for *every* term of T = T_pack + T_link +
+    T_unpack, as the paper's once-recorded filesystem measurements do.
+    """
 
     name: str
     hbm_bw: float = 819e9          # bytes/s per chip
@@ -53,9 +76,23 @@ class SystemParams:
     kernel_launch: float = 1.5e-6  # pallas_call fixed cost
     dma_setup: float = 4.0e-7      # per strided-DMA-descriptor cost
     xla_copy_overhead: float = 8.0e-7  # per dynamic-slice copy op
-    # optional measured pack tables: {strategy: [[log2_block, log2_total,
-    # seconds], ...]} — sparse grid, bilinear-interpolated in log space
-    pack_table: Optional[Dict[str, Tuple[Tuple[float, float, float], ...]]] = None
+    # measured tables ({strategy: rows} / rows) — sparse grids in log2
+    # space, interpolated at query time (nearest-neighbor off-grid)
+    pack_table: Optional[Dict[str, Table2D]] = None
+    unpack_table: Optional[Dict[str, Table2D]] = None
+    wire_table: Optional[Table1D] = None   # one-hop collective time
+    copy_table: Optional[Table1D] = None   # contiguous device copy time
+    # least-squares (latency, bandwidth) fit of wire_table; used for the
+    # per-extra-hop latency term when the table drives t_link
+    wire_latency: Optional[float] = None
+    wire_bw: Optional[float] = None
+
+    def __post_init__(self):
+        # normalize list-of-lists (JSON) into hashable tuple tables
+        object.__setattr__(self, "pack_table", _freeze2d(self.pack_table))
+        object.__setattr__(self, "unpack_table", _freeze2d(self.unpack_table))
+        object.__setattr__(self, "wire_table", _freeze1d(self.wire_table))
+        object.__setattr__(self, "copy_table", _freeze1d(self.copy_table))
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -64,11 +101,8 @@ class SystemParams:
     @staticmethod
     def from_json(s: str) -> "SystemParams":
         d = json.loads(s)
-        if d.get("pack_table"):
-            d["pack_table"] = {
-                k: tuple(tuple(row) for row in v)
-                for k, v in d["pack_table"].items()
-            }
+        known = {f.name for f in dataclasses.fields(SystemParams)}
+        d = {k: v for k, v in d.items() if k in known}
         return SystemParams(**d)
 
 
@@ -89,45 +123,81 @@ class StrategyEstimate:
         return self.t_pack + self.t_link + self.t_unpack
 
 
-def _interp2d(table, x, y) -> Optional[float]:
+class _Interp2D:
     """Bilinear interpolation on a sparse (log2 block, log2 total) grid.
 
     The paper interpolates pack cost from the stride and block length of
     the datatype (§6.3); we key on (contiguous block bytes, total bytes).
+    The axis vectors, the dense grid (NaN holes), and the raw point list
+    are built ONCE per table; queries are a couple of searchsorteds.
+    Cells with missing corners — and degenerate single-row/column grids —
+    fall back to the nearest measured point rather than "no answer".
     """
+
+    def __init__(self, table: Table2D):
+        import numpy as np
+
+        self._np = np
+        pts = np.asarray(table, dtype=float)
+        self.pts = pts
+        self.xs = np.unique(pts[:, 0])
+        self.ys = np.unique(pts[:, 1])
+        grid = np.full((len(self.xs), len(self.ys)), np.nan)
+        xi = np.searchsorted(self.xs, pts[:, 0])
+        yi = np.searchsorted(self.ys, pts[:, 1])
+        grid[xi, yi] = pts[:, 2]
+        self.grid = grid
+
+    def _nearest(self, x: float, y: float) -> float:
+        np = self._np
+        d = (self.pts[:, 0] - x) ** 2 + (self.pts[:, 1] - y) ** 2
+        return float(self.pts[int(np.argmin(d)), 2])
+
+    def __call__(self, x: float, y: float) -> float:
+        np = self._np
+        xs, ys = self.xs, self.ys
+        if len(xs) < 2 or len(ys) < 2:
+            return self._nearest(x, y)
+        x = min(max(x, xs[0]), xs[-1])
+        y = min(max(y, ys[0]), ys[-1])
+        i = min(int(np.searchsorted(xs, x, side="right") - 1), len(xs) - 2)
+        j = min(int(np.searchsorted(ys, y, side="right") - 1), len(ys) - 2)
+        q = self.grid[i : i + 2, j : j + 2]
+        if np.isnan(q).any():
+            return self._nearest(x, y)
+        tx = (x - xs[i]) / (xs[i + 1] - xs[i])
+        ty = (y - ys[j]) / (ys[j + 1] - ys[j])
+        return float(
+            q[0, 0] * (1 - tx) * (1 - ty)
+            + q[1, 0] * tx * (1 - ty)
+            + q[0, 1] * (1 - tx) * ty
+            + q[1, 1] * tx * ty
+        )
+
+
+class _Interp1D:
+    """Piecewise-linear interpolation on a (log2 total) -> seconds table,
+    clamped at the ends (same precompute-once contract as _Interp2D)."""
+
+    def __init__(self, table: Table1D):
+        import numpy as np
+
+        self._np = np
+        pts = np.asarray(sorted(table), dtype=float)
+        self.xs = pts[:, 0]
+        self.vs = pts[:, 1]
+
+    def __call__(self, x: float) -> float:
+        return float(self._np.interp(x, self.xs, self.vs))
+
+
+def _interp2d(table, x, y) -> Optional[float]:
+    """Interpolated lookup on a measured 2D table (None iff empty).
+    Builds the interpolator fresh — model queries go through the
+    per-:class:`PerfModel` cache instead."""
     if not table:
         return None
-    import numpy as np
-
-    pts = np.asarray(table, dtype=float)
-    xs = np.unique(pts[:, 0])
-    ys = np.unique(pts[:, 1])
-    if len(xs) < 2 or len(ys) < 2:
-        return None
-    grid = {(a, b): v for a, b, v in pts}
-    x = min(max(x, xs[0]), xs[-1])
-    y = min(max(y, ys[0]), ys[-1])
-    i = int(np.searchsorted(xs, x, side="right") - 1)
-    j = int(np.searchsorted(ys, y, side="right") - 1)
-    i = min(i, len(xs) - 2)
-    j = min(j, len(ys) - 2)
-    x0, x1 = xs[i], xs[i + 1]
-    y0, y1 = ys[j], ys[j + 1]
-    try:
-        q00 = grid[(x0, y0)]
-        q01 = grid[(x0, y1)]
-        q10 = grid[(x1, y0)]
-        q11 = grid[(x1, y1)]
-    except KeyError:
-        return None
-    tx = (x - x0) / (x1 - x0)
-    ty = (y - y0) / (y1 - y0)
-    return float(
-        q00 * (1 - tx) * (1 - ty)
-        + q10 * tx * (1 - ty)
-        + q01 * (1 - tx) * ty
-        + q11 * tx * ty
-    )
+    return _Interp2D(tuple(tuple(r) for r in table))(x, y)
 
 
 class PerfModel:
@@ -142,9 +212,17 @@ class PerfModel:
     given type the decision is a dict lookup.
     """
 
-    def __init__(self, params: SystemParams = TPU_V5E):
+    def __init__(self, params: SystemParams = TPU_V5E, decisions=None):
         self.params = params
+        #: optional repro.measure.decisions.DecisionCache — pins choices
+        #: across processes and records the audit log
+        self.decisions = decisions
         self._cache: Dict[Tuple, StrategyEstimate] = {}
+        # interpolators precomputed once per measured table, keyed by the
+        # (frozen, hashable) table itself so their lifetime is tied to
+        # this model — a process-global cache would pin every table ever
+        # queried (tests, re-calibrations) for the life of the process
+        self._interp: Dict[Tuple, object] = {}
         self.lookups = 0
         self.hits = 0
 
@@ -154,16 +232,44 @@ class PerfModel:
 
         return resolve_strategy(strategy, registry)
 
-    # -- measured pack tables -------------------------------------------
+    # -- measured tables ------------------------------------------------
+    def _interp_for(self, table, cls):
+        it = self._interp.get(table)
+        if it is None:
+            it = cls(table)
+            self._interp[table] = it
+        return it
+
+    def _lookup2d(
+        self,
+        tables: Optional[Dict[str, Table2D]],
+        strategy: str,
+        contig: int,
+        total: int,
+    ) -> Optional[float]:
+        if not tables or strategy not in tables or not tables[strategy]:
+            return None
+        return self._interp_for(tables[strategy], _Interp2D)(
+            math.log2(max(contig, 1)), math.log2(max(total, 1))
+        )
+
     def measured(self, strategy: str, contig: int, total: int) -> Optional[float]:
         """Interpolated measured pack time for a named strategy, or None
         when no calibration table covers it."""
-        t = self.params.pack_table
-        if not t or strategy not in t:
+        return self._lookup2d(self.params.pack_table, strategy, contig, total)
+
+    def measured_unpack(
+        self, strategy: str, contig: int, total: int
+    ) -> Optional[float]:
+        """Interpolated measured unpack time, or None when uncovered."""
+        return self._lookup2d(self.params.unpack_table, strategy, contig, total)
+
+    def measured_copy(self, nbytes: int) -> Optional[float]:
+        """Interpolated measured contiguous-copy time, or None."""
+        t = self.params.copy_table
+        if not t:
             return None
-        return _interp2d(
-            t[strategy], math.log2(max(contig, 1)), math.log2(max(total, 1))
-        )
+        return self._interp_for(t, _Interp1D)(math.log2(max(nbytes, 1)))
 
     # -- per-strategy terms (delegate to the registered plugin) ---------
     def t_pack(self, ct: CommittedType, incount: int, strategy) -> float:
@@ -175,6 +281,22 @@ class PerfModel:
     # -- link term ------------------------------------------------------
     def t_link(self, nbytes: int, hops: int = 1) -> float:
         p = self.params
+        if p.wire_table:
+            # measured one-hop collective time; extra hops add the fitted
+            # (or analytic) latency floor, not another bandwidth term
+            interp = self._interp_for(p.wire_table, _Interp1D)
+            x = math.log2(max(nbytes, 1))
+            t = interp(x)
+            end = float(interp.xs[-1])
+            if x > end:
+                # past the measured grid: charge the fitted (or analytic)
+                # bandwidth for the excess bytes instead of flat-clamping
+                # — a 64 MiB transfer must not price like the 4 MiB grid
+                # ceiling (it would hand every large object to bounding)
+                bw = p.wire_bw if p.wire_bw else p.ici_bw
+                t += (nbytes - 2.0 ** end) / bw
+            lat = p.wire_latency if p.wire_latency is not None else p.ici_latency
+            return t + (hops - 1) * lat
         return hops * p.ici_latency + nbytes / p.ici_bw
 
     # -- full strategy estimates (Eqs. 1-3 analogue) ----------------------
@@ -199,25 +321,38 @@ class PerfModel:
             from repro.comm.api import default_registry
 
             registry = default_registry()
-        # keyed on the registry's mutation counter so a newly registered
+        # keyed on the type's CONTENT fingerprint (not id(ct): equal
+        # structures share decisions across registries and processes) and
+        # the strategy registry's mutation counter so a newly registered
         # plugin invalidates prior selections
-        key = (id(ct), incount, hops, allow_bounding, id(registry),
+        sig = ct.fingerprint
+        key = (sig, incount, hops, allow_bounding, id(registry),
                registry.version)
         self.lookups += 1
         hit = self._cache.get(key)
         if hit is not None:
             self.hits += 1
             return hit
-        cands = [
-            s
-            for s in registry.selectable()
-            if (allow_bounding or not s.wire_only) and s.applicable(ct)
-        ]
-        if not cands:
-            raise ValueError(f"no applicable strategy registered for {ct!r}")
-        best = min(
-            (s.plan(self, ct, incount, hops) for s in cands),
-            key=lambda e: e.total,
-        )
+        pinned = None
+        if self.decisions is not None:
+            pinned = self.decisions.lookup(sig, incount, hops, allow_bounding)
+        if pinned is not None and pinned.strategy in registry:
+            best = registry.get(pinned.strategy).plan(self, ct, incount, hops)
+        else:
+            cands = [
+                s
+                for s in registry.selectable()
+                if (allow_bounding or not s.wire_only) and s.applicable(ct)
+            ]
+            if not cands:
+                raise ValueError(f"no applicable strategy registered for {ct!r}")
+            best = min(
+                (s.plan(self, ct, incount, hops) for s in cands),
+                key=lambda e: e.total,
+            )
+            if self.decisions is not None:
+                self.decisions.record(
+                    sig, incount, hops, allow_bounding, best, ct=ct
+                )
         self._cache[key] = best
         return best

@@ -14,15 +14,31 @@ lookup (amortized "tens of nanoseconds" in the paper):
 from __future__ import annotations
 
 import enum
+import hashlib
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 from repro.core.canonicalize import simplify
 from repro.core.datatypes import Datatype
-from repro.core.ir import Type, translate
+from repro.core.ir import DenseData, StreamData, Type, translate
 from repro.core.strided_block import StridedBlock, strided_block
 
 __all__ = ["KernelKind", "CommittedType", "TypeRegistry", "commit", "registry"]
+
+#: bump when the structural description below changes shape, so stale
+#: persisted selection caches keyed on old fingerprints never collide
+_FINGERPRINT_VERSION = "ct.v1"
+
+
+def _tree_key(ty: Type) -> Tuple:
+    """Pure-data description of a canonical IR tree (GENERIC types have
+    no StridedBlock, so the tree itself is the structure)."""
+    d = ty.data
+    if isinstance(d, DenseData):
+        head: Tuple = ("dense", d.offset, d.extent)
+    else:
+        head = ("stream", d.offset, d.stride, d.count)
+    return head + tuple(_tree_key(c) for c in ty.children)
 
 
 class KernelKind(enum.Enum):
@@ -60,6 +76,36 @@ class CommittedType:
     @property
     def contiguous(self) -> bool:
         return self.kernel is KernelKind.CONTIG
+
+    def structure_key(self) -> Tuple:
+        """Canonical structural description of the committed type: what
+        the runtime *does* with it, independent of how it was constructed
+        or which registry committed it.  Equal canonical forms (paper
+        Fig. 2: different construction, same object) share a key."""
+        b = self.block
+        blk = None if b is None else (b.start, b.counts, b.strides)
+        return (
+            _FINGERPRINT_VERSION,
+            self.kernel.value,
+            self.word_bytes,
+            self.size,
+            self.extent,
+            blk if blk is not None else _tree_key(self.tree),
+        )
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable content hash of :meth:`structure_key` — identical
+        across registry re-commits and across processes, so it can key
+        persistent caches (``repro.measure``).  ``id(ct)`` cannot."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            digest = hashlib.sha256(
+                repr(self.structure_key()).encode()
+            ).hexdigest()[:16]
+            object.__setattr__(self, "_fingerprint", digest)
+            fp = digest
+        return fp
 
 
 def _select_kernel(block: Optional[StridedBlock]) -> KernelKind:

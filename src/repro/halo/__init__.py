@@ -8,7 +8,12 @@ from repro.halo.exchange import (
     make_halo_step,
     make_halo_types,
 )
-from repro.halo.stencil import stencil26, stencil_iterations
+from repro.halo.stencil import (
+    overlapped_stencil_iteration,
+    stencil26,
+    stencil26_interior,
+    stencil_iterations,
+)
 
 __all__ = [
     "DIRECTIONS",
@@ -17,6 +22,8 @@ __all__ = [
     "ihalo_exchange",
     "make_halo_step",
     "make_halo_types",
+    "overlapped_stencil_iteration",
     "stencil26",
+    "stencil26_interior",
     "stencil_iterations",
 ]

@@ -9,14 +9,19 @@ exchange:compute ratio of the paper's setup).
 from __future__ import annotations
 
 import itertools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.halo.exchange import HaloSpec
+from repro.halo.exchange import HaloSpec, ihalo_exchange
 
-__all__ = ["stencil26", "stencil_iterations"]
+__all__ = [
+    "stencil26",
+    "stencil26_interior",
+    "stencil_iterations",
+    "overlapped_stencil_iteration",
+]
 
 _NEIGHBORS = tuple(
     d for d in itertools.product((-1, 0, 1), repeat=3) if d != (0, 0, 0)
@@ -53,3 +58,70 @@ def stencil_iterations(local: jax.Array, spec: HaloSpec, steps: int) -> jax.Arra
     for _ in range(steps):
         local = stencil26(local, spec)
     return local
+
+
+def stencil26_interior(local: jax.Array, spec: HaloSpec) -> jax.Array:
+    """First-application update of the DEEP interior: every cell whose
+    1-neighborhood lies entirely inside the interior, i.e. the cells
+    whose new values do not read any halo cell.
+
+    Returns the ``(nz-2, ny-2, nx-2)`` block of updated values (origin
+    ``(r+1, r+1, r+1)`` in the local allocation).  Because a halo
+    exchange only *writes* halo shells, this block is bit-identical to
+    the same region of ``stencil26(exchanged, spec)`` — which is what
+    makes it legal to compute while the exchange is still on the wire.
+    """
+    r = spec.radius
+    nz, ny, nx = spec.interior
+    assert min(nz, ny, nx) > 2, "deep interior needs interior dims > 2"
+    w = jnp.float32(0.4)
+    shape = (nz - 2, ny - 2, nx - 2)
+    acc = jnp.zeros(shape, local.dtype)
+    for dz, dy, dx in _NEIGHBORS:
+        acc = acc + jax.lax.dynamic_slice(
+            local, (r + 1 + dz, r + 1 + dy, r + 1 + dx), shape
+        )
+    center = jax.lax.dynamic_slice(local, (r + 1, r + 1, r + 1), shape)
+    return (1 - w) * center + (w / 26.0) * acc
+
+
+def overlapped_stencil_iteration(
+    local: jax.Array,
+    spec: HaloSpec,
+    comm,
+    axis_name: str = "ranks",
+    types=None,
+    steps: int = 2,
+    probe: Optional[dict] = None,
+) -> jax.Array:
+    """One halo-exchange + ``steps``-stencil iteration with the exchange
+    wire time hidden behind interior compute (ROADMAP: `Request` overlap
+    via :func:`ihalo_exchange`).
+
+    Pipeline: the fused collective is issued immediately
+    (:func:`ihalo_exchange`), the deep-interior update — which needs no
+    halo data — is computed while the wire op is in flight, then
+    ``wait()`` materializes the halos and only the remaining rim of the
+    first application depends on them.  The deep-interior values are
+    spliced into the first application's result, so XLA sees two
+    independent dataflows (collective ∥ interior compute) it is free to
+    overlap.  Bit-identical to ``halo_exchange`` + ``stencil_iterations``.
+
+    ``probe``, when given, records ``pending_during_interior``: whether
+    the request was still pending when the interior compute was built —
+    the overlap invariant tests assert.
+    """
+    assert steps <= spec.radius
+    r = spec.radius
+    req = ihalo_exchange(local, spec, comm, axis_name, types)  # wire NOW
+    inner = stencil26_interior(local, spec)   # overlaps the collective
+    if probe is not None:
+        probe["pending_during_interior"] = not req.completed
+    full = req.wait()
+    stepped = stencil26(full, spec)
+    # splice the precomputed (identical) deep-interior values: keeps the
+    # early compute live in the graph without changing the result
+    stepped = jax.lax.dynamic_update_slice(stepped, inner, (r + 1, r + 1, r + 1))
+    for _ in range(steps - 1):
+        stepped = stencil26(stepped, spec)
+    return stepped

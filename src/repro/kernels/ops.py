@@ -50,9 +50,9 @@ __all__ = [
 _UINT = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
 
 #: geometry plan cache — the paper's §4 "caching layer": keyed by the
-#: committed datatype + incount, so repeated Pack/Unpack of the same type
-#: re-dispatch in a dict lookup.
-_PLAN_CACHE: Dict[Tuple[int, int], Optional["_Plan"]] = {}
+#: committed type's content fingerprint + incount, so repeated
+#: Pack/Unpack of the same structure re-dispatch in a dict lookup.
+_PLAN_CACHE: Dict[Tuple[str, int], Optional["_Plan"]] = {}
 
 
 def _resolve(strategy):
@@ -162,7 +162,10 @@ class _Plan:
 
 
 def _plan(ct: CommittedType, incount: int) -> _Plan:
-    key = (id(ct), incount)
+    # content-fingerprint key: id(ct) can be recycled after a committed
+    # type is garbage-collected, silently serving a stale plan for a
+    # structurally different type; equal structures share a plan instead
+    key = (ct.fingerprint, incount)
     plan = _PLAN_CACHE.get(key)
     if plan is None:
         plan = _Plan(ct, incount)

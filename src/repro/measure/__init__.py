@@ -1,0 +1,67 @@
+"""repro.measure — empirical measurement & autotuning (paper §5/§6.3).
+
+TEMPI's claim is that non-contiguous transfer performance "can be
+modeled with empirical system measurements" recorded once to the
+filesystem and used to transparently pick the cheapest strategy.  This
+package owns that data end-to-end:
+
+* :mod:`repro.measure.bench`       — timed sweeps for pack, unpack,
+  wire, and contiguous-copy terms (``calibrate_params``);
+* :mod:`repro.measure.fingerprint` — content hashes for committed
+  datatypes and for the backend/topology, the keys everything below
+  persists under;
+* :mod:`repro.measure.store`       — the versioned on-disk SystemParams
+  database (``load_or_calibrate``) plus the checked-in ``ci_params.json``
+  that pins CI decisions;
+* :mod:`repro.measure.decisions`   — the persistent selection cache and
+  audit log a :class:`~repro.comm.perfmodel.PerfModel` records into and
+  pins from.
+
+Lifecycle:  calibrate once -> store -> load in any process -> select
+(fingerprint-keyed, reproducible) -> audit.  See ``docs/measure.md``.
+"""
+
+from repro.measure.bench import (
+    calibrate_params,
+    fit_latency_bandwidth,
+    measure_copy_table,
+    measure_pack_table,
+    measure_unpack_table,
+    measure_wire_table,
+    time_fn,
+)
+from repro.measure.decisions import Decision, DecisionCache
+from repro.measure.fingerprint import (
+    system_description,
+    system_fingerprint,
+    type_fingerprint,
+)
+from repro.measure.store import (
+    ParamsStore,
+    STORE_FORMAT,
+    ci_params_path,
+    default_store,
+    load_ci_params,
+    load_or_calibrate,
+)
+
+__all__ = [
+    "Decision",
+    "DecisionCache",
+    "ParamsStore",
+    "STORE_FORMAT",
+    "calibrate_params",
+    "ci_params_path",
+    "default_store",
+    "fit_latency_bandwidth",
+    "load_ci_params",
+    "load_or_calibrate",
+    "measure_copy_table",
+    "measure_pack_table",
+    "measure_unpack_table",
+    "measure_wire_table",
+    "system_description",
+    "system_fingerprint",
+    "time_fn",
+    "type_fingerprint",
+]

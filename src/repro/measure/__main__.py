@@ -1,0 +1,42 @@
+"""CLI: run the full-term calibration and write a store envelope.
+
+    PYTHONPATH=src python -m repro.measure [--reduced] [--name NAME] [out.json]
+
+Without an output path the envelope lands in the default store
+(``$REPRO_MEASURE_DIR`` or ``~/.cache/repro/measure``) under the running
+system's fingerprint, where ``load_or_calibrate()`` finds it.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.measure.bench import calibrate_params
+from repro.measure.fingerprint import system_description, system_fingerprint
+from repro.measure.store import ParamsStore
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="repro.measure")
+    ap.add_argument("out", nargs="?", default=None,
+                    help="output JSON path (default: the params store)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="small CI grid instead of the full sweep")
+    ap.add_argument("--name", default=None, help="params table name")
+    args = ap.parse_args()
+
+    params = calibrate_params(name=args.name, reduced=args.reduced)
+    store = ParamsStore()
+    path = store.save(params, path=args.out)
+    strategies = sorted((params.pack_table or {}).keys())
+    print(f"backend: {jax.default_backend()}  "
+          f"system: {system_fingerprint()} {system_description()}")
+    print(f"measured strategies: {strategies}")
+    print(f"wire fit: latency={params.wire_latency} bw={params.wire_bw}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

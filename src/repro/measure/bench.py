@@ -1,0 +1,273 @@
+"""Timed-sweep measurement harness (paper §6.3: "TEMPI provides a binary
+that records system performance parameters to the file system.  This
+binary should be run once before TEMPI is used in an application.").
+
+The paper's model needs *every* term of T = T_pack + T_link + T_unpack
+from empirical measurement, not analytic constants — strategy rankings
+flip with block size and total size per system.  This module measures
+all of them on the *running* backend:
+
+* :func:`measure_pack_table` / :func:`measure_unpack_table` — per
+  registered strategy, over a sparse (contiguous-block-size x
+  total-object-size) grid, interpolated at query time;
+* :func:`measure_wire_table` — one-hop collective (``ppermute`` ring
+  over however many devices exist; 1-device self-permutes still price
+  the dispatch overhead) over message sizes, with a least-squares
+  (latency, bandwidth) fit;
+* :func:`measure_copy_table` — contiguous device copy over sizes (the
+  memcpy analogue every strategy's staging bottoms out in).
+
+:func:`calibrate_params` assembles everything into a
+:class:`~repro.comm.perfmodel.SystemParams`.  On a real TPU the
+measurements are wall-clock; on CPU containers they still provide a
+useful relative ordering.  ``reduced=True`` shrinks the grid for CI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BYTE, TypeRegistry, Vector
+from repro.kernels import ops
+from repro.comm.perfmodel import SystemParams, TPU_V5E
+
+__all__ = [
+    "BLOCK_BYTES",
+    "TOTAL_BYTES",
+    "REDUCED_BLOCK_BYTES",
+    "REDUCED_TOTAL_BYTES",
+    "PITCH",
+    "time_fn",
+    "measure_pack_table",
+    "measure_unpack_table",
+    "measure_wire_table",
+    "measure_copy_table",
+    "fit_latency_bandwidth",
+    "calibrate_params",
+]
+
+# paper Fig. 10 sweeps 64 B - 4 MiB objects over block sizes; we use a
+# coarser grid (interpolated at query time)
+BLOCK_BYTES: Tuple[int, ...] = (8, 32, 128, 512)
+TOTAL_BYTES: Tuple[int, ...] = (1 << 10, 1 << 14, 1 << 18, 1 << 22)
+#: CI / smoke grid — small enough for interpret-mode kernels on CPU
+REDUCED_BLOCK_BYTES: Tuple[int, ...] = (8, 128)
+REDUCED_TOTAL_BYTES: Tuple[int, ...] = (1 << 10, 1 << 14)
+PITCH = 512  # paper Fig. 7 uses 512 B pitch
+
+
+def time_fn(fn, *args, iters: int = 5) -> float:
+    """Mean wall-clock seconds per call of an async-dispatch ``fn``.
+
+    The warm-up call (compile + caches) MUST be block_until_ready'd
+    before ``t0`` is taken: JAX dispatch is asynchronous, so an
+    unsynchronized warm-up would still be executing inside the timed
+    region and bleed into every sample.
+    """
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _resolve_strategies(strategies):
+    from repro.comm.api import default_registry, resolve_strategy
+
+    if strategies is None:
+        return default_registry().measurable()
+    return tuple(resolve_strategy(s) for s in strategies)
+
+
+def _sweep(
+    block_bytes: Sequence[int], total_bytes: Sequence[int]
+) -> Iterable[Tuple[int, int, object, jax.Array]]:
+    """Yield (blk, nblocks, committed vector type, source buffer) over
+    the measurement grid — the same shapes for pack and unpack so their
+    tables are directly comparable."""
+    reg = TypeRegistry()
+    for blk in block_bytes:
+        pitch = max(PITCH, 2 * blk)
+        for total in total_bytes:
+            nblocks = max(total // blk, 1)
+            ct = reg.commit(Vector(nblocks, blk, pitch, BYTE))
+            buf = jnp.zeros((ct.extent + 64,), jnp.uint8)
+            yield blk, nblocks, ct, buf
+
+
+def _measure_table(
+    make_timed, strategies, block_bytes, total_bytes, iters
+) -> Dict[str, List[Tuple[float, float, float]]]:
+    """Shared sweep scaffolding for the 2D kernel tables: ``make_timed``
+    maps (strategy, ct, buf) -> (jitted fn, args).  One implementation
+    so cap handling / grid shape / row format can never drift between
+    the pack and unpack tables."""
+    strats = _resolve_strategies(strategies)
+    table: Dict[str, List[Tuple[float, float, float]]] = {
+        s.name: [] for s in strats
+    }
+    for blk, nblocks, ct, buf in _sweep(block_bytes, total_bytes):
+        for s in strats:
+            cap = s.calibration_cap
+            if cap is not None and nblocks > cap:
+                continue  # per-block unrolled HLO blows up past the cap
+            jfn, args = make_timed(s, ct, buf)
+            sec = time_fn(jfn, *args, iters=iters)
+            table[s.name].append(
+                (math.log2(blk), math.log2(nblocks * blk), sec)
+            )
+    return table
+
+
+def measure_pack_table(
+    strategies=None,
+    block_bytes: Sequence[int] = BLOCK_BYTES,
+    total_bytes: Sequence[int] = TOTAL_BYTES,
+    iters: int = 5,
+) -> Dict[str, List[Tuple[float, float, float]]]:
+    """Measure pack time for every calibratable registered strategy (or
+    an explicit iterable of strategies/names) over the grid."""
+
+    def timed(s, ct, buf):
+        return jax.jit(
+            lambda b, _ct=ct, _s=s: ops.pack(b, _ct, strategy=_s)
+        ), (buf,)
+
+    return _measure_table(timed, strategies, block_bytes, total_bytes, iters)
+
+
+def measure_unpack_table(
+    strategies=None,
+    block_bytes: Sequence[int] = BLOCK_BYTES,
+    total_bytes: Sequence[int] = TOTAL_BYTES,
+    iters: int = 5,
+) -> Dict[str, List[Tuple[float, float, float]]]:
+    """Measure unpack (packed bytes -> strided destination) over the same
+    grid as :func:`measure_pack_table` — the paper observes pack/unpack
+    asymmetry, so the model must not derive one from the other."""
+
+    def timed(s, ct, buf):
+        packed = jnp.zeros((ct.size,), jnp.uint8)
+        return jax.jit(
+            lambda b, p, _ct=ct, _s=s: ops.unpack(b, p, _ct, strategy=_s)
+        ), (buf, packed)
+
+    return _measure_table(timed, strategies, block_bytes, total_bytes, iters)
+
+
+def measure_copy_table(
+    total_bytes: Sequence[int] = TOTAL_BYTES, iters: int = 5
+) -> List[Tuple[float, float]]:
+    """Contiguous device copy time over sizes (read + write of ``n``
+    bytes — the staging floor every pack strategy competes with)."""
+    rows = []
+    for total in total_bytes:
+        x = jnp.zeros((total,), jnp.uint8)
+        jfn = jax.jit(lambda a: a + jnp.uint8(1))  # forced read+write
+        rows.append((math.log2(total), time_fn(jfn, x, iters=iters)))
+    return rows
+
+
+def measure_wire_table(
+    total_bytes: Sequence[int] = TOTAL_BYTES,
+    iters: int = 5,
+    axis_name: str = "wire",
+) -> List[Tuple[float, float]]:
+    """One-hop collective time over message sizes: a ``ppermute`` ring
+    across every visible device (a 1-device mesh self-permutes, which
+    still prices collective dispatch).  Rows are (log2_bytes, sec)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    devs = jax.devices()
+    n = len(devs)
+    mesh = Mesh(np.array(devs), (axis_name,))
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    rows = []
+    for total in total_bytes:
+        def body(x):
+            return jax.lax.ppermute(x, axis_name, perm)
+
+        fn = jax.jit(
+            shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                      check_vma=False)
+        )
+        x = jnp.zeros((total,), jnp.uint8)
+        rows.append((math.log2(total), time_fn(fn, x, iters=iters)))
+    return rows
+
+
+def fit_latency_bandwidth(
+    rows: Sequence[Tuple[float, float]]
+) -> Tuple[Optional[float], Optional[float]]:
+    """Least-squares fit of t(n) = latency + n / bandwidth over
+    (log2_bytes, sec) rows.  Either term is None when the sweep is too
+    small or noisy to resolve it (a non-positive intercept or slope) —
+    consumers treat None as "no fit" and fall back to analytic
+    constants; a clamped 0.0 would instead price extra hops as free."""
+    if len(rows) < 2:
+        return None, None
+    nbytes = np.asarray([2.0 ** r[0] for r in rows])
+    secs = np.asarray([r[1] for r in rows])
+    design = np.stack([np.ones_like(nbytes), nbytes], axis=1)
+    (lat, inv_bw), *_ = np.linalg.lstsq(design, secs, rcond=None)
+    return (
+        float(lat) if lat > 0 else None,
+        float(1.0 / inv_bw) if inv_bw > 0 else None,
+    )
+
+
+def calibrate_params(
+    name: Optional[str] = None,
+    reduced: bool = False,
+    strategies=None,
+    iters: Optional[int] = None,
+) -> SystemParams:
+    """Full-term calibration: pack + unpack + wire + contiguous copy.
+
+    Returns a :class:`SystemParams` whose measured tables drive every
+    term of the model's T = T_pack + T_link + T_unpack; the analytic
+    constants remain as fallbacks for uncovered strategies.
+    """
+    blocks = REDUCED_BLOCK_BYTES if reduced else BLOCK_BYTES
+    totals = REDUCED_TOTAL_BYTES if reduced else TOTAL_BYTES
+    it = iters if iters is not None else (2 if reduced else 5)
+
+    pack = measure_pack_table(strategies, blocks, totals, iters=it)
+    unpack = measure_unpack_table(strategies, blocks, totals, iters=it)
+    copy = measure_copy_table(totals, iters=it)
+    wire = measure_wire_table(totals, iters=it)
+    wire_lat, wire_bw = fit_latency_bandwidth(wire)
+
+    backend = jax.default_backend()
+    base = TPU_V5E if backend == "tpu" else dataclasses.replace(
+        TPU_V5E, name=f"{backend}_measured"
+    )
+    # the largest contiguous copy moves 2*total bytes (read + write):
+    # use it as the measured memory-bandwidth fallback term
+    hbm_bw = base.hbm_bw
+    if copy and copy[-1][1] > 0:
+        hbm_bw = 2.0 * (2.0 ** copy[-1][0]) / copy[-1][1]
+    return dataclasses.replace(
+        base,
+        name=name or f"{backend}_calibrated",
+        hbm_bw=hbm_bw,
+        pack_table={k: tuple(v) for k, v in pack.items() if v},
+        unpack_table={k: tuple(v) for k, v in unpack.items() if v},
+        wire_table=tuple(wire),
+        copy_table=tuple(copy),
+        wire_latency=wire_lat,
+        wire_bw=wire_bw,
+        ici_bw=wire_bw if wire_bw else base.ici_bw,
+        ici_latency=wire_lat if wire_lat else base.ici_latency,
+    )

@@ -1,0 +1,178 @@
+"""Persistent strategy-selection cache + audit log.
+
+The paper's selection is a pure function of (datatype, system
+parameters), memoized per committed type (§6.3, 277 ns cached).  This
+module makes those decisions *durable*: every selection the
+:class:`~repro.comm.perfmodel.PerfModel` makes is recorded as a
+:class:`Decision` keyed by the datatype's content fingerprint, can be
+saved to JSON, reloaded in a fresh process, and handed back to a model
+(``PerfModel(params, decisions=...)``) — which then *pins* the recorded
+strategy instead of re-deriving it.  Pinning is what lets CI assert the
+same choices on any runner, and what lets a production job skip the
+model entirely after its first run.
+
+``report()`` dumps the audit log: datatype signature -> chosen strategy
+-> estimated terms, one line per decision.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.comm.perfmodel import StrategyEstimate
+
+__all__ = ["Decision", "DecisionCache"]
+
+#: bump when Decision's schema changes incompatibly
+DECISIONS_FORMAT = 1
+
+Key = Tuple[str, int, int, bool]
+
+
+@dataclass(frozen=True)
+class Decision:
+    """One audited strategy selection."""
+
+    fingerprint: str        # CommittedType content hash
+    incount: int
+    hops: int
+    allow_bounding: bool
+    strategy: str           # the winner
+    t_pack: float           # estimated terms at decision time (seconds)
+    t_link: float
+    t_unpack: float
+    signature: str = ""     # human-readable datatype description
+
+    @property
+    def total(self) -> float:
+        return self.t_pack + self.t_link + self.t_unpack
+
+    @property
+    def key(self) -> Key:
+        return (self.fingerprint, self.incount, self.hops, self.allow_bounding)
+
+
+def _describe(ct) -> str:
+    """Short human-readable signature for the audit log."""
+    if ct is None:
+        return ""
+    b = ct.block
+    if b is None:
+        return f"{ct.kernel.value} size={ct.size} extent={ct.extent}"
+    return (
+        f"{ct.kernel.value} counts={list(b.counts)} strides={list(b.strides)}"
+        f" size={ct.size}"
+    )
+
+
+class DecisionCache:
+    """Fingerprint-keyed decision store: lookup/record for the model,
+    load/save for persistence, report() for the audit dump."""
+
+    def __init__(self, decisions: Optional[List[Decision]] = None):
+        self._by_key: Dict[Key, Decision] = {}
+        self.log: List[Decision] = []      # insertion-ordered audit trail
+        self.pinned_hits = 0               # lookups served from the cache
+        for d in decisions or ():
+            self._insert(d)
+
+    def _insert(self, d: Decision) -> None:
+        self._by_key[d.key] = d
+        self.log.append(d)
+
+    # -- model-facing ----------------------------------------------------
+    def lookup(
+        self, fingerprint: str, incount: int, hops: int, allow_bounding: bool
+    ) -> Optional[Decision]:
+        d = self._by_key.get((fingerprint, incount, hops, allow_bounding))
+        if d is not None:
+            self.pinned_hits += 1
+        return d
+
+    def record(
+        self,
+        fingerprint: str,
+        incount: int,
+        hops: int,
+        allow_bounding: bool,
+        estimate: StrategyEstimate,
+        ct=None,
+    ) -> Decision:
+        d = Decision(
+            fingerprint=fingerprint,
+            incount=incount,
+            hops=hops,
+            allow_bounding=allow_bounding,
+            strategy=estimate.strategy,
+            t_pack=estimate.t_pack,
+            t_link=estimate.t_link,
+            t_unpack=estimate.t_unpack,
+            signature=_describe(ct),
+        )
+        self._insert(d)
+        return d
+
+    # -- persistence -----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "format": DECISIONS_FORMAT,
+                "decisions": [asdict(d) for d in self.log],
+            },
+            indent=2,
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "DecisionCache":
+        d = json.loads(s)
+        if d.get("format") != DECISIONS_FORMAT:
+            # refusing loudly beats silently un-pinning every selection
+            # (and letting the next save() overwrite the old audit log)
+            raise ValueError(
+                f"decision file format {d.get('format')!r} != "
+                f"{DECISIONS_FORMAT}; re-record or migrate it"
+            )
+        return DecisionCache([Decision(**row) for row in d["decisions"]])
+
+    def save(self, path: Union[str, Path]) -> Path:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(self.to_json())
+        tmp.replace(p)  # atomic: concurrent readers never see a torn file
+        return p
+
+    @staticmethod
+    def load(path: Union[str, Path]) -> "DecisionCache":
+        """Load a saved cache; an absent file yields an empty cache (the
+        first run of a job starts cold and records)."""
+        p = Path(path)
+        if not p.exists():
+            return DecisionCache()
+        return DecisionCache.from_json(p.read_text())
+
+    # -- audit -----------------------------------------------------------
+    def report(self) -> str:
+        """The audit log as aligned text: one selection per line."""
+        lines = [
+            f"{'fingerprint':16s}  {'n':>3s} {'hop':>3s} {'strategy':10s}"
+            f" {'t_pack_us':>10s} {'t_link_us':>10s} {'t_unpack_us':>11s}"
+            f" {'total_us':>10s}  signature"
+        ]
+        for d in self.log:
+            lines.append(
+                f"{d.fingerprint:16s}  {d.incount:3d} {d.hops:3d}"
+                f" {d.strategy:10s} {d.t_pack * 1e6:10.3f}"
+                f" {d.t_link * 1e6:10.3f} {d.t_unpack * 1e6:11.3f}"
+                f" {d.total * 1e6:10.3f}  {d.signature}"
+            )
+        return "\n".join(lines)
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def __contains__(self, key: object) -> bool:
+        return key in self._by_key

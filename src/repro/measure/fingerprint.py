@@ -1,0 +1,69 @@
+"""Stable content fingerprints for measurement & selection caches.
+
+TEMPI's measured system parameters are recorded "to the file system"
+once and reused across runs (paper §6.3) — so every key in the measured
+database must survive the process that created it.  Two kinds of key:
+
+* **datatype fingerprint** — :func:`type_fingerprint` hashes the
+  *canonical* structure of a committed type (StridedBlock / IR tree +
+  kernel kind + word width + size/extent, see
+  ``CommittedType.structure_key``).  Re-committing the same description
+  in a different registry — or a different process — yields the same
+  fingerprint; ``id(ct)`` does not.  Fig.-2-equivalent constructions
+  (different build, same canonical object) also share a fingerprint,
+  which is exactly the paper's canonicalization argument.
+
+* **system fingerprint** — :func:`system_fingerprint` hashes the
+  backend/topology a calibration was taken on (platform, device kind,
+  device count, jax version), so a params database never serves numbers
+  measured on different hardware.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Tuple
+
+from repro.core.commit import CommittedType
+
+__all__ = [
+    "type_fingerprint",
+    "system_fingerprint",
+    "system_description",
+    "FINGERPRINT_BYTES",
+]
+
+#: hex digits kept from the sha256 (64-bit keys: ample for cache keying,
+#: short enough to read in audit reports and filenames)
+FINGERPRINT_BYTES = 16
+
+
+def type_fingerprint(ct: CommittedType) -> str:
+    """Content hash of a committed type's canonical structure.
+
+    Delegates to the core hook so the runtime and the measurement layer
+    can never disagree about a type's identity.
+    """
+    return ct.fingerprint
+
+
+def system_description(ndev: Optional[int] = None) -> Tuple[str, ...]:
+    """Human-readable (platform, device_kind, device_count, jax_version)
+    tuple describing the running system."""
+    import jax
+
+    devs = jax.devices()
+    kind = devs[0].device_kind if devs else "none"
+    return (
+        jax.default_backend(),
+        str(kind),
+        str(ndev if ndev is not None else len(devs)),
+        jax.__version__,
+    )
+
+
+def system_fingerprint(ndev: Optional[int] = None) -> str:
+    """Stable hash of :func:`system_description` — the key a stored
+    :class:`~repro.comm.perfmodel.SystemParams` lives under."""
+    desc = "/".join(system_description(ndev))
+    return hashlib.sha256(desc.encode()).hexdigest()[:FINGERPRINT_BYTES]

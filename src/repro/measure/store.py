@@ -1,0 +1,165 @@
+"""Versioned on-disk SystemParams database (paper §6.3: measurements are
+recorded once to the filesystem and reused by every later run).
+
+Layout: one JSON file per system fingerprint under a root directory
+(``$REPRO_MEASURE_DIR`` or ``~/.cache/repro/measure``).  Each file is an
+envelope::
+
+    {
+      "format": 2,                       # store format version
+      "system": "<system fingerprint>",  # backend/topology key
+      "system_description": [...],       # human-readable provenance
+      "params": { ... SystemParams ... }
+    }
+
+``load()`` refuses mismatched format versions and foreign system
+fingerprints, so a database can never silently serve numbers measured
+on different hardware or in an old schema.  ``load_or_calibrate()`` is
+the one-call entry point: read the stored table for *this* system, or
+run the calibration sweep once and persist it.
+
+A reduced-grid calibration taken on the CI runner is checked in as
+``ci_params.json`` next to this module; loading it (``load_ci_params``)
+pins strategy-selection decisions deterministically in CI regardless of
+the runner's actual speed that day.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Optional, Union
+
+from repro.comm.perfmodel import SystemParams
+from repro.measure.bench import calibrate_params
+from repro.measure.fingerprint import system_description, system_fingerprint
+
+__all__ = [
+    "STORE_FORMAT",
+    "ParamsStore",
+    "default_store",
+    "load_or_calibrate",
+    "ci_params_path",
+    "load_ci_params",
+]
+
+#: bump when the envelope or SystemParams schema changes incompatibly
+STORE_FORMAT = 2
+
+_ENV_ROOT = "REPRO_MEASURE_DIR"
+
+
+class ParamsStore:
+    """A directory of system-fingerprint-keyed SystemParams envelopes."""
+
+    def __init__(self, root: Optional[Union[str, Path]] = None):
+        if root is None:
+            root = os.environ.get(_ENV_ROOT) or (
+                Path.home() / ".cache" / "repro" / "measure"
+            )
+        self.root = Path(root)
+
+    def path_for(self, system: Optional[str] = None) -> Path:
+        return self.root / f"{system or system_fingerprint()}.json"
+
+    # -- write ----------------------------------------------------------
+    def save(
+        self,
+        params: SystemParams,
+        system: Optional[str] = None,
+        path: Optional[Union[str, Path]] = None,
+    ) -> Path:
+        system = system or system_fingerprint()
+        envelope = {
+            "format": STORE_FORMAT,
+            "system": system,
+            "system_description": list(system_description()),
+            "params": json.loads(params.to_json()),
+        }
+        out = Path(path) if path is not None else self.path_for(system)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        tmp = out.with_suffix(".tmp")
+        tmp.write_text(json.dumps(envelope, indent=2))
+        tmp.replace(out)  # atomic: concurrent readers never see a torn file
+        return out
+
+    # -- read -----------------------------------------------------------
+    @staticmethod
+    def _parse(path: Union[str, Path]):
+        """One envelope file -> (SystemParams, system fingerprint) or
+        (None, None) when missing/foreign-format.  Bare SystemParams
+        JSON (the ``repro.comm.calibrate`` output) is accepted too, for
+        hand-written files (its system field is None)."""
+        p = Path(path)
+        if not p.exists():
+            return None, None
+        d = json.loads(p.read_text())
+        system = None
+        if "params" in d:
+            if d.get("format") != STORE_FORMAT:
+                return None, None
+            system = d.get("system")
+            d = d["params"]
+        if "name" not in d:
+            return None, None
+        return SystemParams.from_json(json.dumps(d)), system
+
+    @staticmethod
+    def read_envelope(path: Union[str, Path]) -> Optional[SystemParams]:
+        """Parse one envelope file regardless of which system recorded
+        it; None when missing or foreign-format."""
+        return ParamsStore._parse(path)[0]
+
+    def load(self, system: Optional[str] = None) -> Optional[SystemParams]:
+        """Stored params for ``system`` (default: the running system),
+        or None when absent, incompatibly versioned, or recorded for a
+        different system fingerprint."""
+        system = system or system_fingerprint()
+        params, recorded = self._parse(self.path_for(system))
+        if params is None or recorded != system:
+            return None
+        return params
+
+    def load_or_calibrate(
+        self,
+        name: Optional[str] = None,
+        reduced: bool = False,
+        force: bool = False,
+    ) -> SystemParams:
+        """The §6.3 lifecycle in one call: reuse the stored measurement
+        for this system fingerprint, or calibrate once and persist."""
+        if not force:
+            got = self.load()
+            if got is not None:
+                return got
+        params = calibrate_params(name=name, reduced=reduced)
+        self.save(params)
+        return params
+
+
+def default_store() -> ParamsStore:
+    """Store rooted at ``$REPRO_MEASURE_DIR`` (or the user cache dir)."""
+    return ParamsStore()
+
+
+def load_or_calibrate(
+    name: Optional[str] = None, reduced: bool = False, force: bool = False
+) -> SystemParams:
+    """Module-level shorthand over :meth:`ParamsStore.load_or_calibrate`."""
+    return default_store().load_or_calibrate(name, reduced, force)
+
+
+def ci_params_path() -> Path:
+    """The checked-in reduced-grid CPU calibration used to pin CI
+    selection decisions."""
+    return Path(__file__).parent / "ci_params.json"
+
+
+def load_ci_params() -> SystemParams:
+    params = ParamsStore.read_envelope(ci_params_path())
+    if params is None:
+        raise FileNotFoundError(
+            f"checked-in CI params missing or unreadable: {ci_params_path()}"
+        )
+    return params
