@@ -3,7 +3,13 @@
 Runs the 26-neighbor exchange on an 8-rank emulated mesh in a
 subprocess (device count must be set before jax init), reporting
 per-iteration time for both interposer modes and the pack-only
-latency (the paper's phase split).
+latency (the paper's phase split), plus the exchange's wire-byte
+accounting (exact ragged payload vs what the padded layout would move).
+
+``--assert-ragged`` runs the wire-bytes regression gate instead (CI):
+trace the fused halo step in interpret mode and FAIL (exit 1) if the
+bytes its collectives move exceed the ragged optimum — the sum of
+per-peer packed extents.
 """
 
 from __future__ import annotations
@@ -23,7 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.comm import Communicator, policy_for_mode
-from repro.halo import HaloSpec, halo_exchange, make_halo_types
+from repro.halo import HaloSpec, halo_exchange, make_halo_plan
 
 spec = HaloSpec(grid=(2, 2, 2), interior=(16, 16, 16), radius=2)
 R = spec.nranks
@@ -34,11 +40,14 @@ state0 = jnp.asarray(
 
 for mode in ("baseline", "tempi"):
     comm = Communicator(axis_name="ranks", policy=policy_for_mode(mode))
-    types = make_halo_types(spec, comm)
+    plan = make_halo_plan(spec, comm)
     fn = jax.jit(shard_map(
-        lambda x: halo_exchange(x, spec, comm, "ranks", types),
+        lambda x: halo_exchange(x, spec, comm, "ranks", plan=plan),
         mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"),
         check_vma=False))
+    print(f"fig12/wire-bytes/{mode},{plan.wire_bytes},"
+          f"schedule={plan.wire.schedule};ops={plan.wire.wire_ops};"
+          f"padded_layout_would_move={plan.wire.nranks * plan.wire.seg_bytes}")
     out = fn(state0); jax.block_until_ready(out)
     t0 = time.perf_counter()
     iters = 3
@@ -64,20 +73,66 @@ for mode in ("baseline", "tempi"):
 """
 
 
-def run() -> None:
+#: the CI regression gate: fused-path bytes must equal the ragged
+#: optimum — grows a diff the moment any padding creeps back in
+_ASSERT_CODE = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.comm import Communicator, FixedPolicy, collective_payload_bytes
+from repro.halo import HaloSpec, halo_exchange, make_halo_plan
+
+spec = HaloSpec(grid=(2, 2, 2), interior=(6, 5, 4), radius=2)
+R = spec.nranks
+az, ay, ax = spec.alloc
+mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
+# forced pack strategy: the ragged optimum is exactly sum(ct.size)
+comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+plan = make_halo_plan(spec, comm)
+fn = jax.jit(shard_map(
+    lambda x: halo_exchange(x, spec, comm, "ranks", plan=plan),
+    mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"), check_vma=False))
+x = jnp.zeros((R * az, ay, ax), jnp.float32)
+
+ragged_optimum = sum(ct.packed_extent() for ct in plan.send_cts)
+counts = collective_payload_bytes(fn, x)
+print(f"wire-bytes-check: traced={counts['total']} "
+      f"plan={plan.wire_bytes} optimum={ragged_optimum} "
+      f"schedule={plan.wire.schedule} ops={counts['ops']}")
+assert plan.wire_bytes == ragged_optimum, (plan.wire_bytes, ragged_optimum)
+assert counts["total"] <= ragged_optimum, (
+    f"fused path moves {counts['total']} B > ragged optimum "
+    f"{ragged_optimum} B — padding has crept back into the wire layout")
+# the exchange must still be correct, in interpret mode, end to end
+out = np.asarray(fn(jnp.asarray(
+    np.random.default_rng(0).normal(size=(R * az, ay, ax)).astype(np.float32))))
+assert np.isfinite(out).all()
+print("WIRE_BYTES_OK")
+"""
+
+
+def run(assert_ragged: bool = False) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
+    code = _ASSERT_CODE if assert_ragged else _CODE
     proc = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(_CODE)],
+        [sys.executable, "-c", textwrap.dedent(code)],
         env=env, capture_output=True, text=True, timeout=1200,
     )
     if proc.returncode != 0:
         print(f"fig12/FAILED,0,{proc.stderr.splitlines()[-1] if proc.stderr else 'unknown'}")
+        if assert_ragged:
+            sys.stderr.write(proc.stderr)
+            sys.exit(1)
         return
     sys.stdout.write(proc.stdout)
+    if assert_ragged and "WIRE_BYTES_OK" not in proc.stdout:
+        sys.exit(1)
 
 
 if __name__ == "__main__":
-    run()
+    run(assert_ragged="--assert-ragged" in sys.argv[1:])

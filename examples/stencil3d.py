@@ -35,7 +35,7 @@ from repro.comm import Communicator, MODES, policy_for_mode
 from repro.halo import (
     HaloSpec,
     halo_exchange,
-    make_halo_types,
+    make_halo_plan,
     overlapped_stencil_iteration,
     stencil_iterations,
 )
@@ -59,14 +59,14 @@ def main():
 
     comm = Communicator(axis_name="ranks", policy=policy_for_mode(args.mode))
     mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
-    types = make_halo_types(spec, comm)
+    plan = make_halo_plan(spec, comm)  # types + strategies + wire layout, once
 
     def iteration(local):
         if args.overlap:
             return overlapped_stencil_iteration(
-                local, spec, comm, "ranks", types, steps=2
+                local, spec, comm, "ranks", steps=2, plan=plan
             )
-        local = halo_exchange(local, spec, comm, "ranks", types)
+        local = halo_exchange(local, spec, comm, "ranks", plan=plan)
         return stencil_iterations(local, spec, steps=2)
 
     step = jax.jit(
@@ -93,7 +93,10 @@ def main():
     print(f"mode={args.mode} overlap={args.overlap} ranks={R} "
           f"interior={spec.interior} radius={spec.radius}")
     print(f"committed datatypes: {stats['committed_types']} (52 send/recv regions)")
-    print(f"wire collectives issued per traced exchange: {stats['wire_ops']} (fused)")
+    print(f"wire schedule: {plan.wire.schedule} "
+          f"({plan.wire.wire_ops} collectives, "
+          f"{plan.wire_bytes} exact bytes, "
+          f"padding {plan.wire.padding_bytes})")
     print(f"time per iteration (exchange + 2 stencil steps): {dt*1e3:.2f} ms")
     print(f"checksum: {float(jnp.sum(state)):.6e}")
 

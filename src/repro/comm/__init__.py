@@ -18,19 +18,30 @@ from repro.comm.api import (
     SendRequest,
     Strategy,
     StrategyRegistry,
+    WirePlan,
     as_communicator,
     default_registry,
+    plan_neighbor_alltoallv,
     policy_for_mode,
     register_strategy,
     resolve_strategy,
 )
+from repro.comm.compress import INT8_WIRE, Int8Wire
 from repro.comm.interposer import Interposer
 from repro.comm.perfmodel import PerfModel, StrategyEstimate, SystemParams, TPU_V5E
+from repro.comm.wireplan import WireGroup, collective_payload_bytes, plan_wire
+
+# the compressed-wire plugin ships registered (selectable=False: lossy,
+# opt-in via FixedPolicy) so its wire accounting is exercised everywhere
+if Int8Wire.name not in default_registry():
+    register_strategy(INT8_WIRE)
 
 __all__ = [
     "BaselinePolicy",
     "Communicator",
     "FixedPolicy",
+    "INT8_WIRE",
+    "Int8Wire",
     "Interposer",
     "MODES",
     "ModelPolicy",
@@ -43,8 +54,13 @@ __all__ = [
     "StrategyRegistry",
     "SystemParams",
     "TPU_V5E",
+    "WireGroup",
+    "WirePlan",
     "as_communicator",
+    "collective_payload_bytes",
     "default_registry",
+    "plan_neighbor_alltoallv",
+    "plan_wire",
     "policy_for_mode",
     "register_strategy",
     "resolve_strategy",

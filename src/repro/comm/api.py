@@ -22,9 +22,16 @@ than string comparisons scattered through the runtime:
   XLA can overlap independent exchanges; :meth:`Request.wait`
   materializes the unpack), and a fused
   :meth:`Communicator.neighbor_alltoallv` — the paper's actual
-  ``MPI_Alltoallv`` halo transport — that packs every region into one
-  buffer with a host-computed offset table and issues a **single**
-  collective.
+  ``MPI_Alltoallv`` halo transport — that packs every region at its
+  **exact** wire extent into one flat buffer described by a
+  :class:`~repro.comm.wireplan.WirePlan` and issues the cheapest wire
+  schedule that can carry that ragged layout (a native ragged
+  collective, a byte-exact uniform ``all_to_all``, or one ``ppermute``
+  per delta class — see ``repro.comm.wireplan`` for the ladder).  The
+  old padded-class layout is gone: the plan's ``wire_bytes`` is the sum
+  of per-peer packed extents, and that same count is what the
+  :class:`~repro.comm.perfmodel.PerfModel` prices and the
+  ``DecisionCache`` records.
 
 ``repro.comm.interposer.Interposer`` remains as a thin deprecated shim
 over :class:`Communicator` (mode strings map to :class:`Policy` objects
@@ -33,8 +40,6 @@ via :func:`policy_for_mode`).
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -43,7 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.commit import CommittedType, TypeRegistry
+from repro import compat
+from repro.core.commit import CommittedType, TypeRegistry, WireSegment
 from repro.core.datatypes import Datatype
 from repro.core.strided_block import StridedBlock
 from repro.kernels import ops
@@ -53,14 +59,15 @@ from repro.kernels.geometry import (
     PackGeometry,
     plan_geometry,
 )
-from repro.kernels.pack import pack_dma, pack_rows
-from repro.kernels.unpack import unpack_dma, unpack_rows
+from repro.kernels.pack import pack_dma, pack_ragged, pack_rows
+from repro.kernels.unpack import unpack_dma, unpack_ragged, unpack_rows
 from repro.comm.perfmodel import (
     PerfModel,
     StrategyEstimate,
     SystemParams,
     TPU_V5E,
 )
+from repro.comm.wireplan import WireGroup, WirePlan, plan_wire
 
 __all__ = [
     "Strategy",
@@ -79,6 +86,9 @@ __all__ = [
     "SendRequest",
     "Communicator",
     "as_communicator",
+    "WirePlan",
+    "WireGroup",
+    "plan_neighbor_alltoallv",
 ]
 
 StrategyLike = Union[str, "Strategy", None]
@@ -150,17 +160,32 @@ class Strategy:
         return cap is None or sb.num_blocks * incount <= cap
 
     def wire_bytes(self, ct: CommittedType, incount: int = 1) -> int:
-        return ct.size * incount
+        return ct.packed_extent(incount)
+
+    def wire_segment(
+        self, ct: CommittedType, incount: int = 1, offset: int = 0
+    ) -> WireSegment:
+        """The exact wire-segment descriptor this strategy's payload for
+        ``ct`` occupies — the unit every :class:`WirePlan` is built
+        from.  Strategies whose wire format differs from the packed
+        member bytes (bounding windows, compressed payloads) inherit
+        this and only override :meth:`wire_bytes`."""
+        return ct.wire_segment(
+            offset=offset, incount=incount, nbytes=self.wire_bytes(ct, incount)
+        )
 
     def plan(
         self, model: PerfModel, ct: CommittedType, incount: int, hops: int = 1
     ) -> StrategyEstimate:
-        """Full strategy estimate (paper Eqs. 1-3 analogue)."""
+        """Full strategy estimate (paper Eqs. 1-3 analogue), priced on
+        the exact wire-segment extent."""
+        seg = self.wire_segment(ct, incount)
         return StrategyEstimate(
             self.name,
             self.model_pack(model, ct, incount),
-            model.t_link(self.wire_bytes(ct, incount), hops),
+            model.t_link(seg.nbytes, hops),
             self.model_unpack(model, ct, incount),
+            wire_bytes=seg.nbytes,
         )
 
     # -- execution --------------------------------------------------------
@@ -413,9 +438,10 @@ class Bounding(Strategy):
             t_extract = ROWS.model_pack(model, ct, incount) + ROWS.model_unpack(
                 model, ct, incount
             )
+        nbytes = self.wire_bytes(ct, incount)
         return StrategyEstimate(
-            self.name, 0.0, model.t_link(self.wire_bytes(ct, incount), hops),
-            t_extract,
+            self.name, 0.0, model.t_link(nbytes, hops), t_extract,
+            wire_bytes=nbytes,
         )
 
     def pack(self, buf, ct, incount=1, interpret=None):
@@ -655,104 +681,39 @@ class Request:
 
 class SendRequest(Request):
     """An issued wire transfer: holds the (traced) received payload plus
-    the metadata ``irecv`` needs to unpack it."""
+    the metadata ``irecv`` needs to unpack it.  ``segment`` is the exact
+    :class:`~repro.core.commit.WireSegment` the payload occupied on the
+    wire (what the communicator's byte accounting recorded)."""
 
     def __init__(self, wire: jax.Array, strategy: Strategy,
-                 send_ct: CommittedType, incount: int):
+                 send_ct: CommittedType, incount: int,
+                 segment: Optional[WireSegment] = None):
         super().__init__(value=wire)
         self.strategy = strategy
         self.send_ct = send_ct
         self.incount = incount
+        self.segment = segment
 
 
 # ===========================================================================
 # fused neighborhood alltoallv planning (host-side, cached)
 # ===========================================================================
 
-@dataclass(frozen=True)
-class NeighborPlan:
-    """Host-computed layout of a fused neighborhood exchange.
-
-    Transfers whose destination is the same rank *for every rank* (the
-    periodic-grid delta classes of a halo exchange) share one wire
-    segment; when each rank's group->peer map is injective the whole
-    exchange is ONE ``all_to_all`` over destination-ordered rows
-    (``fused``); otherwise it degrades to one ``ppermute`` per group —
-    still far fewer wire ops than one per transfer.
-    """
-
-    nranks: int
-    groups: Tuple[Tuple[int, ...], ...]          # transfer ids per group
-    offsets: Tuple[Tuple[int, ...], ...]         # byte offset per transfer
-    seg_bytes: int                               # padded row size
-    fused: bool
-    send_rows: Tuple[Tuple[int, ...], ...]       # [rank][dest] -> group|G
-    recv_rows: Tuple[Tuple[int, ...], ...]       # [rank][group] -> source
-
-
-@functools.lru_cache(maxsize=256)
 def plan_neighbor_alltoallv(
     sizes: Tuple[int, ...],
     perms: Tuple[Tuple[Tuple[int, int], ...], ...],
-) -> NeighborPlan:
-    """Group ``len(sizes)`` transfers (one perm each) into a fused wire
-    layout.  Every perm must be a full permutation of the same rank set."""
-    n = len(perms)
-    ranks = sorted({s for p in perms for s, _ in p})
-    nranks = len(ranks)
-    if ranks != list(range(nranks)):
-        raise ValueError("perms must cover ranks 0..R-1")
-    dst: List[Dict[int, int]] = []
-    src: List[Dict[int, int]] = []
-    for i, p in enumerate(perms):
-        d = dict(p)
-        if sorted(d) != ranks or sorted(d.values()) != ranks:
-            raise ValueError(f"perm {i} is not a permutation of the ranks")
-        dst.append(d)
-        src.append({v: k for k, v in d.items()})
-
-    # group transfers by their full destination vector (rank-uniform)
-    key_to_group: Dict[Tuple[int, ...], int] = {}
-    groups: List[List[int]] = []
-    for i in range(n):
-        key = tuple(dst[i][r] for r in range(nranks))
-        g = key_to_group.setdefault(key, len(groups))
-        if g == len(groups):
-            groups.append([])
-        groups[g].append(i)
-    ngroups = len(groups)
-
-    offsets, totals = [], []
-    for members in groups:
-        offs, acc = [], 0
-        for i in members:
-            offs.append(acc)
-            acc += sizes[i]
-        offsets.append(tuple(offs))
-        totals.append(acc)
-    seg = max(totals) if totals else 0
-
-    # per-rank tables
-    send_rows, recv_rows = [], []
-    fused = ngroups <= nranks
-    for r in range(nranks):
-        dests = [dst[members[0]][r] for members in groups]
-        if len(set(dests)) != ngroups:
-            fused = False
-        row = [ngroups] * nranks  # ngroups = the zero dummy row
-        for g, d in enumerate(dests):
-            row[d] = g
-        send_rows.append(tuple(row))
-        recv_rows.append(tuple(src[members[0]][r] for members in groups))
-
-    return NeighborPlan(
-        nranks=nranks,
-        groups=tuple(tuple(m) for m in groups),
-        offsets=tuple(offsets),
-        seg_bytes=seg,
-        fused=fused,
-        send_rows=tuple(send_rows),
-        recv_rows=tuple(recv_rows),
+    fingerprints: Optional[Tuple[str, ...]] = None,
+    uniform_waste_tolerance: float = 0.0,
+) -> WirePlan:
+    """Group ``len(sizes)`` transfers (one full permutation each) into
+    an exact-byte :class:`WirePlan`.  Thin alias over
+    :func:`repro.comm.wireplan.plan_wire` kept as the public planning
+    entry point of this module."""
+    return plan_wire(
+        tuple(sizes),
+        tuple(tuple(map(tuple, p)) for p in perms),
+        fingerprints=fingerprints,
+        uniform_waste_tolerance=uniform_waste_tolerance,
     )
 
 
@@ -788,9 +749,10 @@ class Communicator:
         self.axis_name = axis_name
         self.registry = registry or TypeRegistry()
         self.strategies = strategies or default_registry()
-        self.model = PerfModel(params, decisions=decisions)
+        self.model = PerfModel(params, decisions=decisions, axis=axis_name)
         self.policy = policy or ModelPolicy()
         self.wire_ops = 0  # collectives issued through this communicator
+        self.wire_payload_bytes = 0  # exact bytes those collectives carried
 
     # ------------------------------------------------------------------
     def _axis(self, axis_name: Optional[str]) -> str:
@@ -842,10 +804,12 @@ class Communicator:
         the returned request carries the (traced) received payload."""
         axis = self._axis(axis_name)
         s = self.select(ct, incount, wire=True)
+        seg = s.wire_segment(ct, incount)
         payload = s.pack(buf, ct, incount)
         wire = lax.ppermute(payload, axis, list(perm))
         self.wire_ops += 1
-        return SendRequest(wire, s, ct, incount)
+        self.wire_payload_bytes += seg.nbytes
+        return SendRequest(wire, s, ct, incount, segment=seg)
 
     def irecv(
         self,
@@ -881,6 +845,108 @@ class Communicator:
     # ------------------------------------------------------------------
     # fused neighborhood alltoallv (the paper's MPI_Alltoallv halo path)
     # ------------------------------------------------------------------
+    def plan_neighbor(
+        self,
+        send_cts: Sequence[CommittedType],
+        perms: Sequence[Sequence[Tuple[int, int]]],
+        strategies: Optional[Sequence[Strategy]] = None,
+        uniform_waste_tolerance: float = 0.0,
+    ) -> Tuple[Tuple[Strategy, ...], WirePlan]:
+        """Select a strategy per transfer and lay the exchange out as an
+        exact-byte :class:`WirePlan`.  Call once at setup time (e.g.
+        ``make_halo_step``) and hand the result to
+        :meth:`ineighbor_alltoallv` to keep the per-call host work at
+        dictionary lookups.  The plan is priced through the performance
+        model and recorded (``wire_bytes`` included) in the attached
+        :class:`~repro.measure.decisions.DecisionCache`, if any."""
+        strats = (
+            tuple(strategies)
+            if strategies is not None
+            else tuple(self.select(ct, 1, wire=True) for ct in send_cts)
+        )
+        segs = [strats[i].wire_segment(send_cts[i]) for i in range(len(strats))]
+        plan = plan_wire(
+            tuple(s.nbytes for s in segs),
+            tuple(tuple(map(tuple, p)) for p in perms),
+            fingerprints=tuple(s.fingerprint for s in segs),
+            uniform_waste_tolerance=uniform_waste_tolerance,
+        )
+        self.model.price_exchange(plan)
+        return strats, plan
+
+    def _issue_wire(
+        self, wire: jax.Array, plan: WirePlan, axis: str
+    ) -> List[jax.Array]:
+        """Put the flat exact-byte wire buffer on the link with the
+        plan's schedule; returns one received payload per group (exact
+        ``nbytes`` for the ragged schedules, a padded row — harmless,
+        segment slicing never reads the tail — for ``uniform``)."""
+        if plan.schedule == "grouped":
+            rows = []
+            for goff, grp in zip(plan.group_offsets, plan.groups):
+                payload = lax.dynamic_slice(wire, (goff,), (grp.nbytes,))
+                rows.append(lax.ppermute(payload, axis, list(grp.perm)))
+            return rows
+
+        if plan.schedule == "uniform":
+            parts = []
+            for goff, grp in zip(plan.group_offsets, plan.groups):
+                row = lax.dynamic_slice(wire, (goff,), (grp.nbytes,))
+                if grp.nbytes < plan.seg_bytes:
+                    row = jnp.concatenate(
+                        [row, jnp.zeros((plan.seg_bytes - grp.nbytes,), jnp.uint8)]
+                    )
+                parts.append(row)
+            stacked = jnp.stack(
+                parts + [jnp.zeros((plan.seg_bytes,), jnp.uint8)]
+            )
+            me = lax.axis_index(axis)
+            send = jnp.asarray(np.asarray(plan.send_rows, np.int32))[me]
+            sendbuf = jnp.take(stacked, send, axis=0)
+            got = lax.all_to_all(sendbuf, axis, split_axis=0, concat_axis=0)
+            back = jnp.asarray(np.asarray(plan.recv_rows, np.int32))[me]
+            by_group = jnp.take(got, back, axis=0)
+            return [by_group[g] for g in range(len(plan.groups))]
+
+        # "ragged": one native ragged collective — exact bytes, one op.
+        # Requires lax.ragged_all_to_all (the planner only selects this
+        # schedule when repro.compat reports it available).
+        # Per-peer metadata semantics: input_offsets/send_sizes and
+        # output_offsets are indexed by DESTINATION peer — the chunk this
+        # rank sends to peer d is operand[in_off[d]:+in_sz[d]] and lands
+        # at out_off[d] in d's OUTPUT buffer.  A group travels under the
+        # same global offset on both sides (the flat layout is
+        # rank-uniform), so out_off mirrors in_off.  recv_sizes is
+        # indexed by SOURCE peer: the bytes arriving from s are the
+        # group whose recv_rows entry names s.
+        ngroups = len(plan.groups)  # pragma: no cover - needs new JAX
+        in_off = np.zeros((plan.nranks, plan.nranks), np.int32)
+        in_sz = np.zeros_like(in_off)
+        out_off = np.zeros_like(in_off)
+        recv_sz = np.zeros_like(in_off)
+        for r in range(plan.nranks):
+            for d, g in enumerate(plan.send_rows[r]):
+                if g < ngroups:
+                    in_off[r, d] = plan.group_offsets[g]
+                    in_sz[r, d] = plan.groups[g].nbytes
+                    out_off[r, d] = plan.group_offsets[g]
+            for g, s in enumerate(plan.recv_rows[r]):
+                recv_sz[r, s] = plan.groups[g].nbytes
+        me = lax.axis_index(axis)
+        got = compat.ragged_all_to_all(
+            wire,
+            jnp.zeros_like(wire),
+            jnp.asarray(in_off)[me],
+            jnp.asarray(in_sz)[me],
+            jnp.asarray(out_off)[me],
+            jnp.asarray(recv_sz)[me],
+            axis_name=axis,
+        )
+        return [
+            lax.dynamic_slice(got, (goff,), (grp.nbytes,))
+            for goff, grp in zip(plan.group_offsets, plan.groups)
+        ]
+
     def ineighbor_alltoallv(
         self,
         buf: jax.Array,
@@ -888,62 +954,69 @@ class Communicator:
         recv_cts: Sequence[CommittedType],
         perms: Sequence[Sequence[Tuple[int, int]]],
         axis_name: Optional[str] = None,
+        plan: Optional[WirePlan] = None,
+        strategies: Optional[Sequence[Strategy]] = None,
     ) -> Request:
         """Nonblocking fused neighborhood exchange: transfer ``i`` packs
         ``send_cts[i]`` out of ``buf``, ships it along ``perms[i]``, and
-        unpacks into ``recv_cts[i]`` of the same buffer.  All regions are
-        packed into one contiguous buffer with a host-computed offset
-        table and the whole exchange is ONE collective (see
-        :class:`NeighborPlan`); ``wait()`` materializes the unpacks."""
+        unpacks into ``recv_cts[i]`` of the same buffer.  Every region
+        is packed at its exact wire extent into one flat buffer
+        (:func:`repro.kernels.pack.pack_ragged`) laid out by a
+        :class:`WirePlan`, and the plan's schedule puts exactly those
+        bytes on the wire — no class padding; ``wait()`` materializes
+        the unpacks.  Pass a prebuilt ``plan``/``strategies`` pair (from
+        :meth:`plan_neighbor`) to skip per-call planning."""
         if not (len(send_cts) == len(recv_cts) == len(perms)):
             raise ValueError("send_cts, recv_cts, perms must align")
         axis = self._axis(axis_name)
         n = len(send_cts)
         if n == 0:
             return Request(value=buf)
-        strats = [self.select(ct, 1, wire=True) for ct in send_cts]
-        sizes = tuple(strats[i].wire_bytes(send_cts[i], 1) for i in range(n))
-        plan = plan_neighbor_alltoallv(
-            sizes, tuple(tuple(map(tuple, p)) for p in perms)
+        if strategies is None:
+            strategies = tuple(self.select(ct, 1, wire=True) for ct in send_cts)
+        if plan is None:
+            _, plan = self.plan_neighbor(send_cts, perms, strategies=strategies)
+        elif len(plan.segments) != n:
+            raise ValueError(
+                f"wire plan describes {len(plan.segments)} transfers, "
+                f"got {n} send types"
+            )
+
+        def leaf_packer(strat: Strategy, ct: CommittedType):
+            return lambda b: strat.pack(b, ct)
+
+        wire = pack_ragged(
+            buf,
+            [
+                (plan.segments[i].offset, leaf_packer(strategies[i], send_cts[i]))
+                for i in range(n)
+            ],
+            plan.wire_bytes,
         )
+        group_rows = self._issue_wire(wire, plan, axis)
+        self.wire_ops += plan.wire_ops
+        self.wire_payload_bytes += plan.issued_bytes
 
-        payloads = [strats[i].pack(buf, send_cts[i]) for i in range(n)]
-        rows = []
-        for members, offs in zip(plan.groups, plan.offsets):
-            parts = [payloads[i] for i in members]
-            used = offs[-1] + sizes[members[-1]]
-            if used < plan.seg_bytes:
-                parts.append(jnp.zeros((plan.seg_bytes - used,), jnp.uint8))
-            rows.append(jnp.concatenate(parts) if len(parts) > 1 else parts[0])
-
-        if plan.fused:
-            # destination-ordered rows via the per-rank table, then one
-            # all_to_all; received rows come back in source-rank order
-            stacked = jnp.stack(rows + [jnp.zeros((plan.seg_bytes,), jnp.uint8)])
-            me = lax.axis_index(axis)
-            send = jnp.asarray(np.asarray(plan.send_rows, np.int32))[me]
-            sendbuf = jnp.take(stacked, send, axis=0)
-            got = lax.all_to_all(sendbuf, axis, split_axis=0, concat_axis=0)
-            self.wire_ops += 1
-            back = jnp.asarray(np.asarray(plan.recv_rows, np.int32))[me]
-            by_group = jnp.take(got, back, axis=0)
-            group_rows = [by_group[g] for g in range(len(plan.groups))]
-        else:  # pragma: no cover - exercised only by irregular graphs
-            group_rows = []
-            for members, row in zip(plan.groups, rows):
-                group_rows.append(
-                    lax.ppermute(row, axis, list(perms[members[0]]))
-                )
-                self.wire_ops += 1
+        def leaf_unpacker(strat, recv_ct, send_ct):
+            return lambda dst, part: strat.unpack_wire(
+                self, dst, part, recv_ct, send_ct, 1
+            )
 
         def materialize() -> jax.Array:
             out = buf
-            for g, (members, offs) in enumerate(zip(plan.groups, plan.offsets)):
-                for i, off in zip(members, offs):
-                    wire = lax.dynamic_slice(group_rows[g], (off,), (sizes[i],))
-                    out = strats[i].unpack_wire(
-                        self, out, wire, recv_cts[i], send_cts[i], 1
-                    )
+            for g, grp in enumerate(plan.groups):
+                out = unpack_ragged(
+                    out,
+                    group_rows[g],
+                    [
+                        (
+                            off,
+                            plan.segments[i].nbytes,
+                            leaf_unpacker(strategies[i], recv_cts[i], send_cts[i]),
+                        )
+                        for i, off in zip(grp.transfers, grp.offsets)
+                    ],
+                )
             return out
 
         return Request(thunk=materialize)
@@ -955,10 +1028,12 @@ class Communicator:
         recv_cts: Sequence[CommittedType],
         perms: Sequence[Sequence[Tuple[int, int]]],
         axis_name: Optional[str] = None,
+        plan: Optional[WirePlan] = None,
+        strategies: Optional[Sequence[Strategy]] = None,
     ) -> jax.Array:
         """Blocking :meth:`ineighbor_alltoallv`."""
         return self.ineighbor_alltoallv(
-            buf, send_cts, recv_cts, perms, axis_name
+            buf, send_cts, recv_cts, perms, axis_name, plan, strategies
         ).wait()
 
     # ------------------------------------------------------------------
@@ -1006,6 +1081,7 @@ class Communicator:
             "model_hits": self.model.hits,
             "strategies": len(self.strategies),
             "wire_ops": self.wire_ops,
+            "wire_payload_bytes": self.wire_payload_bytes,
         }
 
 

@@ -1,0 +1,100 @@
+"""Compressed-wire strategy plugin: int8 on the wire, upcast on unpack.
+
+The point of the exact-byte :class:`~repro.comm.wireplan.WirePlan`
+accounting is that a strategy's wire extent need not equal the packed
+member bytes — a bounding window is *larger*, a compressed payload is
+*smaller*.  This plugin exercises the smaller side: float32 member
+bytes are symmetric-quantized to int8 for the link (4 scale bytes + one
+int8 per float — ~4x fewer wire bytes) and dequantized on the receive
+side before the scatter.
+
+Quantization is lossy, so the strategy registers with
+``selectable = False``: the model never auto-picks it; opt in per
+communicator with ``FixedPolicy(Int8Wire.name)`` (lossy halo exchange
+is a deliberate accuracy/bandwidth trade, e.g. on a DCN axis).  It is
+``wire_only``: local ``pack``/``unpack`` calls fall back to the normal
+kernels — only the wire format is compressed.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm.api import Strategy
+from repro.core.commit import CommittedType
+from repro.kernels import ops
+
+__all__ = ["Int8Wire", "INT8_WIRE"]
+
+#: wire header: one float32 dequantization scale
+_HEADER_BYTES = 4
+
+
+class Int8Wire(Strategy):
+    """Ship float32 member bytes as int8 + a float32 scale header."""
+
+    name = "int8wire"
+    wire_only = True       # the compressed format only exists on the wire
+    selectable = False     # lossy: never auto-selected, opt in explicitly
+
+    def applicable(self, ct: CommittedType) -> bool:
+        # the member bytes must re-view as float32 words; the type system
+        # tracks bytes, not element dtypes, so the caller opting in (via
+        # FixedPolicy) asserts the buffer really holds float32 data
+        return ct.size % 4 == 0 and ct.word_bytes >= 4
+
+    # -- §5 cost model ----------------------------------------------------
+    def model_pack(self, model, ct, incount):
+        p = model.params
+        size = ct.size * incount
+        # pack the members (priced like rows) + quantize (one extra
+        # read+write sweep of the packed bytes)
+        from repro.comm.api import ROWS
+
+        return ROWS.model_pack(model, ct, incount) + 2 * size / p.hbm_bw
+
+    def model_unpack(self, model, ct, incount):
+        p = model.params
+        size = ct.size * incount
+        from repro.comm.api import ROWS
+
+        return ROWS.model_unpack(model, ct, incount) + 2 * size / p.hbm_bw
+
+    def wire_bytes(self, ct: CommittedType, incount: int = 1) -> int:
+        # one int8 per float32 member + the scale header
+        return _HEADER_BYTES + (ct.size * incount) // 4
+
+    # -- execution --------------------------------------------------------
+    def pack(self, buf, ct, incount: int = 1, interpret: Optional[bool] = None):
+        member = ops.pack(buf, ct, incount=incount, interpret=interpret)
+        f = lax.bitcast_convert_type(
+            member.reshape(-1, 4), jnp.float32
+        ).reshape(-1)
+        scale = jnp.maximum(jnp.max(jnp.abs(f)), jnp.float32(1e-30)) / 127.0
+        q = jnp.clip(jnp.round(f / scale), -127, 127).astype(jnp.int8)
+        header = lax.bitcast_convert_type(
+            scale.astype(jnp.float32).reshape(1, 1), jnp.uint8
+        ).reshape(-1)
+        return jnp.concatenate([header, ops.byte_view(q)])
+
+    def unpack_wire(self, comm, dst, wire, recv_ct, send_ct=None, incount=1):
+        scale = lax.bitcast_convert_type(
+            wire[:_HEADER_BYTES].reshape(1, 4), jnp.float32
+        ).reshape(())
+        q = lax.bitcast_convert_type(wire[_HEADER_BYTES:], jnp.int8)
+        f = q.astype(jnp.float32) * scale
+        member = lax.bitcast_convert_type(f.reshape(-1, 1), jnp.uint8).reshape(-1)
+        u = comm.select(recv_ct, incount, wire=False)
+        return u.unpack(dst, member, recv_ct, incount)
+
+    def unpack(self, buf, packed, ct, incount=1, interpret=None):
+        raise TypeError(
+            f"{self.name} is wire-only; use unpack_wire on the received "
+            "payload"
+        )
+
+
+INT8_WIRE = Int8Wire()

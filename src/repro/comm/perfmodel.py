@@ -59,6 +59,18 @@ def _freeze1d(v) -> Optional[Table1D]:
     return tuple(tuple(row) for row in v)
 
 
+def _freeze_axis_tables(v) -> Optional[Dict[str, Table1D]]:
+    if not v:
+        return None
+    return {k: tuple(tuple(row) for row in rows) for k, rows in v.items()}
+
+
+def _freeze_axis_fits(v) -> Optional[Dict[str, Tuple]]:
+    if not v:
+        return None
+    return {k: tuple(fit) for k, fit in v.items()}
+
+
 @dataclass(frozen=True)
 class SystemParams:
     """Measured or analytic system parameters (paper Fig. 9/10 tables).
@@ -86,6 +98,13 @@ class SystemParams:
     # per-extra-hop latency term when the table drives t_link
     wire_latency: Optional[float] = None
     wire_bw: Optional[float] = None
+    # per-mesh-axis wire measurements: a multi-axis mesh (e.g. a fast
+    # ICI axis and a slow DCN axis) has genuinely different link terms
+    # per axis, so the calibration sweeps each axis's ring separately
+    # and t_link(axis=...) consults the matching table; the flat
+    # wire_table remains the axis-agnostic fallback
+    wire_tables: Optional[Dict[str, Table1D]] = None
+    wire_fits: Optional[Dict[str, Tuple]] = None  # axis -> (latency, bw)
 
     def __post_init__(self):
         # normalize list-of-lists (JSON) into hashable tuple tables
@@ -93,6 +112,10 @@ class SystemParams:
         object.__setattr__(self, "unpack_table", _freeze2d(self.unpack_table))
         object.__setattr__(self, "wire_table", _freeze1d(self.wire_table))
         object.__setattr__(self, "copy_table", _freeze1d(self.copy_table))
+        object.__setattr__(
+            self, "wire_tables", _freeze_axis_tables(self.wire_tables)
+        )
+        object.__setattr__(self, "wire_fits", _freeze_axis_fits(self.wire_fits))
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -117,6 +140,9 @@ class StrategyEstimate:
     t_pack: float
     t_link: float
     t_unpack: float
+    #: exact bytes this strategy puts on the wire (0 when the estimate
+    #: predates wire accounting, e.g. hand-built test fixtures)
+    wire_bytes: int = 0
 
     @property
     def total(self) -> float:
@@ -212,11 +238,16 @@ class PerfModel:
     given type the decision is a dict lookup.
     """
 
-    def __init__(self, params: SystemParams = TPU_V5E, decisions=None):
+    def __init__(self, params: SystemParams = TPU_V5E, decisions=None,
+                 axis: Optional[str] = None):
         self.params = params
         #: optional repro.measure.decisions.DecisionCache — pins choices
         #: across processes and records the audit log
         self.decisions = decisions
+        #: default mesh axis whose wire table prices t_link (a model
+        #: bound to a multi-axis mesh's DCN axis must not price its
+        #: links with the ICI sweep); per-call override on t_link
+        self.axis = axis
         self._cache: Dict[Tuple, StrategyEstimate] = {}
         # interpolators precomputed once per measured table, keyed by the
         # (frozen, hashable) table itself so their lifetime is tied to
@@ -279,12 +310,29 @@ class PerfModel:
         return self._resolve(strategy).model_unpack(self, ct, incount)
 
     # -- link term ------------------------------------------------------
-    def t_link(self, nbytes: int, hops: int = 1) -> float:
+    def _axis_wire(self, axis: Optional[str]):
+        """(table, fitted latency, fitted bw) pricing one link on
+        ``axis`` (default: the model's bound axis): the per-axis sweep
+        when one covers the axis, else the flat axis-agnostic table."""
         p = self.params
-        if p.wire_table:
+        axis = axis if axis is not None else self.axis
+        if axis is not None and p.wire_tables and axis in p.wire_tables:
+            fit = (p.wire_fits or {}).get(axis) or (None, None)
+            return p.wire_tables[axis], fit[0], fit[1]
+        return p.wire_table, p.wire_latency, p.wire_bw
+
+    def _hop_latency(self, axis: Optional[str] = None) -> float:
+        _, lat, _ = self._axis_wire(axis)
+        return lat if lat is not None else self.params.ici_latency
+
+    def t_link(self, nbytes: int, hops: int = 1,
+               axis: Optional[str] = None) -> float:
+        p = self.params
+        table, wire_lat, wire_bw = self._axis_wire(axis)
+        if table:
             # measured one-hop collective time; extra hops add the fitted
             # (or analytic) latency floor, not another bandwidth term
-            interp = self._interp_for(p.wire_table, _Interp1D)
+            interp = self._interp_for(table, _Interp1D)
             x = math.log2(max(nbytes, 1))
             t = interp(x)
             end = float(interp.xs[-1])
@@ -293,11 +341,38 @@ class PerfModel:
                 # bandwidth for the excess bytes instead of flat-clamping
                 # — a 64 MiB transfer must not price like the 4 MiB grid
                 # ceiling (it would hand every large object to bounding)
-                bw = p.wire_bw if p.wire_bw else p.ici_bw
+                bw = wire_bw if wire_bw else p.ici_bw
                 t += (nbytes - 2.0 ** end) / bw
-            lat = p.wire_latency if p.wire_latency is not None else p.ici_latency
+            lat = wire_lat if wire_lat is not None else p.ici_latency
             return t + (hops - 1) * lat
         return hops * p.ici_latency + nbytes / p.ici_bw
+
+    # -- exchange pricing (exact-byte wire plans) -----------------------
+    def price_exchange(self, plan, axis: Optional[str] = None) -> StrategyEstimate:
+        """Price a :class:`~repro.comm.wireplan.WirePlan`: the link term
+        for the bytes its schedule actually issues, plus the per-extra-
+        collective latency of the grouped schedule.  The estimate (byte
+        count included) is recorded once per plan fingerprint in the
+        attached decision cache, so audits show the true transfer size
+        of every fused exchange."""
+        t = self.t_link(plan.issued_bytes, 1, axis)
+        t += (plan.wire_ops - 1) * self._hop_latency(axis)
+        est = StrategyEstimate(
+            f"wire/{plan.schedule}", 0.0, t, 0.0, wire_bytes=plan.issued_bytes
+        )
+        if self.decisions is not None:
+            key = (plan.fingerprint, plan.ngroups, plan.wire_ops, True)
+            if self.decisions.lookup(*key) is None:
+                self.decisions.record(
+                    *key,
+                    est,
+                    signature=(
+                        f"exchange schedule={plan.schedule}"
+                        f" groups={plan.ngroups} ranks={plan.nranks}"
+                        f" ragged_bytes={plan.wire_bytes}"
+                    ),
+                )
+        return est
 
     # -- full strategy estimates (Eqs. 1-3 analogue) ----------------------
     def estimate(

@@ -1,0 +1,331 @@
+"""WirePlan: exact-byte wire layout for fused neighborhood exchanges.
+
+TEMPI's canonical representation tells the library exactly how many
+bytes a committed datatype really occupies once packed; this module
+turns that knowledge into the wire layout itself.  The previous fused
+``neighbor_alltoallv`` padded every delta-class segment to the largest
+class (≈1.6x over-transfer on the 2x2x2 halo); a :class:`WirePlan`
+instead lays every transfer out at its *exact* packed extent — a flat
+per-destination buffer of :class:`~repro.core.commit.WireSegment`
+descriptors, no class padding, no row equalization — and then picks the
+cheapest wire **schedule** that can carry that ragged layout:
+
+``ragged``
+    one ``lax.ragged_all_to_all`` collective (requires a JAX that has
+    the primitive — see :func:`repro.compat.has_ragged_all_to_all`).
+    Exact bytes, one wire op.
+``uniform``
+    one plain ``all_to_all`` over destination-ordered rows.  A uniform
+    collective *must* equalize rows, so this schedule is only chosen
+    when the padding it would add stays within
+    ``uniform_waste_tolerance`` (default 0: byte-exact or not at all).
+``grouped``
+    one ``ppermute`` per delta class, each carrying exactly that class's
+    concatenated segments.  Always available, always byte-exact; this is
+    also the large-grid fallback (ROADMAP item 2): past
+    ``grouped_fallback_rank_factor`` x the class count, most fused rows
+    would be zero, so the plan degrades to per-class sends regardless of
+    primitive availability.
+
+The schedule choice is host-side and cached; the payload accounting
+(:attr:`WirePlan.wire_bytes` = the sum of per-peer packed extents, and
+:attr:`WirePlan.issued_bytes` = what the chosen schedule actually puts
+on the wire) is what ``PerfModel.price_exchange`` prices and the
+``DecisionCache`` records.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.commit import WireSegment
+
+__all__ = [
+    "WireGroup",
+    "WirePlan",
+    "plan_wire",
+    "GROUPED_FALLBACK_RANK_FACTOR",
+    "collective_payload_bytes",
+    "WIRE_COLLECTIVES",
+]
+
+#: past ``factor * ngroups`` ranks the fused single-collective layout is
+#: mostly zero rows (non-neighbor peers); the plan then always takes the
+#: grouped per-class schedule (ROADMAP: grid-size threshold fallback)
+GROUPED_FALLBACK_RANK_FACTOR = 4.0
+
+#: primitive names that put payload on the wire in our schedules
+WIRE_COLLECTIVES = ("ppermute", "all_to_all", "ragged_all_to_all")
+
+
+@dataclass(frozen=True)
+class WireGroup:
+    """One delta class of a rank-uniform exchange: the transfers whose
+    destination is the same rank *for every rank* share one wire payload
+    of exactly ``nbytes`` (the sum of their segment extents)."""
+
+    transfers: Tuple[int, ...]        # transfer ids riding this class
+    offsets: Tuple[int, ...]          # group-local byte offset per transfer
+    nbytes: int                       # exact payload — no padding
+    perm: Tuple[Tuple[int, int], ...]  # the class's (src, dst) edges
+
+
+@dataclass(frozen=True)
+class WirePlan:
+    """Host-computed exact-byte layout of a fused neighborhood exchange.
+
+    ``segments[i]`` is transfer ``i``'s :class:`WireSegment` with its
+    *global* offset in the flat send buffer; ``groups[g]`` carries the
+    group-local offsets the receive side unpacks at.  ``wire_bytes`` is
+    the ragged optimum (sum of segment extents); ``issued_bytes`` is
+    what the chosen schedule actually transfers (equal to
+    ``wire_bytes`` for the exact schedules, ``nranks * seg_bytes`` for
+    the padded uniform collective).
+    """
+
+    nranks: int
+    groups: Tuple[WireGroup, ...]
+    segments: Tuple[WireSegment, ...]
+    group_offsets: Tuple[int, ...]
+    schedule: str                     # "ragged" | "uniform" | "grouped"
+    fused: bool                       # group -> peer injective per rank
+    wire_bytes: int                   # sum of exact segment extents
+    seg_bytes: int                    # uniform row size (largest group)
+    send_rows: Tuple[Tuple[int, ...], ...]   # [rank][dest] -> group|G
+    recv_rows: Tuple[Tuple[int, ...], ...]   # [rank][group] -> source
+
+    @property
+    def ngroups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def wire_ops(self) -> int:
+        """Collectives the schedule issues."""
+        if self.schedule in ("ragged", "uniform"):
+            return 1
+        return len(self.groups)
+
+    @property
+    def issued_bytes(self) -> int:
+        """Bytes the chosen schedule actually puts on the wire."""
+        if self.schedule == "uniform":
+            return self.nranks * self.seg_bytes
+        return self.wire_bytes
+
+    @property
+    def padding_bytes(self) -> int:
+        return self.issued_bytes - self.wire_bytes
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable content hash of the layout (keys DecisionCache rows
+        for exchange pricing, as ``CommittedType.fingerprint`` keys
+        per-type selections)."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            key = (
+                "wireplan.v1",
+                self.nranks,
+                self.schedule,
+                tuple((s.fingerprint, s.offset, s.nbytes) for s in self.segments),
+                tuple(g.perm for g in self.groups),
+            )
+            fp = hashlib.sha256(repr(key).encode()).hexdigest()[:16]
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
+
+def _choose_schedule(
+    nranks: int,
+    ngroups: int,
+    fused: bool,
+    wire_bytes: int,
+    uniform_bytes: int,
+    uniform_waste_tolerance: float,
+    native: bool,
+    rank_factor: float,
+) -> str:
+    """The fallback ladder described in the module docstring."""
+    if ngroups and nranks > rank_factor * ngroups:
+        # grid-size threshold: most fused rows would be zero (or, for
+        # the native ragged op, dead per-peer metadata) — per-class
+        # sends win outright on large grids
+        return "grouped"
+    if native and fused:
+        return "ragged"
+    if fused and wire_bytes > 0:
+        waste = (uniform_bytes - wire_bytes) / wire_bytes
+        if waste <= uniform_waste_tolerance:
+            return "uniform"
+    return "grouped"
+
+
+@functools.lru_cache(maxsize=256)
+def plan_wire(
+    sizes: Tuple[int, ...],
+    perms: Tuple[Tuple[Tuple[int, int], ...], ...],
+    fingerprints: Optional[Tuple[str, ...]] = None,
+    uniform_waste_tolerance: float = 0.0,
+    native: Optional[bool] = None,
+    rank_factor: float = GROUPED_FALLBACK_RANK_FACTOR,
+) -> WirePlan:
+    """Lay ``len(sizes)`` transfers (one full permutation each) out as an
+    exact-byte wire plan.  ``sizes[i]`` is transfer ``i``'s wire-segment
+    extent (the selected strategy's exact wire bytes); ``fingerprints``
+    optionally carries the committed types' content hashes into the
+    segment descriptors."""
+    if native is None:
+        from repro.compat import has_ragged_all_to_all
+
+        native = has_ragged_all_to_all()
+    n = len(perms)
+    if len(sizes) != n:
+        raise ValueError("sizes and perms must align")
+    ranks = sorted({s for p in perms for s, _ in p})
+    nranks = len(ranks)
+    if ranks != list(range(nranks)):
+        raise ValueError("perms must cover ranks 0..R-1")
+    dst: List[Dict[int, int]] = []
+    src: List[Dict[int, int]] = []
+    for i, p in enumerate(perms):
+        d = dict(p)
+        if sorted(d) != ranks or sorted(d.values()) != ranks:
+            raise ValueError(f"perm {i} is not a permutation of the ranks")
+        dst.append(d)
+        src.append({v: k for k, v in d.items()})
+
+    # group transfers by their full destination vector (rank-uniform)
+    key_to_group: Dict[Tuple[int, ...], int] = {}
+    members_per_group: List[List[int]] = []
+    for i in range(n):
+        key = tuple(dst[i][r] for r in range(nranks))
+        g = key_to_group.setdefault(key, len(members_per_group))
+        if g == len(members_per_group):
+            members_per_group.append([])
+        members_per_group[g].append(i)
+    ngroups = len(members_per_group)
+
+    fps = fingerprints or ("",) * n
+    groups: List[WireGroup] = []
+    group_offsets: List[int] = []
+    seg_list: List[Optional[WireSegment]] = [None] * n
+    flat = 0
+    for members in members_per_group:
+        offs, acc = [], 0
+        for i in members:
+            offs.append(acc)
+            seg_list[i] = WireSegment(
+                fingerprint=fps[i], offset=flat + acc, nbytes=sizes[i]
+            )
+            acc += sizes[i]
+        groups.append(
+            WireGroup(
+                transfers=tuple(members),
+                offsets=tuple(offs),
+                nbytes=acc,
+                perm=tuple((r, dst[members[0]][r]) for r in range(nranks)),
+            )
+        )
+        group_offsets.append(flat)
+        flat += acc
+    seg_bytes = max((g.nbytes for g in groups), default=0)
+
+    # per-rank uniform-collective tables (destination-ordered rows)
+    send_rows, recv_rows = [], []
+    fused = ngroups <= nranks
+    for r in range(nranks):
+        dests = [dst[g.transfers[0]][r] for g in groups]
+        if len(set(dests)) != ngroups:
+            fused = False
+        row = [ngroups] * nranks  # ngroups = the zero dummy row
+        for g, d in enumerate(dests):
+            row[d] = g
+        send_rows.append(tuple(row))
+        recv_rows.append(tuple(src[g.transfers[0]][r] for g in groups))
+
+    schedule = _choose_schedule(
+        nranks,
+        ngroups,
+        fused,
+        flat,
+        nranks * seg_bytes,
+        uniform_waste_tolerance,
+        native,
+        rank_factor,
+    )
+    return WirePlan(
+        nranks=nranks,
+        groups=tuple(groups),
+        segments=tuple(seg_list),
+        group_offsets=tuple(group_offsets),
+        schedule=schedule,
+        fused=fused,
+        wire_bytes=flat,
+        seg_bytes=seg_bytes,
+        send_rows=tuple(send_rows),
+        recv_rows=tuple(recv_rows),
+    )
+
+
+# ===========================================================================
+# payload accounting over traced programs (tests + CI regression gate)
+# ===========================================================================
+
+def _aval_bytes(aval) -> int:
+    shape = getattr(aval, "shape", ())
+    dtype = getattr(aval, "dtype", None)
+    if dtype is None:
+        return 0
+    return math.prod(shape) * dtype.itemsize if shape else dtype.itemsize
+
+
+def _walk_jaxpr(jaxpr, counts: Dict[str, int]) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in WIRE_COLLECTIVES:
+            # ragged_all_to_all's invars also carry the destination
+            # buffer and four offset/size vectors — only the first
+            # operand is wire payload; the simple collectives put every
+            # operand on the wire
+            invars = eqn.invars[:1] if name == "ragged_all_to_all" else eqn.invars
+            counts[name] = counts.get(name, 0) + sum(
+                _aval_bytes(v.aval) for v in invars
+                if hasattr(v, "aval")
+            )
+            counts["ops"] = counts.get("ops", 0) + 1
+        for val in eqn.params.values():
+            for sub in _sub_jaxprs(val):
+                _walk_jaxpr(sub, counts)
+
+
+def _sub_jaxprs(val):
+    import jax.core as jcore
+
+    if isinstance(val, jcore.Jaxpr):
+        yield val
+    elif isinstance(val, jcore.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            yield from _sub_jaxprs(v)
+
+
+def collective_payload_bytes(fn, *args) -> Dict[str, int]:
+    """Trace ``fn(*args)`` and total the operand bytes of every wire
+    collective in the jaxpr (recursing through pjit/shard_map bodies).
+
+    Returns ``{"ops": <collective count>, "total": <bytes>,
+    <primitive>: <bytes>, ...}`` — the ground truth the wire-bytes
+    regression tests compare against ``WirePlan.issued_bytes``.
+    """
+    import jax
+
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    counts: Dict[str, int] = {"ops": 0}
+    _walk_jaxpr(jaxpr.jaxpr, counts)
+    counts["total"] = sum(v for k, v in counts.items() if k != "ops")
+    return counts

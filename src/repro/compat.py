@@ -15,7 +15,8 @@ from typing import Any, Sequence
 
 import jax
 
-__all__ = ["shard_map", "make_mesh"]
+__all__ = ["shard_map", "make_mesh", "has_ragged_all_to_all",
+           "ragged_all_to_all"]
 
 
 def _resolve_shard_map():
@@ -45,6 +46,35 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
     return _SHARD_MAP(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=check_vma, **kwargs,
+    )
+
+
+def has_ragged_all_to_all() -> bool:
+    """Whether the running JAX exposes ``lax.ragged_all_to_all`` (the
+    XLA ragged collective; added well after the pinned 0.4.37).  The
+    wire planner (``repro.comm.wireplan``) consults this to decide
+    whether a ragged neighborhood exchange can be a single collective
+    or must lower to the grouped per-class ``ppermute`` schedule."""
+    return hasattr(jax.lax, "ragged_all_to_all")
+
+
+def ragged_all_to_all(operand, output, input_offsets, send_sizes,
+                      output_offsets, recv_sizes, *, axis_name):
+    """``lax.ragged_all_to_all`` passthrough.
+
+    Callers must gate on :func:`has_ragged_all_to_all`; there is no
+    emulation here on purpose — the byte-exact fallback (one ppermute
+    per delta class) lives in the wire planner, where the payload
+    accounting stays honest.
+    """
+    if not has_ragged_all_to_all():  # pragma: no cover - guarded upstream
+        raise NotImplementedError(
+            "lax.ragged_all_to_all is unavailable on this JAX; the wire "
+            "planner should have selected the grouped schedule"
+        )
+    return jax.lax.ragged_all_to_all(  # pragma: no cover - needs new JAX
+        operand, output, input_offsets, send_sizes, output_offsets,
+        recv_sizes, axis_name=axis_name,
     )
 
 

@@ -14,6 +14,7 @@ from repro.core.commit import (
     CommittedType,
     KernelKind,
     TypeRegistry,
+    WireSegment,
     commit,
     registry,
 )
@@ -54,6 +55,7 @@ __all__ = [
     "make_cuboid_vector_of_hvector",
     "DenseData", "StreamData", "Type", "translate",
     "dense_folding", "simplify", "stream_elision",
-    "CommittedType", "KernelKind", "TypeRegistry", "commit", "registry",
+    "CommittedType", "KernelKind", "TypeRegistry", "WireSegment",
+    "commit", "registry",
     "StridedBlock", "block_offsets", "strided_block", "strided_block_of",
 ]

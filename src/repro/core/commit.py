@@ -23,7 +23,14 @@ from repro.core.datatypes import Datatype
 from repro.core.ir import DenseData, StreamData, Type, translate
 from repro.core.strided_block import StridedBlock, strided_block
 
-__all__ = ["KernelKind", "CommittedType", "TypeRegistry", "commit", "registry"]
+__all__ = [
+    "KernelKind",
+    "CommittedType",
+    "TypeRegistry",
+    "WireSegment",
+    "commit",
+    "registry",
+]
 
 #: bump when the structural description below changes shape, so stale
 #: persisted selection caches keyed on old fingerprints never collide
@@ -39,6 +46,30 @@ def _tree_key(ty: Type) -> Tuple:
     else:
         head = ("stream", d.offset, d.stride, d.count)
     return head + tuple(_tree_key(c) for c in ty.children)
+
+
+@dataclass(frozen=True)
+class WireSegment:
+    """One committed type's slot in a flat wire buffer: the *exact*
+    packed extent the type occupies on the wire, at a byte offset — no
+    class padding, no row equalization.  This is the canonical
+    representation's answer to "how many bytes does this object really
+    put on the link": a per-peer wire layout is a sequence of these
+    (see ``repro.comm.wireplan.WirePlan``).
+
+    ``nbytes`` defaults to the packed member bytes; strategies whose
+    wire format differs (a bounding window, a compressed payload) supply
+    their own count — the descriptor carries whatever truly crosses the
+    wire.
+    """
+
+    fingerprint: str   # content hash of the committed type it carries
+    offset: int        # byte offset in the flat wire buffer
+    nbytes: int        # exact wire extent of this segment
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.nbytes
 
 
 class KernelKind(enum.Enum):
@@ -91,6 +122,24 @@ class CommittedType:
             self.size,
             self.extent,
             blk if blk is not None else _tree_key(self.tree),
+        )
+
+    def packed_extent(self, incount: int = 1) -> int:
+        """Exact bytes of real data ``incount`` repetitions of this type
+        pack to — the wire extent of a pack-based transfer.  Never
+        includes stride gaps or any per-class padding."""
+        return self.size * incount
+
+    def wire_segment(
+        self, offset: int = 0, incount: int = 1, nbytes: Optional[int] = None
+    ) -> "WireSegment":
+        """The :class:`WireSegment` this type occupies in a flat wire
+        buffer (``nbytes`` overrides the packed extent for strategies
+        with a different wire format)."""
+        return WireSegment(
+            fingerprint=self.fingerprint,
+            offset=offset,
+            nbytes=self.packed_extent(incount) if nbytes is None else nbytes,
         )
 
     @property

@@ -53,6 +53,12 @@ class StridedBlock:
     def num_blocks(self) -> int:
         return math.prod(self.counts[1:]) if self.ndims > 1 else 1
 
+    def packed_bytes(self, incount: int = 1) -> int:
+        """Exact packed wire extent of ``incount`` repetitions: the real
+        data bytes only — the ragged wire layouts in ``repro.comm`` are
+        built from this, never from the padded ``extent``."""
+        return self.size * incount
+
     def word_bytes(self, max_word: int = 8) -> int:
         """Largest machine word width W that is aligned to the object and a
         factor of the contiguous block (paper §3.3's W specialization,

@@ -2,9 +2,11 @@
 
 from repro.halo.exchange import (
     DIRECTIONS,
+    HaloPlan,
     HaloSpec,
     halo_exchange,
     ihalo_exchange,
+    make_halo_plan,
     make_halo_step,
     make_halo_types,
 )
@@ -17,9 +19,11 @@ from repro.halo.stencil import (
 
 __all__ = [
     "DIRECTIONS",
+    "HaloPlan",
     "HaloSpec",
     "halo_exchange",
     "ihalo_exchange",
+    "make_halo_plan",
     "make_halo_step",
     "make_halo_types",
     "overlapped_stencil_iteration",

@@ -9,14 +9,21 @@ different 3D strided datatypes" — committed once and exchanged every
 iteration through a :class:`~repro.comm.api.Communicator`.
 
 The paper transports the packed buffers with one ``MPI_Alltoallv``; this
-is exactly :meth:`Communicator.neighbor_alltoallv`: all 26 regions are
-packed (kernel selected per type by the strategy registry) into one
-contiguous buffer with a host-computed offset table, and the whole
-exchange is ONE fused collective — not 26 serialized ``ppermute``
-rounds.  On a periodic process grid the 26 directions collapse into the
-distinct displacement classes mod the grid (7 on a 2x2x2 grid), which is
-what makes the single ``all_to_all`` layout possible; see
-:class:`~repro.comm.api.NeighborPlan`.
+is :meth:`Communicator.neighbor_alltoallv`: all 26 regions are packed at
+their **exact** wire extents into one flat buffer laid out by a
+:class:`~repro.comm.wireplan.WirePlan`, and the plan's wire schedule
+moves exactly those bytes — on a periodic process grid the 26 directions
+collapse into the distinct displacement classes mod the grid (7 on a
+2x2x2 grid), each class a single exact-payload wire op (or one native
+ragged collective where the running JAX provides it).  The whole layout
+— committed types, strategy selection, wire plan — is built ONCE at
+:func:`make_halo_step` time (:class:`HaloPlan`); every iteration after
+that is dictionary lookups.
+
+Halos may be asymmetric: ``HaloSpec.radius`` accepts a per-dimension
+``(rz, ry, rx)`` tuple, and the region datatypes, allocations, and wire
+layout all follow the per-dimension radii (the ragged wire layout is
+what makes this free — unequal region sizes never padded each other).
 
 Switching the communicator policy between baseline and model selection
 reproduces the paper's comparison with zero changes here.
@@ -26,7 +33,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -34,16 +41,24 @@ import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.comm.api import Communicator, Request, as_communicator
+from repro.comm.api import (
+    Communicator,
+    Request,
+    Strategy,
+    WirePlan,
+    as_communicator,
+)
 from repro.core.commit import CommittedType
 from repro.core.datatypes import FLOAT, Named, Subarray
 
 __all__ = [
     "HaloSpec",
+    "HaloPlan",
     "DIRECTIONS",
     "halo_exchange",
     "ihalo_exchange",
     "make_halo_types",
+    "make_halo_plan",
     "make_halo_step",
 ]
 
@@ -55,17 +70,39 @@ DIRECTIONS: Tuple[Tuple[int, int, int], ...] = tuple(
 
 @dataclass(frozen=True)
 class HaloSpec:
-    """Geometry of one rank's local block."""
+    """Geometry of one rank's local block.
+
+    ``radius`` is either one scalar (the paper's symmetric radius-2
+    setup) or a per-dimension ``(rz, ry, rx)`` tuple for asymmetric
+    halos (e.g. a deeper halo on the slow axis only).
+    """
 
     grid: Tuple[int, int, int]     # process grid (pz, py, px)
     interior: Tuple[int, int, int]  # (nz, ny, nx) gridpoints per rank
-    radius: int = 2                 # paper: stencil radius 2
+    radius: Union[int, Tuple[int, int, int]] = 2  # paper: stencil radius 2
     element: Named = FLOAT          # paper: 4-byte gridpoints
 
     @property
+    def radii(self) -> Tuple[int, int, int]:
+        """Per-dimension halo radii (scalar radius broadcast)."""
+        if isinstance(self.radius, tuple):
+            return self.radius
+        return (self.radius, self.radius, self.radius)
+
+    @property
+    def scalar_radius(self) -> int:
+        """The single radius, for callers that require symmetry (the
+        stencil kernels); raises on asymmetric specs."""
+        rz, ry, rx = self.radii
+        if not (rz == ry == rx):
+            raise ValueError(
+                f"operation requires a symmetric halo radius, got {self.radii}"
+            )
+        return rz
+
+    @property
     def alloc(self) -> Tuple[int, int, int]:
-        r = self.radius
-        return tuple(n + 2 * r for n in self.interior)
+        return tuple(n + 2 * r for n, r in zip(self.interior, self.radii))
 
     @property
     def nranks(self) -> int:
@@ -95,11 +132,12 @@ def _region_type(spec: HaloSpec, d, kind: str) -> Subarray:
     kind="recv": the halo shell on side ``-d`` (filled by the neighbor at
     ``-d`` during round ``d``; see module docstring).
     """
-    r = spec.radius
+    radii = spec.radii
     sizes_zyx = spec.alloc
     sub, start = [], []
     for axis in range(3):
         n = spec.interior[axis]
+        r = radii[axis]
         di = d[axis]
         if di == 0:
             sub.append(n)
@@ -132,24 +170,74 @@ def make_halo_types(
     }
 
 
+@dataclass(frozen=True)
+class HaloPlan:
+    """Everything a halo exchange needs, computed once: the committed
+    (send, recv) types, their permutations, the selected strategies, and
+    the exact-byte :class:`~repro.comm.wireplan.WirePlan`.  Build with
+    :func:`make_halo_plan` at setup time (``make_halo_step`` does); the
+    per-iteration host work is then dictionary lookups only."""
+
+    spec: HaloSpec
+    send_cts: Tuple[CommittedType, ...]
+    recv_cts: Tuple[CommittedType, ...]
+    perms: Tuple[Tuple[Tuple[int, int], ...], ...]
+    strategies: Tuple[Strategy, ...]
+    wire: WirePlan
+
+    @property
+    def wire_bytes(self) -> int:
+        """Exact bytes one exchange puts on the wire (the ragged
+        optimum: the sum of per-peer packed extents)."""
+        return self.wire.wire_bytes
+
+
+def make_halo_plan(spec: HaloSpec, comm, types=None) -> HaloPlan:
+    """Commit the 26 region types, select strategies, and lay out the
+    exact-byte wire plan — the full setup cost of a halo exchange, paid
+    once."""
+    comm = as_communicator(comm)
+    if types is None:
+        types = make_halo_types(spec, comm)
+    send_cts = tuple(types[d][0] for d in DIRECTIONS)
+    recv_cts = tuple(types[d][1] for d in DIRECTIONS)
+    perms = tuple(tuple(spec.perm(d)) for d in DIRECTIONS)
+    strategies, wire = comm.plan_neighbor(send_cts, perms)
+    return HaloPlan(
+        spec=spec,
+        send_cts=send_cts,
+        recv_cts=recv_cts,
+        perms=perms,
+        strategies=strategies,
+        wire=wire,
+    )
+
+
 def ihalo_exchange(
     local: jax.Array,
     spec: HaloSpec,
     comm,
     axis_name: str = "ranks",
     types=None,
+    plan: Optional[HaloPlan] = None,
 ) -> Request:
-    """Nonblocking 26-neighbor halo exchange: the single fused wire
-    transport is issued immediately; ``wait()`` materializes the 26
-    unpacks.  Must run inside shard_map over a 1D mesh axis of
-    ``spec.nranks`` devices."""
+    """Nonblocking 26-neighbor halo exchange: the fused wire transport
+    (exact ragged payloads) is issued immediately; ``wait()``
+    materializes the 26 unpacks.  Must run inside shard_map over a 1D
+    mesh axis of ``spec.nranks`` devices.  Pass a prebuilt ``plan``
+    (:func:`make_halo_plan`) to skip per-call planning."""
     comm = as_communicator(comm)
-    if types is None:
-        types = make_halo_types(spec, comm)
-    send_cts = [types[d][0] for d in DIRECTIONS]
-    recv_cts = [types[d][1] for d in DIRECTIONS]
-    perms = [spec.perm(d) for d in DIRECTIONS]
-    return comm.ineighbor_alltoallv(local, send_cts, recv_cts, perms, axis_name)
+    if plan is None:
+        plan = make_halo_plan(spec, comm, types)
+    return comm.ineighbor_alltoallv(
+        local,
+        plan.send_cts,
+        plan.recv_cts,
+        plan.perms,
+        axis_name,
+        plan=plan.wire,
+        strategies=plan.strategies,
+    )
 
 
 def halo_exchange(
@@ -158,20 +246,22 @@ def halo_exchange(
     comm,
     axis_name: str = "ranks",
     types=None,
+    plan: Optional[HaloPlan] = None,
 ) -> jax.Array:
     """One full 26-neighbor halo exchange for this rank's ``local`` block
-    (one fused collective on the wire).  Returns ``local`` with all halo
+    (exact wire bytes, fused schedule).  Returns ``local`` with all halo
     shells filled."""
-    return ihalo_exchange(local, spec, comm, axis_name, types).wait()
+    return ihalo_exchange(local, spec, comm, axis_name, types, plan).wait()
 
 
 def make_halo_step(spec: HaloSpec, comm, mesh: Mesh, axis_name="ranks"):
     """jit-compiled shard_map wrapper: (nranks*az, ay, ax) global array,
-    sharded on the leading axis, -> exchanged."""
-    types = make_halo_types(spec, comm)
+    sharded on the leading axis, -> exchanged.  The halo plan (types,
+    strategies, wire layout) is built here, once."""
+    plan = make_halo_plan(spec, comm)
 
     def step(local):
-        return halo_exchange(local, spec, comm, axis_name, types)
+        return halo_exchange(local, spec, comm, axis_name, plan=plan)
 
     fn = shard_map(
         step,

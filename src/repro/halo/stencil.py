@@ -14,7 +14,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.halo.exchange import HaloSpec, ihalo_exchange
+from repro.halo.exchange import HaloPlan, HaloSpec, ihalo_exchange
 
 __all__ = [
     "stencil26",
@@ -33,7 +33,7 @@ def stencil26(local: jax.Array, spec: HaloSpec) -> jax.Array:
 
     new[i] = (1-w)*u[i] + w/26 * sum_{26 neighbors} u[i+d]
     """
-    r = spec.radius
+    r = spec.scalar_radius
     nz, ny, nx = spec.interior
     w = jnp.float32(0.4)
     acc = jnp.zeros((nz + 2 * (r - 1), ny + 2 * (r - 1), nx + 2 * (r - 1)),
@@ -54,7 +54,7 @@ def stencil26(local: jax.Array, spec: HaloSpec) -> jax.Array:
 def stencil_iterations(local: jax.Array, spec: HaloSpec, steps: int) -> jax.Array:
     """``steps`` local stencil applications (valid until the halo depth
     is exhausted: steps <= radius)."""
-    assert steps <= spec.radius
+    assert steps <= spec.scalar_radius
     for _ in range(steps):
         local = stencil26(local, spec)
     return local
@@ -71,7 +71,7 @@ def stencil26_interior(local: jax.Array, spec: HaloSpec) -> jax.Array:
     the same region of ``stencil26(exchanged, spec)`` — which is what
     makes it legal to compute while the exchange is still on the wire.
     """
-    r = spec.radius
+    r = spec.scalar_radius
     nz, ny, nx = spec.interior
     assert min(nz, ny, nx) > 2, "deep interior needs interior dims > 2"
     w = jnp.float32(0.4)
@@ -93,6 +93,7 @@ def overlapped_stencil_iteration(
     types=None,
     steps: int = 2,
     probe: Optional[dict] = None,
+    plan: Optional[HaloPlan] = None,
 ) -> jax.Array:
     """One halo-exchange + ``steps``-stencil iteration with the exchange
     wire time hidden behind interior compute (ROADMAP: `Request` overlap
@@ -111,9 +112,9 @@ def overlapped_stencil_iteration(
     the request was still pending when the interior compute was built —
     the overlap invariant tests assert.
     """
-    assert steps <= spec.radius
-    r = spec.radius
-    req = ihalo_exchange(local, spec, comm, axis_name, types)  # wire NOW
+    assert steps <= spec.scalar_radius
+    r = spec.scalar_radius
+    req = ihalo_exchange(local, spec, comm, axis_name, types, plan)  # wire NOW
     inner = stencil26_interior(local, spec)   # overlaps the collective
     if probe is not None:
         probe["pending_during_interior"] = not req.completed

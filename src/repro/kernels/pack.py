@@ -37,11 +37,33 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.geometry import PackGeometry
 
-__all__ = ["pack_rows", "pack_dma", "choose_chunk"]
+__all__ = ["pack_rows", "pack_dma", "pack_ragged", "choose_chunk"]
 
 # pinned-JAX compat: the memory-space enum was renamed
 # TPUMemorySpace -> MemorySpace in newer Pallas releases
 _MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+
+# ---------------------------------------------------------------------------
+# ragged wire assembly
+# ---------------------------------------------------------------------------
+
+def pack_ragged(buf: jax.Array, leaves, total: int) -> jax.Array:
+    """Scatter packed leaves directly into a flat wire buffer.
+
+    ``leaves`` is a sequence of ``(offset, pack_fn)`` pairs: ``pack_fn``
+    produces one leaf's packed ``uint8`` payload from ``buf`` (any of
+    the strategy pack kernels above, already specialized), and the
+    payload lands at its exact byte ``offset`` in a ``uint8[total]``
+    buffer.  Offsets come from a wire plan's
+    :class:`~repro.core.commit.WireSegment` descriptors — the buffer is
+    exactly ``sum(segment extents)`` bytes, with no per-class padding
+    rows and no intermediate per-destination concatenation.
+    """
+    wire = jnp.zeros((total,), jnp.uint8)
+    for offset, pack_fn in leaves:
+        wire = jax.lax.dynamic_update_slice(wire, pack_fn(buf), (offset,))
+    return wire
 
 
 # ---------------------------------------------------------------------------

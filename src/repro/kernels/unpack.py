@@ -30,7 +30,25 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.geometry import PackGeometry
 from repro.kernels.pack import _MemorySpace, choose_chunk
 
-__all__ = ["unpack_rows", "unpack_dma"]
+__all__ = ["unpack_rows", "unpack_dma", "unpack_ragged"]
+
+
+def unpack_ragged(dst: jax.Array, wire: jax.Array, leaves) -> jax.Array:
+    """Inverse of :func:`repro.kernels.pack.pack_ragged`: slice each
+    leaf's exact wire segment out of the flat received buffer and
+    scatter it into ``dst``.
+
+    ``leaves`` is a sequence of ``(offset, nbytes, unpack_fn)``:
+    ``unpack_fn(dst, payload)`` consumes one leaf's ``uint8[nbytes]``
+    wire payload (a strategy's ``unpack_wire`` path, already bound to
+    its committed type) and returns the updated destination.  Offsets
+    are the wire plan's exact segment offsets — no padding is skipped
+    because none was sent.
+    """
+    for offset, nbytes, unpack_fn in leaves:
+        part = jax.lax.dynamic_slice(wire, (offset,), (nbytes,))
+        dst = unpack_fn(dst, part)
+    return dst
 
 
 def _unpack_rows_kernel(dst_ref, pk_ref, out_ref, *, r: int, lanes: int):

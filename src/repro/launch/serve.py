@@ -6,6 +6,11 @@
 Implements the serving side of the framework: continuous batching
 (slots are re-filled from the queue as sequences finish), family-aware
 caches (KV ring buffer / SSM state / RWKV shift state), greedy sampling.
+
+Like ``launch.train``, the server's datatype communication seam is a
+*production* Communicator (``repro.measure.production``): calibrated
+tables + a pinned decisions file mean the strategy model runs at most
+once per deployment, not once per process.
 """
 
 from __future__ import annotations
@@ -39,7 +44,8 @@ class Request:
 class ServeLoop:
     """Slot-based continuous batching over a fixed decode batch."""
 
-    def __init__(self, cfg: ModelConfig, batch_size: int, max_len: int):
+    def __init__(self, cfg: ModelConfig, batch_size: int, max_len: int,
+                 comm=None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
@@ -49,6 +55,10 @@ class ServeLoop:
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.slot_pos = np.zeros(batch_size, np.int32)
         self._decode = jax.jit(self.model.decode_step)
+        #: datatype-communication seam (production Communicator); every
+        #: cross-device exchange a deployment adds goes through it so
+        #: calibrated params + pinned decisions apply uniformly
+        self.comm = comm
 
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
@@ -116,10 +126,22 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--comm-cache", default=None, metavar="DIR",
+                    help="measure-store root for the production "
+                         "communicator")
+    ap.add_argument("--no-comm-cache", action="store_true",
+                    help="skip calibration/decision pinning entirely")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.scale == "full" else smoke_config(args.arch)
-    loop = ServeLoop(cfg, args.batch, args.max_len)
+    comm = save_decisions = None
+    if not args.no_comm_cache:
+        from repro.measure.production import production_communicator
+
+        comm, save_decisions = production_communicator(args.comm_cache)
+        print(f"comm: params={comm.model.params.name} "
+              f"pinned_decisions={len(comm.model.decisions)}")
+    loop = ServeLoop(cfg, args.batch, args.max_len, comm=comm)
     rng = np.random.default_rng(0)
     reqs = [
         Request(
@@ -138,6 +160,9 @@ def main() -> None:
           f"({total_new/dt:.1f} tok/s, batch={args.batch}, {cfg.name})")
     for rid in sorted(done)[:3]:
         print(f"  req {rid}: {done[rid][:8]}...")
+    if save_decisions is not None:
+        path = save_decisions()
+        print(f"comm: decisions -> {path}")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,13 @@
 Wires together: config -> model -> sharded params/opt -> data pipeline ->
 jit'd train step (in/out shardings from the rule set) -> checkpoint
 manager (restore-on-start, periodic atomic saves) -> straggler monitor.
+
+Datatype communication goes through a *production* Communicator
+(``repro.measure.production``): the first run on a machine calibrates
+the system tables once (reduced grid off-TPU) and records every
+strategy selection to a decisions file in the measure store; later runs
+load both and pin the selections — the model is never consulted again
+(``--no-comm-cache`` skips all of it).
 """
 
 from __future__ import annotations
@@ -61,6 +68,7 @@ def train(
     mesh=None,
     log_every: int = 10,
     ckpt_every: int = 100,
+    comm=None,
 ) -> dict:
     shape = ShapeConfig("train", seq_len, global_batch, "train")
     model = build_model(cfg)
@@ -119,7 +127,10 @@ def train(
             mgr.maybe_save(step, {"params": params, "opt": opt_state})
 
         mgr.maybe_save(steps, {"params": params, "opt": opt_state})
-    return {"losses": history, "params": params}
+    out = {"losses": history, "params": params}
+    if comm is not None:
+        out["comm_stats"] = comm.stats()
+    return out
 
 
 def main() -> None:
@@ -131,16 +142,41 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--comm-cache", default=None, metavar="DIR",
+                    help="measure-store root for the production "
+                         "communicator (default: $REPRO_MEASURE_DIR or "
+                         "the user cache dir)")
+    ap.add_argument("--no-comm-cache", action="store_true",
+                    help="skip calibration/decision pinning entirely "
+                         "(analytic model, nothing persisted)")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch, args.scale)
     n = cfg.param_count()
     print(f"training {cfg.name} ({n/1e6:.1f}M params, family={cfg.family}) "
           f"for {args.steps} steps @ seq={args.seq_len} batch={args.global_batch}")
-    out = train(cfg, args.steps, args.seq_len, args.global_batch, args.ckpt_dir)
+
+    comm = save_decisions = None
+    if not args.no_comm_cache:
+        from repro.measure.production import production_communicator
+
+        comm, save_decisions = production_communicator(
+            args.comm_cache, axis_name="data"
+        )
+        dc = comm.model.decisions
+        print(f"comm: params={comm.model.params.name} "
+              f"pinned_decisions={len(dc)}")
+
+    out = train(cfg, args.steps, args.seq_len, args.global_batch,
+                args.ckpt_dir, comm=comm)
     losses = out["losses"]
     print(f"loss: first={losses[0]:.4f} last={losses[-1]:.4f} "
           f"(delta {losses[0]-losses[-1]:+.4f})")
+    if save_decisions is not None:
+        path = save_decisions()
+        dc = comm.model.decisions
+        print(f"comm: recorded {len(dc)} decisions "
+              f"({dc.pinned_hits} pinned hits) -> {path}")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,7 @@ from repro.measure.bench import (
     measure_pack_table,
     measure_unpack_table,
     measure_wire_table,
+    measure_wire_tables,
     time_fn,
 )
 from repro.measure.decisions import Decision, DecisionCache
@@ -36,7 +37,12 @@ from repro.measure.fingerprint import (
     system_fingerprint,
     type_fingerprint,
 )
+from repro.measure.production import (
+    DECISIONS_FILENAME,
+    production_communicator,
+)
 from repro.measure.store import (
+    COMPATIBLE_FORMATS,
     ParamsStore,
     STORE_FORMAT,
     ci_params_path,
@@ -46,6 +52,8 @@ from repro.measure.store import (
 )
 
 __all__ = [
+    "COMPATIBLE_FORMATS",
+    "DECISIONS_FILENAME",
     "Decision",
     "DecisionCache",
     "ParamsStore",
@@ -60,6 +68,8 @@ __all__ = [
     "measure_pack_table",
     "measure_unpack_table",
     "measure_wire_table",
+    "measure_wire_tables",
+    "production_communicator",
     "system_description",
     "system_fingerprint",
     "time_fn",

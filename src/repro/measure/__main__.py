@@ -25,9 +25,21 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true",
                     help="small CI grid instead of the full sweep")
     ap.add_argument("--name", default=None, help="params table name")
+    ap.add_argument("--mesh-axes", default=None,
+                    help="per-axis wire sweep spec, e.g. ici=4,dcn=2 "
+                         "(axis sizes must multiply to <= device count)")
     args = ap.parse_args()
 
-    params = calibrate_params(name=args.name, reduced=args.reduced)
+    mesh_axes = None
+    if args.mesh_axes:
+        mesh_axes = {}
+        for part in args.mesh_axes.split(","):
+            k, v = part.split("=")
+            mesh_axes[k.strip()] = int(v)
+
+    params = calibrate_params(
+        name=args.name, reduced=args.reduced, mesh_axes=mesh_axes
+    )
     store = ParamsStore()
     path = store.save(params, path=args.out)
     strategies = sorted((params.pack_table or {}).keys())
@@ -35,6 +47,9 @@ def main() -> None:
           f"system: {system_fingerprint()} {system_description()}")
     print(f"measured strategies: {strategies}")
     print(f"wire fit: latency={params.wire_latency} bw={params.wire_bw}")
+    if params.wire_tables:
+        for ax, fit in sorted((params.wire_fits or {}).items()):
+            print(f"wire[{ax}]: latency={fit[0]} bw={fit[1]}")
     print(f"wrote {path}")
 
 

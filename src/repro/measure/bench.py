@@ -14,6 +14,11 @@ all of them on the *running* backend:
   over however many devices exist; 1-device self-permutes still price
   the dispatch overhead) over message sizes, with a least-squares
   (latency, bandwidth) fit;
+* :func:`measure_wire_tables` — the same sweep run **per mesh axis**: a
+  multi-axis mesh (fast ICI axis x slow DCN axis) has genuinely
+  different link terms per axis, so each axis gets its own ring, table,
+  and fit, and ``PerfModel.t_link(axis=...)`` prices the axis it is
+  actually crossing;
 * :func:`measure_copy_table` — contiguous device copy over sizes (the
   memcpy analogue every strategy's staging bottoms out in).
 
@@ -49,6 +54,7 @@ __all__ = [
     "measure_pack_table",
     "measure_unpack_table",
     "measure_wire_table",
+    "measure_wire_tables",
     "measure_copy_table",
     "fit_latency_bandwidth",
     "calibrate_params",
@@ -207,6 +213,54 @@ def measure_wire_table(
     return rows
 
 
+def measure_wire_tables(
+    axes: Optional[Dict[str, int]] = None,
+    total_bytes: Sequence[int] = TOTAL_BYTES,
+    iters: int = 5,
+) -> Dict[str, List[Tuple[float, float]]]:
+    """One-hop collective sweep per mesh axis.
+
+    ``axes`` maps axis name -> size (ordered; the product must not
+    exceed the visible device count — the first ``prod(sizes)`` devices
+    are folded into the mesh).  Each axis is measured with a ``ppermute``
+    ring *along that axis only*, inside a shard_map over the full mesh,
+    so the timing reflects that axis's links.  Default: one flat
+    ``wire`` axis over every device (the legacy single-table sweep).
+    """
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    devs = jax.devices()
+    if axes is None:
+        axes = {"wire": len(devs)}
+    names = tuple(axes)
+    shape = tuple(axes[n] for n in names)
+    ndev = int(np.prod(shape))
+    if ndev > len(devs):
+        raise ValueError(
+            f"mesh {dict(axes)} needs {ndev} devices, have {len(devs)}"
+        )
+    mesh = Mesh(np.array(devs[:ndev]).reshape(shape), names)
+    tables: Dict[str, List[Tuple[float, float]]] = {}
+    for ai, name in enumerate(names):
+        n = shape[ai]
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        rows = []
+        for total in total_bytes:
+            def body(x, _name=name, _perm=perm):
+                return jax.lax.ppermute(x, _name, _perm)
+
+            fn = jax.jit(
+                shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False)
+            )
+            x = jnp.zeros((total,), jnp.uint8)
+            rows.append((math.log2(total), time_fn(fn, x, iters=iters)))
+        tables[name] = rows
+    return tables
+
+
 def fit_latency_bandwidth(
     rows: Sequence[Tuple[float, float]]
 ) -> Tuple[Optional[float], Optional[float]]:
@@ -232,8 +286,15 @@ def calibrate_params(
     reduced: bool = False,
     strategies=None,
     iters: Optional[int] = None,
+    mesh_axes: Optional[Dict[str, int]] = None,
 ) -> SystemParams:
     """Full-term calibration: pack + unpack + wire + contiguous copy.
+
+    ``mesh_axes`` (axis name -> size, e.g. ``{"ici": 4, "dcn": 2}``)
+    sweeps the wire term once per mesh axis and stores one table + fit
+    per axis (``wire_tables`` / ``wire_fits``) so ``t_link`` can price
+    multi-axis meshes honestly; the flat full-device ring remains the
+    axis-agnostic ``wire_table`` fallback either way.
 
     Returns a :class:`SystemParams` whose measured tables drive every
     term of the model's T = T_pack + T_link + T_unpack; the analytic
@@ -248,6 +309,12 @@ def calibrate_params(
     copy = measure_copy_table(totals, iters=it)
     wire = measure_wire_table(totals, iters=it)
     wire_lat, wire_bw = fit_latency_bandwidth(wire)
+    wire_tables = wire_fits = None
+    if mesh_axes is not None:
+        wire_tables = measure_wire_tables(mesh_axes, totals, iters=it)
+        wire_fits = {
+            ax: fit_latency_bandwidth(rows) for ax, rows in wire_tables.items()
+        }
 
     backend = jax.default_backend()
     base = TPU_V5E if backend == "tpu" else dataclasses.replace(
@@ -266,6 +333,10 @@ def calibrate_params(
         unpack_table={k: tuple(v) for k, v in unpack.items() if v},
         wire_table=tuple(wire),
         copy_table=tuple(copy),
+        wire_tables=(
+            {k: tuple(v) for k, v in wire_tables.items()} if wire_tables else None
+        ),
+        wire_fits=wire_fits,
         wire_latency=wire_lat,
         wire_bw=wire_bw,
         ici_bw=wire_bw if wire_bw else base.ici_bw,

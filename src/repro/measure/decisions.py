@@ -45,6 +45,7 @@ class Decision:
     t_link: float
     t_unpack: float
     signature: str = ""     # human-readable datatype description
+    wire_bytes: int = 0     # exact bytes the choice puts on the wire
 
     @property
     def total(self) -> float:
@@ -100,6 +101,7 @@ class DecisionCache:
         allow_bounding: bool,
         estimate: StrategyEstimate,
         ct=None,
+        signature: Optional[str] = None,
     ) -> Decision:
         d = Decision(
             fingerprint=fingerprint,
@@ -110,7 +112,8 @@ class DecisionCache:
             t_pack=estimate.t_pack,
             t_link=estimate.t_link,
             t_unpack=estimate.t_unpack,
-            signature=_describe(ct),
+            signature=signature if signature is not None else _describe(ct),
+            wire_bytes=getattr(estimate, "wire_bytes", 0),
         )
         self._insert(d)
         return d
@@ -158,16 +161,16 @@ class DecisionCache:
     def report(self) -> str:
         """The audit log as aligned text: one selection per line."""
         lines = [
-            f"{'fingerprint':16s}  {'n':>3s} {'hop':>3s} {'strategy':10s}"
+            f"{'fingerprint':16s}  {'n':>3s} {'hop':>3s} {'strategy':12s}"
             f" {'t_pack_us':>10s} {'t_link_us':>10s} {'t_unpack_us':>11s}"
-            f" {'total_us':>10s}  signature"
+            f" {'total_us':>10s} {'wire_B':>10s}  signature"
         ]
         for d in self.log:
             lines.append(
                 f"{d.fingerprint:16s}  {d.incount:3d} {d.hops:3d}"
-                f" {d.strategy:10s} {d.t_pack * 1e6:10.3f}"
+                f" {d.strategy:12s} {d.t_pack * 1e6:10.3f}"
                 f" {d.t_link * 1e6:10.3f} {d.t_unpack * 1e6:11.3f}"
-                f" {d.total * 1e6:10.3f}  {d.signature}"
+                f" {d.total * 1e6:10.3f} {d.wire_bytes:10d}  {d.signature}"
             )
         return "\n".join(lines)
 

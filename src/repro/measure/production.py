@@ -1,0 +1,76 @@
+"""Production entry-point wiring: measured params + pinned decisions.
+
+The §6.3 lifecycle for a long-running job in one call: the first run
+calibrates (or loads a prior calibration for this system fingerprint)
+and records every strategy selection it makes; the decisions file is
+saved next to the params store, so every later run of the same job
+**pins** those selections and never consults the model again.  The
+``launch.train`` / ``launch.serve`` drivers construct their communicator
+through this module.
+
+    comm, save = production_communicator(axis_name="data")
+    ... run the job; every datatype exchange goes through `comm` ...
+    save()          # persist the (possibly grown) decision file
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Callable, Optional, Tuple, Union
+
+from repro.comm.api import Communicator
+from repro.comm.perfmodel import SystemParams, TPU_V5E
+from repro.measure.decisions import DecisionCache
+from repro.measure.store import ParamsStore
+
+__all__ = ["DECISIONS_FILENAME", "production_communicator"]
+
+#: the decisions file lives next to the params envelopes in the store
+DECISIONS_FILENAME = "decisions.json"
+
+
+def production_communicator(
+    cache_dir: Optional[Union[str, Path]] = None,
+    axis_name: Optional[str] = None,
+    *,
+    calibrate: bool = True,
+    reduced: Optional[bool] = None,
+    params: Optional[SystemParams] = None,
+) -> Tuple[Communicator, Callable[[], Path]]:
+    """A :class:`Communicator` wired for production reuse.
+
+    Parameters
+    ----------
+    cache_dir: params-store root (default: ``$REPRO_MEASURE_DIR`` or the
+        user cache dir — the same store ``load_or_calibrate`` uses).
+    axis_name: mesh axis the communicator (and its per-axis wire
+        pricing) binds to.
+    calibrate: when True (default), a missing calibration for this
+        system fingerprint is measured once and persisted
+        (``load_or_calibrate``); when False, a missing calibration falls
+        back to the analytic table — nothing slow happens.
+    reduced: grid size for a fresh calibration; defaults to reduced
+        everywhere but on a real TPU backend.
+    params: explicit SystemParams override (skips the store entirely).
+
+    Returns ``(comm, save)``: call ``save()`` after the job to persist
+    the decision cache — the file that lets the next run skip the model.
+    """
+    store = ParamsStore(cache_dir)
+    if params is None:
+        if calibrate:
+            if reduced is None:
+                import jax
+
+                reduced = jax.default_backend() != "tpu"
+            params = store.load_or_calibrate(reduced=reduced)
+        else:
+            params = store.load() or TPU_V5E
+    decisions_path = store.root / DECISIONS_FILENAME
+    decisions = DecisionCache.load(decisions_path)
+    comm = Communicator(axis_name=axis_name, params=params, decisions=decisions)
+
+    def save() -> Path:
+        return decisions.save(decisions_path)
+
+    return comm, save

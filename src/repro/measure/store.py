@@ -6,7 +6,7 @@ Layout: one JSON file per system fingerprint under a root directory
 envelope::
 
     {
-      "format": 2,                       # store format version
+      "format": 3,                       # store format version
       "system": "<system fingerprint>",  # backend/topology key
       "system_description": [...],       # human-readable provenance
       "params": { ... SystemParams ... }
@@ -37,6 +37,7 @@ from repro.measure.fingerprint import system_description, system_fingerprint
 
 __all__ = [
     "STORE_FORMAT",
+    "COMPATIBLE_FORMATS",
     "ParamsStore",
     "default_store",
     "load_or_calibrate",
@@ -45,7 +46,13 @@ __all__ = [
 ]
 
 #: bump when the envelope or SystemParams schema changes incompatibly
-STORE_FORMAT = 2
+STORE_FORMAT = 3
+
+#: formats this reader still understands: format 2 predates the
+#: per-axis wire tables (``wire_tables`` / ``wire_fits``), which are
+#: optional fields — a format-2 envelope (e.g. the checked-in
+#: ``ci_params.json``) loads unchanged with those fields absent
+COMPATIBLE_FORMATS = (2, STORE_FORMAT)
 
 _ENV_ROOT = "REPRO_MEASURE_DIR"
 
@@ -97,7 +104,7 @@ class ParamsStore:
         d = json.loads(p.read_text())
         system = None
         if "params" in d:
-            if d.get("format") != STORE_FORMAT:
+            if d.get("format") not in COMPATIBLE_FORMATS:
                 return None, None
             system = d.get("system")
             d = d["params"]

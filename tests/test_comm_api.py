@@ -257,10 +257,56 @@ class TestNeighborAlltoallv:
         assert plan.nranks == 8
         # 26 directions collapse into the 7 displacement classes mod 2
         assert len(plan.groups) == 7
-        assert sorted(i for g in plan.groups for i in g) == list(range(26))
+        assert sorted(
+            i for g in plan.groups for i in g.transfers
+        ) == list(range(26))
         for r in range(8):
             dests = [d for d in range(8) if plan.send_rows[r][d] != 7]
             assert len(dests) == 7  # one segment per peer, none to self
+        # exact-byte layout: every transfer has its own wire segment, the
+        # total is the ragged optimum, and the segments tile the buffer
+        assert plan.wire_bytes == 26 * 64
+        assert sorted(s.offset for s in plan.segments) == [
+            64 * i for i in range(26)
+        ]
+        # class totals are unequal (2/4/8 members x 64B) so a uniform
+        # all_to_all would have to pad: the plan must not choose it at
+        # zero waste tolerance on this JAX
+        assert plan.seg_bytes == 8 * 64
+        assert plan.padding_bytes == 0
+        assert plan.issued_bytes == plan.wire_bytes
+
+    def test_plan_uniform_schedule_requires_tolerance(self):
+        # same halo layout: opting into waste tolerance re-enables the
+        # single uniform collective (1 op, padded rows)
+        from repro.comm.wireplan import plan_wire
+
+        spec = HaloSpec(grid=(2, 2, 2), interior=(4, 4, 4))
+        perms = tuple(tuple(map(tuple, spec.perm(d))) for d in DIRECTIONS)
+        sizes = tuple(64 for _ in DIRECTIONS)
+        exact = plan_wire(sizes, perms, native=False)
+        assert exact.schedule == "grouped"
+        assert exact.wire_ops == 7
+        tolerant = plan_wire(sizes, perms, native=False,
+                             uniform_waste_tolerance=10.0)
+        assert tolerant.schedule == "uniform"
+        assert tolerant.wire_ops == 1
+        assert tolerant.issued_bytes == 8 * tolerant.seg_bytes
+        assert tolerant.padding_bytes > 0
+
+    def test_plan_grid_size_threshold_forces_grouped(self):
+        # past rank_factor x ngroups the fused layout is mostly zero
+        # rows: the plan must take the grouped fallback even when a
+        # native ragged collective (or infinite tolerance) is claimed
+        from repro.comm.wireplan import plan_wire
+
+        nranks = 16
+        ring = tuple((r, (r + 1) % nranks) for r in range(nranks))
+        plan = plan_wire((128,), (ring,), native=True,
+                         uniform_waste_tolerance=float("inf"))
+        assert plan.ngroups == 1
+        assert plan.schedule == "grouped"
+        assert plan.issued_bytes == plan.wire_bytes == 128
 
     def test_plan_rejects_non_permutation(self):
         with pytest.raises(ValueError):

@@ -51,10 +51,20 @@ for mode in ("baseline", "tempi"):
 
 np.testing.assert_array_equal(results["baseline"], results["tempi"])
 
-# the whole 26-region exchange must ride ONE fused wire transport
-jaxpr = str(jax.make_jaxpr(step)(x0))
-assert jaxpr.count("all_to_all") == 1, jaxpr.count("all_to_all")
-assert "ppermute" not in jaxpr
+# the whole 26-region exchange must ride the fused exact-byte wire
+# schedule: one wire op per displacement class (7 on a 2x2x2 grid),
+# moving exactly the sum of per-peer packed extents — no class padding.
+# Forced pack strategy makes the expected byte count Σ ct.size exactly.
+from repro.comm import Communicator, FixedPolicy, collective_payload_bytes
+from repro.halo import make_halo_plan
+comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+plan = make_halo_plan(spec, comm)
+step = make_halo_step(spec, comm, mesh)
+counts = collective_payload_bytes(step, x0)
+assert plan.wire.ngroups == 7
+assert counts["ops"] == plan.wire.wire_ops == 7, counts
+assert counts["total"] == plan.wire_bytes == plan.wire.issued_bytes, counts
+assert plan.wire_bytes == sum(ct.packed_extent() for ct in plan.send_cts)
 print("FUSED_OK")
 
 # oracle: every cell (including halos) must equal the periodic global value

@@ -76,10 +76,12 @@ def test_overlapped_iteration_matches_plain_single_rank():
     # the interior compute was built
     assert probe["pending_during_interior"] is True
 
-    # still exactly one fused collective
-    jaxpr = str(jax.make_jaxpr(jo)(x))
-    assert jaxpr.count("all_to_all") == 1
-    assert "ppermute" not in jaxpr
+    # single-rank periodic grid: all 26 transfers share one delta class,
+    # so the fused exact-byte schedule issues exactly one collective
+    from repro.comm import collective_payload_bytes
+
+    counts = collective_payload_bytes(jo, x)
+    assert counts["ops"] == 1, counts
 
 
 OVERLAP_8RANK_CODE = r"""
@@ -119,8 +121,13 @@ rng = np.random.default_rng(7)
 x = jnp.asarray(rng.normal(size=(R * az, ay, ax)).astype(np.float32))
 np.testing.assert_array_equal(np.asarray(jp(x)), np.asarray(jo(x)))
 assert probe["pending_during_interior"] is True
-jaxpr = str(jax.make_jaxpr(jo)(x))
-assert jaxpr.count("all_to_all") == 1 and "ppermute" not in jaxpr
+# 2x2x2 grid: 7 delta classes -> 7 exact-payload wire ops, ragged bytes
+from repro.comm import collective_payload_bytes
+from repro.halo import make_halo_plan
+plan = make_halo_plan(spec, comm)
+counts = collective_payload_bytes(jo, x)
+assert counts["ops"] == plan.wire.wire_ops == 7, counts
+assert counts["total"] == plan.wire_bytes, counts
 print("OVERLAP_OK")
 """
 
