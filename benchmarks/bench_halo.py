@@ -10,6 +10,14 @@ accounting (exact ragged payload vs what the padded layout would move).
 trace the fused halo step in interpret mode and FAIL (exit 1) if the
 bytes its collectives move exceed the ragged optimum — the sum of
 per-peer packed extents.
+
+``--assert-program`` runs the deep-halo HaloProgram gate (CI): for each
+fusion depth ``s``, one traced program iteration must issue exactly ONE
+exchange (exchanges-per-stencil-step <= 1/s), the deep-radius wire
+layout must stay at the ragged optimum (the PR-3 wire-bytes gate, at the
+new segment sizes), depths must agree bit-exactly on the interior, and
+``price_program`` must never pick a depth whose predicted per-step cost
+exceeds ``s=1``.
 """
 
 from __future__ import annotations
@@ -113,26 +121,108 @@ print("WIRE_BYTES_OK")
 """
 
 
-def run(assert_ragged: bool = False) -> None:
+#: the deep-halo CI gate: a HaloProgram must actually avoid exchanges
+#: (one per s stencil steps), keep the ragged-optimal wire layout at the
+#: deep segment sizes, stay bit-exact across depths, and never let the
+#: model pick a depth it predicts to be worse than step-per-exchange
+_PROGRAM_ASSERT_CODE = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.comm import Communicator, FixedPolicy, collective_payload_bytes
+from repro.halo import build_halo_program, make_program_step
+from repro.measure import DecisionCache
+
+grid, interior = (2, 2, 2), (6, 5, 4)
+nz, ny, nx = interior
+R = 8
+mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
+field = np.random.default_rng(0).normal(size=(R, nz, ny, nx)).astype(np.float32)
+
+TOTAL_STEPS = 2
+interiors = {}
+for s in (1, 2):
+    comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+    prog = build_halo_program(grid, interior, comm, steps=s)
+    fn = make_program_step(prog, comm, mesh)
+    az, ay, ax = prog.spec.alloc
+    rz, ry, rx = prog.spec.radii
+    state = np.zeros((R, az, ay, ax), np.float32)
+    state[:, rz:rz+nz, ry:ry+ny, rx:rx+nx] = field
+    x = jnp.asarray(state.reshape(R * az, ay, ax))
+
+    counts = collective_payload_bytes(fn, x)
+    # one fused exchange (= plan.wire.wire_ops collectives) per s steps
+    assert counts["ops"] == prog.plan.wire.wire_ops, (s, counts)
+    exchanges_per_step = (counts["ops"] / prog.plan.wire.wire_ops) / s
+    assert exchanges_per_step <= 1.0 / s + 1e-12, (s, exchanges_per_step)
+    # wire-bytes gate (PR 3) at the deep radius: still the ragged optimum
+    ragged_optimum = sum(ct.packed_extent() for ct in prog.plan.send_cts)
+    assert prog.plan.wire_bytes == ragged_optimum, (s, prog.plan.wire_bytes)
+    assert counts["total"] <= ragged_optimum, (s, counts, ragged_optimum)
+    print(f"program/s={s}: ops={counts['ops']} "
+          f"exchanges_per_step={exchanges_per_step:.3f} "
+          f"wire_bytes={prog.plan.wire_bytes}")
+
+    out = x
+    for _ in range(TOTAL_STEPS // s):
+        out = fn(out)
+    interiors[s] = np.asarray(out).reshape(R, az, ay, ax)[
+        :, rz:rz+nz, ry:ry+ny, rx:rx+nx]
+
+np.testing.assert_array_equal(interiors[1], interiors[2])
+print("program bit-exact across depths")
+
+# the price_program oracle: auto never selects a depth predicted to be
+# worse per stencil step than s=1 (and records the choice)
+dc = DecisionCache()
+comm = Communicator(axis_name="ranks", decisions=dc)
+prog = build_halo_program(grid, interior, comm, steps="auto")
+one = [e for e in prog.candidates if e.steps == 1]
+assert one, prog.candidates
+assert prog.estimate.per_step <= one[0].per_step, (
+    prog.estimate, one[0])
+assert any(d.strategy == f"program/s={prog.steps}" for d in dc.log)
+print(f"auto depth s={prog.steps} per_step={prog.estimate.per_step:.3e} "
+      f"(s=1 {one[0].per_step:.3e})")
+print("PROGRAM_OK")
+"""
+
+
+def run(assert_ragged: bool = False, assert_program: bool = False) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
-    code = _ASSERT_CODE if assert_ragged else _CODE
-    proc = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        env=env, capture_output=True, text=True, timeout=1200,
-    )
-    if proc.returncode != 0:
-        print(f"fig12/FAILED,0,{proc.stderr.splitlines()[-1] if proc.stderr else 'unknown'}")
-        if assert_ragged:
-            sys.stderr.write(proc.stderr)
+    gate = assert_ragged or assert_program
+    # both gates run when both flags are given — combining flags must
+    # never silently drop a regression check
+    jobs = []
+    if assert_ragged:
+        jobs.append((_ASSERT_CODE, "WIRE_BYTES_OK"))
+    if assert_program:
+        jobs.append((_PROGRAM_ASSERT_CODE, "PROGRAM_OK"))
+    if not jobs:
+        jobs.append((_CODE, None))
+    for code, ok_token in jobs:
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            env=env, capture_output=True, text=True, timeout=1200,
+        )
+        if proc.returncode != 0:
+            print(f"fig12/FAILED,0,{proc.stderr.splitlines()[-1] if proc.stderr else 'unknown'}")
+            if gate:
+                sys.stderr.write(proc.stderr)
+                sys.exit(1)
+            return
+        sys.stdout.write(proc.stdout)
+        if ok_token is not None and ok_token not in proc.stdout:
             sys.exit(1)
-        return
-    sys.stdout.write(proc.stdout)
-    if assert_ragged and "WIRE_BYTES_OK" not in proc.stdout:
-        sys.exit(1)
 
 
 if __name__ == "__main__":
-    run(assert_ragged="--assert-ragged" in sys.argv[1:])
+    run(
+        assert_ragged="--assert-ragged" in sys.argv[1:],
+        assert_program="--assert-program" in sys.argv[1:],
+    )

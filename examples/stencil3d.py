@@ -1,19 +1,26 @@
-"""3D stencil with datatype-described halo exchange (paper §6.4).
+"""3D stencil with a deep-halo HaloProgram (paper §6.4, extended).
 
-Reproduces the paper's case study on an emulated 8-device mesh:
-a 26-point stencil over a periodic domain, radius-2 halos, each of the
-26 halo regions described by an MPI-style subarray datatype, packed by
-the TEMPI engine and exchanged through the Communicator's fused
-neighborhood alltoallv (ONE collective per exchange — the paper's
-MPI_Alltoallv transport).
+Reproduces the paper's case study on an emulated 8-device mesh — a
+26-point stencil over a periodic domain, each halo region described by
+an MPI-style subarray datatype, packed by the TEMPI engine and exchanged
+through the Communicator's fused neighborhood alltoallv — and runs it as
+a communication-avoiding ``HaloProgram``: one exchange at halo depth
+``s * r`` amortized over ``s`` local stencil applications on a shrinking
+valid region.
 
-``--overlap`` switches the iteration to the request-based pipeline
-(`overlapped_stencil_iteration`): the fused collective is issued first,
-the deep-interior stencil update — which reads no halo cells — runs
-while the wire is in flight, and only the rim waits for the halos.
+``--halo-steps N`` fixes the fusion depth (``2`` keeps the paper's
+radius-2 / two-applications-per-exchange setup; ``1`` is the
+step-per-exchange reference, bit-exact on the interior against any other
+depth).  ``--halo-steps auto`` lets ``PerfModel.price_program`` pick the
+depth from the measured wire/copy tables; with ``--decisions FILE`` the
+choice is recorded there and reruns pin it.
+
+``--overlap`` switches the iteration to the request-based pipeline:
+the fused collective is issued first and the steps-deep interior chain
+— which reads no halo cells — runs while the wire is in flight.
 
 Run:  python examples/stencil3d.py [--mode tempi|baseline] [--iters 5]
-                                   [--overlap]
+          [--halo-steps auto|N] [--decisions FILE] [--overlap]
 """
 
 # the dry-run pattern: device count must be fixed before jax init
@@ -28,17 +35,11 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
 from repro.comm import Communicator, MODES, policy_for_mode
-from repro.halo import (
-    HaloSpec,
-    halo_exchange,
-    make_halo_plan,
-    overlapped_stencil_iteration,
-    stencil_iterations,
-)
+from repro.halo import build_halo_program, make_program_step, parse_halo_steps
+from repro.measure import DecisionCache
 
 
 def main():
@@ -46,43 +47,46 @@ def main():
     ap.add_argument("--mode", default="tempi", choices=list(MODES))
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--interior", type=int, default=24)
+    ap.add_argument("--halo-steps", default="2", metavar="auto|N",
+                    help="stencil applications fused per exchange; 'auto' "
+                         "prices the depth with PerfModel.price_program")
+    ap.add_argument("--decisions", default=None, metavar="FILE",
+                    help="decision-cache file: records the auto depth "
+                         "choice (and every strategy selection); reruns "
+                         "pin it")
     ap.add_argument("--overlap", action="store_true",
-                    help="overlap the exchange with interior compute")
+                    help="hide the exchange behind the interior chain")
     args = ap.parse_args()
 
     grid = (2, 2, 2)
     n = args.interior
-    spec = HaloSpec(grid=grid, interior=(n, n, n), radius=2)
+    steps = parse_halo_steps(args.halo_steps)
+
+    decisions = DecisionCache.load(args.decisions) if args.decisions else None
+    comm = Communicator(axis_name="ranks", policy=policy_for_mode(args.mode),
+                        decisions=decisions)
+    program = build_halo_program(grid, (n, n, n), comm, steps=steps)
+    spec = program.spec
     R = spec.nranks
     az, ay, ax = spec.alloc
     assert len(jax.devices()) >= R, "need 8 devices (XLA_FLAGS sets them)"
 
-    comm = Communicator(axis_name="ranks", policy=policy_for_mode(args.mode))
     mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
-    plan = make_halo_plan(spec, comm)  # types + strategies + wire layout, once
+    step = make_program_step(program, comm, mesh, "ranks",
+                             overlap=args.overlap)
 
-    def iteration(local):
-        if args.overlap:
-            return overlapped_stencil_iteration(
-                local, spec, comm, "ranks", steps=2, plan=plan
-            )
-        local = halo_exchange(local, spec, comm, "ranks", plan=plan)
-        return stencil_iterations(local, spec, steps=2)
-
-    step = jax.jit(
-        shard_map(
-            iteration, mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"),
-            check_vma=False,
-        )
-    )
-
+    # seed the INTERIORS only (depth-independent: the same physical field
+    # regardless of --halo-steps; shells are filled by the first exchange)
     rng = np.random.default_rng(0)
-    state = jnp.asarray(
-        rng.normal(size=(R * az, ay, ax)).astype(np.float32)
-    )
+    nz, ny, nx = spec.interior
+    rz, ry, rx = spec.radii
+    state_np = np.zeros((R, az, ay, ax), np.float32)
+    state_np[:, rz:rz + nz, ry:ry + ny, rx:rx + nx] = rng.normal(
+        size=(R, nz, ny, nx)
+    ).astype(np.float32)
+    state = jnp.asarray(state_np.reshape(R * az, ay, ax))
 
-    state = step(state)  # compile
-    jax.block_until_ready(state)
+    jax.block_until_ready(step(state))  # compile (state not advanced)
     t0 = time.perf_counter()
     for _ in range(args.iters):
         state = step(state)
@@ -90,15 +94,34 @@ def main():
     dt = (time.perf_counter() - t0) / args.iters
 
     stats = comm.stats()
+    est = program.estimate
     print(f"mode={args.mode} overlap={args.overlap} ranks={R} "
-          f"interior={spec.interior} radius={spec.radius}")
+          f"interior={spec.interior} halo-radius={spec.radii}")
+    print(f"program: steps={program.steps} "
+          f"({'pinned' if program.pinned else args.halo_steps}), "
+          f"exchanges/step={program.exchanges_per_step:.3f}, "
+          f"predicted per-step {est.per_step * 1e6:.2f} us "
+          f"(exchange {est.t_exchange * 1e6:.2f} us, "
+          f"redundant {est.t_redundant * 1e6:.2f} us)")
     print(f"committed datatypes: {stats['committed_types']} (52 send/recv regions)")
-    print(f"wire schedule: {plan.wire.schedule} "
-          f"({plan.wire.wire_ops} collectives, "
-          f"{plan.wire_bytes} exact bytes, "
-          f"padding {plan.wire.padding_bytes})")
-    print(f"time per iteration (exchange + 2 stencil steps): {dt*1e3:.2f} ms")
-    print(f"checksum: {float(jnp.sum(state)):.6e}")
+    print(f"wire schedule: {program.plan.wire.schedule} "
+          f"({program.plan.wire.wire_ops} collectives per exchange, "
+          f"{program.plan.wire_bytes} exact bytes, "
+          f"padding {program.plan.wire.padding_bytes})")
+    print(f"time per iteration (1 exchange + {program.steps} stencil steps): "
+          f"{dt*1e3:.2f} ms")
+    # interior checksum: comparable across fusion depths (same physical
+    # state whenever iters * steps match — the halo shells and the alloc
+    # itself are depth-dependent, the interior is bit-exact)
+    interior = np.asarray(state).reshape(R, az, ay, ax)[
+        :, rz:rz + nz, ry:ry + ny, rx:rx + nx
+    ]
+    print(f"stencil steps applied: {args.iters * program.steps}")
+    print(f"interior checksum: {float(interior.sum()):.6e}")
+    if decisions is not None:
+        path = decisions.save(args.decisions)
+        print(f"decisions ({len(decisions)} rows, "
+              f"{decisions.pinned_hits} pinned hits) -> {path}")
 
 
 if __name__ == "__main__":

@@ -28,8 +28,19 @@ from repro.comm.api import (
 )
 from repro.comm.compress import INT8_WIRE, Int8Wire
 from repro.comm.interposer import Interposer
-from repro.comm.perfmodel import PerfModel, StrategyEstimate, SystemParams, TPU_V5E
-from repro.comm.wireplan import WireGroup, collective_payload_bytes, plan_wire
+from repro.comm.perfmodel import (
+    PerfModel,
+    ProgramEstimate,
+    StrategyEstimate,
+    SystemParams,
+    TPU_V5E,
+)
+from repro.comm.wireplan import (
+    WireGroup,
+    collective_payload_bytes,
+    plan_wire,
+    reschedule,
+)
 
 # the compressed-wire plugin ships registered (selectable=False: lossy,
 # opt-in via FixedPolicy) so its wire accounting is exercised everywhere
@@ -47,6 +58,7 @@ __all__ = [
     "ModelPolicy",
     "PerfModel",
     "Policy",
+    "ProgramEstimate",
     "Request",
     "SendRequest",
     "Strategy",
@@ -63,5 +75,6 @@ __all__ = [
     "plan_wire",
     "policy_for_mode",
     "register_strategy",
+    "reschedule",
     "resolve_strategy",
 ]

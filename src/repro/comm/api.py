@@ -851,6 +851,7 @@ class Communicator:
         perms: Sequence[Sequence[Tuple[int, int]]],
         strategies: Optional[Sequence[Strategy]] = None,
         uniform_waste_tolerance: float = 0.0,
+        schedule_policy: str = "exact",
     ) -> Tuple[Tuple[Strategy, ...], WirePlan]:
         """Select a strategy per transfer and lay the exchange out as an
         exact-byte :class:`WirePlan`.  Call once at setup time (e.g.
@@ -858,7 +859,25 @@ class Communicator:
         :meth:`ineighbor_alltoallv` to keep the per-call host work at
         dictionary lookups.  The plan is priced through the performance
         model and recorded (``wire_bytes`` included) in the attached
-        :class:`~repro.measure.decisions.DecisionCache`, if any."""
+        :class:`~repro.measure.decisions.DecisionCache`, if any.
+
+        ``schedule_policy`` picks how the wire schedule is chosen:
+
+        ``"exact"``   the byte-exact ladder (``uniform`` only within
+                      ``uniform_waste_tolerance`` of zero padding) — the
+                      wire-bytes regression gates assume this.
+        ``"model"``   :meth:`PerfModel.choose_wire_schedule` trades the
+                      grouped schedule's per-class collective launches
+                      against the uniform collective's padding bytes on
+                      the measured (per-axis) wire tables; the chosen
+                      schedule and the prices of the rejected
+                      alternatives are recorded in the decision row.
+        """
+        if schedule_policy not in ("exact", "model"):
+            raise ValueError(
+                f"unknown schedule_policy {schedule_policy!r}; "
+                "expected 'exact' or 'model'"
+            )
         strats = (
             tuple(strategies)
             if strategies is not None
@@ -871,7 +890,13 @@ class Communicator:
             fingerprints=tuple(s.fingerprint for s in segs),
             uniform_waste_tolerance=uniform_waste_tolerance,
         )
-        self.model.price_exchange(plan)
+        note = ""
+        if schedule_policy == "model":
+            plan, costs = self.model.choose_wire_schedule(plan)
+            note = " priced[" + " ".join(
+                f"{k}={v:.3e}" for k, v in sorted(costs.items())
+            ) + "]"
+        self.model.price_exchange(plan, note=note)
         return strats, plan
 
     def _issue_wire(

@@ -4,9 +4,18 @@ The point of the exact-byte :class:`~repro.comm.wireplan.WirePlan`
 accounting is that a strategy's wire extent need not equal the packed
 member bytes — a bounding window is *larger*, a compressed payload is
 *smaller*.  This plugin exercises the smaller side: float32 member
-bytes are symmetric-quantized to int8 for the link (4 scale bytes + one
-int8 per float — ~4x fewer wire bytes) and dequantized on the receive
-side before the scatter.
+bytes are symmetric-quantized to int8 for the link and dequantized on
+the receive side before the scatter.
+
+Quantization is **per 256-element block** by default: each block of the
+packed payload carries its own float32 scale (the header grows by 4 B
+per block), so one large-magnitude region no longer destroys the
+resolution of every other region in the payload — the lossy wire is
+usable on far more datatypes than the old per-payload scale allowed.
+``Int8Wire(block_elems=None)`` still *produces* the legacy one-scale
+format, and the decoder reads both (the scale count is recoverable from
+the wire length and the receive type, so a per-payload payload
+dequantizes correctly through the default per-block instance).
 
 Quantization is lossy, so the strategy registers with
 ``selectable = False``: the model never auto-picks it; opt in per
@@ -27,24 +36,37 @@ from repro.comm.api import Strategy
 from repro.core.commit import CommittedType
 from repro.kernels import ops
 
-__all__ = ["Int8Wire", "INT8_WIRE"]
+__all__ = ["Int8Wire", "INT8_WIRE", "BLOCK_ELEMS"]
 
-#: wire header: one float32 dequantization scale
-_HEADER_BYTES = 4
+#: bytes per float32 dequantization scale in the wire header
+_SCALE_BYTES = 4
+
+#: default quantization granularity (elements per scale)
+BLOCK_ELEMS = 256
 
 
 class Int8Wire(Strategy):
-    """Ship float32 member bytes as int8 + a float32 scale header."""
+    """Ship float32 member bytes as int8 + per-block float32 scales."""
 
     name = "int8wire"
     wire_only = True       # the compressed format only exists on the wire
     selectable = False     # lossy: never auto-selected, opt in explicitly
+
+    def __init__(self, block_elems: Optional[int] = BLOCK_ELEMS):
+        #: elements per quantization block; None = one scale for the
+        #: whole payload (the legacy wire format)
+        self.block_elems = block_elems
 
     def applicable(self, ct: CommittedType) -> bool:
         # the member bytes must re-view as float32 words; the type system
         # tracks bytes, not element dtypes, so the caller opting in (via
         # FixedPolicy) asserts the buffer really holds float32 data
         return ct.size % 4 == 0 and ct.word_bytes >= 4
+
+    def _nblocks(self, nfloats: int) -> int:
+        if self.block_elems is None or nfloats == 0:
+            return 1
+        return -(-nfloats // self.block_elems)
 
     # -- §5 cost model ----------------------------------------------------
     def model_pack(self, model, ct, incount):
@@ -64,8 +86,9 @@ class Int8Wire(Strategy):
         return ROWS.model_unpack(model, ct, incount) + 2 * size / p.hbm_bw
 
     def wire_bytes(self, ct: CommittedType, incount: int = 1) -> int:
-        # one int8 per float32 member + the scale header
-        return _HEADER_BYTES + (ct.size * incount) // 4
+        # one int8 per float32 member + one scale per quantization block
+        nfloats = (ct.size * incount) // 4
+        return _SCALE_BYTES * self._nblocks(nfloats) + nfloats
 
     # -- execution --------------------------------------------------------
     def pack(self, buf, ct, incount: int = 1, interpret: Optional[bool] = None):
@@ -73,19 +96,41 @@ class Int8Wire(Strategy):
         f = lax.bitcast_convert_type(
             member.reshape(-1, 4), jnp.float32
         ).reshape(-1)
-        scale = jnp.maximum(jnp.max(jnp.abs(f)), jnp.float32(1e-30)) / 127.0
-        q = jnp.clip(jnp.round(f / scale), -127, 127).astype(jnp.int8)
+        n = f.shape[0]
+        nb = self._nblocks(n)
+        block = self.block_elems if (self.block_elems and nb > 1) else n
+        pad = nb * block - n
+        blocks = jnp.pad(f, (0, pad)).reshape(nb, block)
+        scales = (
+            jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), jnp.float32(1e-30))
+            / 127.0
+        )
+        q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127)
+        q = q.astype(jnp.int8).reshape(-1)[:n]
         header = lax.bitcast_convert_type(
-            scale.astype(jnp.float32).reshape(1, 1), jnp.uint8
+            scales.astype(jnp.float32), jnp.uint8
         ).reshape(-1)
         return jnp.concatenate([header, ops.byte_view(q)])
 
     def unpack_wire(self, comm, dst, wire, recv_ct, send_ct=None, incount=1):
-        scale = lax.bitcast_convert_type(
-            wire[:_HEADER_BYTES].reshape(1, 4), jnp.float32
-        ).reshape(())
-        q = lax.bitcast_convert_type(wire[_HEADER_BYTES:], jnp.int8)
-        f = q.astype(jnp.float32) * scale
+        nfloats = (recv_ct.size * incount) // 4
+        nscales = (wire.shape[0] - nfloats) // _SCALE_BYTES
+        scales = lax.bitcast_convert_type(
+            wire[: _SCALE_BYTES * nscales].reshape(nscales, _SCALE_BYTES),
+            jnp.float32,
+        ).reshape(-1)
+        q = lax.bitcast_convert_type(wire[_SCALE_BYTES * nscales :], jnp.int8)
+        if nscales == 1:
+            f = q.astype(jnp.float32) * scales[0]  # legacy per-payload scale
+        else:
+            if self.block_elems is None or nscales != self._nblocks(nfloats):
+                raise ValueError(
+                    f"wire carries {nscales} scales for {nfloats} floats; "
+                    f"expected {self._nblocks(nfloats)} "
+                    f"(block_elems={self.block_elems})"
+                )
+            expand = jnp.repeat(scales, self.block_elems)[:nfloats]
+            f = q.astype(jnp.float32) * expand
         member = lax.bitcast_convert_type(f.reshape(-1, 1), jnp.uint8).reshape(-1)
         u = comm.select(recv_ct, incount, wire=False)
         return u.unpack(dst, member, recv_ct, incount)

@@ -38,7 +38,13 @@ from typing import Dict, Optional, Tuple
 
 from repro.core.commit import CommittedType
 
-__all__ = ["SystemParams", "StrategyEstimate", "PerfModel", "TPU_V5E"]
+__all__ = [
+    "SystemParams",
+    "StrategyEstimate",
+    "ProgramEstimate",
+    "PerfModel",
+    "TPU_V5E",
+]
 
 
 #: 2D measured table rows: (log2_contig_block_bytes, log2_total_bytes, sec)
@@ -147,6 +153,32 @@ class StrategyEstimate:
     @property
     def total(self) -> float:
         return self.t_pack + self.t_link + self.t_unpack
+
+
+@dataclass(frozen=True)
+class ProgramEstimate:
+    """Predicted cost of one deep-halo iteration: a single exchange at
+    halo depth ``steps * r`` amortized over ``steps`` stencil
+    applications, plus the redundant ghost-shell re-evaluation the
+    shrinking-region schedule pays instead of the saved exchanges.
+
+    The figure of merit is :attr:`per_step` — seconds per stencil
+    application — which is what :func:`PerfModel.price_program`
+    minimizes when ``--halo-steps auto`` picks the fusion depth.
+    """
+
+    steps: int
+    t_exchange: float   # one deep exchange: member pack/unpack + wire
+    t_redundant: float  # ghost-region re-evaluation across the fused steps
+    wire_bytes: int     # bytes that one exchange puts on the wire
+
+    @property
+    def total(self) -> float:
+        return self.t_exchange + self.t_redundant
+
+    @property
+    def per_step(self) -> float:
+        return self.total / max(self.steps, 1)
 
 
 class _Interp2D:
@@ -348,13 +380,16 @@ class PerfModel:
         return hops * p.ici_latency + nbytes / p.ici_bw
 
     # -- exchange pricing (exact-byte wire plans) -----------------------
-    def price_exchange(self, plan, axis: Optional[str] = None) -> StrategyEstimate:
+    def price_exchange(self, plan, axis: Optional[str] = None,
+                       note: str = "") -> StrategyEstimate:
         """Price a :class:`~repro.comm.wireplan.WirePlan`: the link term
         for the bytes its schedule actually issues, plus the per-extra-
         collective latency of the grouped schedule.  The estimate (byte
         count included) is recorded once per plan fingerprint in the
         attached decision cache, so audits show the true transfer size
-        of every fused exchange."""
+        of every fused exchange; ``note`` is appended to the audit
+        signature (the schedule chooser records the prices of the
+        alternatives it rejected)."""
         t = self.t_link(plan.issued_bytes, 1, axis)
         t += (plan.wire_ops - 1) * self._hop_latency(axis)
         est = StrategyEstimate(
@@ -369,10 +404,118 @@ class PerfModel:
                     signature=(
                         f"exchange schedule={plan.schedule}"
                         f" groups={plan.ngroups} ranks={plan.nranks}"
-                        f" ragged_bytes={plan.wire_bytes}"
+                        f" ragged_bytes={plan.wire_bytes}{note}"
                     ),
                 )
         return est
+
+    def price_wire_schedules(
+        self, plan, axis: Optional[str] = None, native: Optional[bool] = None
+    ) -> Dict[str, float]:
+        """Predicted seconds for every wire schedule that could carry the
+        plan's layout (ROADMAP: model-priced ``uniform`` vs ``grouped``).
+
+        ``grouped`` pays one collective launch per delta class on the
+        exact ragged bytes; ``uniform`` pays a single launch on the
+        row-equalized (padded) bytes; ``ragged`` — when the running JAX
+        has the native collective — pays one launch on the exact bytes.
+        The byte terms come from the measured per-axis wire tables when
+        calibration filled them, so the trade is priced on the system
+        actually running, not on a byte-exactness rule.
+
+        The large-grid threshold still applies: past
+        ``GROUPED_FALLBACK_RANK_FACTOR x ngroups`` ranks the fused
+        layouts are mostly zero rows / dead per-peer metadata — a cost
+        the per-byte link model cannot see — so only ``grouped`` is a
+        candidate there, exactly as in the exact ladder.
+        """
+        if native is None:
+            from repro.compat import has_ragged_all_to_all
+
+            native = has_ragged_all_to_all()
+        from repro.comm.wireplan import GROUPED_FALLBACK_RANK_FACTOR
+
+        lat = self._hop_latency(axis)
+        costs = {
+            "grouped": self.t_link(plan.wire_bytes, 1, axis)
+            + (plan.ngroups - 1) * lat
+        }
+        oversize = (
+            plan.ngroups
+            and plan.nranks > GROUPED_FALLBACK_RANK_FACTOR * plan.ngroups
+        )
+        if plan.fused and not oversize:
+            costs["uniform"] = self.t_link(plan.nranks * plan.seg_bytes, 1, axis)
+            if native:
+                costs["ragged"] = self.t_link(plan.wire_bytes, 1, axis)
+        return costs
+
+    def choose_wire_schedule(
+        self, plan, axis: Optional[str] = None, native: Optional[bool] = None
+    ):
+        """Re-schedule a plan onto the model-cheapest feasible wire
+        schedule.  Returns ``(plan, costs)`` — the (possibly rescheduled)
+        plan plus the per-schedule price table that justified it."""
+        from repro.comm.wireplan import reschedule
+
+        costs = self.price_wire_schedules(plan, axis, native)
+        best = min(costs, key=costs.get)
+        return reschedule(plan, best), costs
+
+    # -- deep-halo program pricing (exchange vs redundant compute) ------
+    def price_program(
+        self,
+        plan,
+        interior: Tuple[int, int, int],
+        op_radii: Tuple[int, int, int],
+        n_neighbors: int,
+        steps: int,
+        element_bytes: int = 4,
+        t_members: float = 0.0,
+        axis: Optional[str] = None,
+    ) -> ProgramEstimate:
+        """Price one deep-halo iteration: ONE exchange at halo depth
+        ``steps * op_radii`` (wire plan ``plan``, member pack/unpack time
+        ``t_members``) amortized over ``steps`` stencil applications,
+        against the redundant ghost-shell re-evaluation the shrinking
+        valid region pays.
+
+        Application ``k`` of ``steps`` writes interior plus a shell of
+        ``(steps - k) * op_radii`` — every shell cell is a cell some
+        neighbor also computes, i.e. pure redundancy bought to skip
+        ``steps - 1`` exchanges.  Each redundant cell costs a
+        neighborhood read sweep plus a center read and a write
+        (``n_neighbors + 2`` touches); the sweep time comes from the
+        measured contiguous-copy table when calibration filled it
+        (one copy = a read + a write = two touches), else from the
+        analytic HBM bandwidth.  Compare ``per_step`` across candidate
+        depths to pick ``s`` — ``price_program`` never guesses, it
+        prices the same tables every other selection uses.
+        """
+        wire = self.t_link(plan.issued_bytes, 1, axis)
+        wire += (plan.wire_ops - 1) * self._hop_latency(axis)
+        t_exchange = t_members + wire
+        p = self.params
+        interior_cells = math.prod(interior)
+        touches = n_neighbors + 2
+        t_red = 0.0
+        for k in range(1, steps + 1):
+            shell = tuple((steps - k) * r for r in op_radii)
+            cells = math.prod(n + 2 * s for n, s in zip(interior, shell))
+            red_bytes = (cells - interior_cells) * element_bytes
+            if red_bytes <= 0:
+                continue
+            copy = self.measured_copy(red_bytes)
+            per_touch = (
+                copy / 2.0 if copy is not None else red_bytes / p.hbm_bw
+            )
+            t_red += touches * per_touch
+        return ProgramEstimate(
+            steps=steps,
+            t_exchange=t_exchange,
+            t_redundant=t_red,
+            wire_bytes=plan.issued_bytes,
+        )
 
     # -- full strategy estimates (Eqs. 1-3 analogue) ----------------------
     def estimate(

@@ -36,6 +36,7 @@ on the wire) is what ``PerfModel.price_exchange`` prices and the
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import hashlib
 import math
@@ -48,6 +49,7 @@ __all__ = [
     "WireGroup",
     "WirePlan",
     "plan_wire",
+    "reschedule",
     "GROUPED_FALLBACK_RANK_FACTOR",
     "collective_payload_bytes",
     "WIRE_COLLECTIVES",
@@ -269,6 +271,28 @@ def plan_wire(
         send_rows=tuple(send_rows),
         recv_rows=tuple(recv_rows),
     )
+
+
+def reschedule(plan: WirePlan, schedule: str) -> WirePlan:
+    """The same layout under a different wire schedule.
+
+    The segment layout, groups, and byte accounting are schedule-
+    independent; only the transport differs — so a model-priced schedule
+    choice (``PerfModel.choose_wire_schedule``) swaps the schedule
+    without replanning.  ``ragged``/``uniform`` require a fused plan
+    (group -> peer injective per rank); the returned plan's fingerprint
+    and ``issued_bytes`` reflect the new schedule.
+    """
+    if schedule == plan.schedule:
+        return plan
+    if schedule not in ("ragged", "uniform", "grouped"):
+        raise ValueError(f"unknown wire schedule {schedule!r}")
+    if schedule in ("ragged", "uniform") and not plan.fused:
+        raise ValueError(
+            f"schedule {schedule!r} needs a fused plan (group->peer "
+            "injective per rank)"
+        )
+    return dataclasses.replace(plan, schedule=schedule)
 
 
 # ===========================================================================

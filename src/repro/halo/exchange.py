@@ -84,21 +84,13 @@ class HaloSpec:
 
     @property
     def radii(self) -> Tuple[int, int, int]:
-        """Per-dimension halo radii (scalar radius broadcast)."""
+        """Per-dimension halo radii (scalar radius broadcast).  Every
+        consumer — region datatypes, allocations, and the stencil
+        kernels — is per-dimension aware; the old ``scalar_radius``
+        symmetry guard is gone."""
         if isinstance(self.radius, tuple):
             return self.radius
         return (self.radius, self.radius, self.radius)
-
-    @property
-    def scalar_radius(self) -> int:
-        """The single radius, for callers that require symmetry (the
-        stencil kernels); raises on asymmetric specs."""
-        rz, ry, rx = self.radii
-        if not (rz == ry == rx):
-            raise ValueError(
-                f"operation requires a symmetric halo radius, got {self.radii}"
-            )
-        return rz
 
     @property
     def alloc(self) -> Tuple[int, int, int]:
@@ -192,17 +184,23 @@ class HaloPlan:
         return self.wire.wire_bytes
 
 
-def make_halo_plan(spec: HaloSpec, comm, types=None) -> HaloPlan:
+def make_halo_plan(
+    spec: HaloSpec, comm, types=None, schedule_policy: str = "exact"
+) -> HaloPlan:
     """Commit the 26 region types, select strategies, and lay out the
     exact-byte wire plan — the full setup cost of a halo exchange, paid
-    once."""
+    once.  ``schedule_policy="model"`` lets the performance model trade
+    grouped launch latencies against uniform padding bytes (see
+    :meth:`Communicator.plan_neighbor`)."""
     comm = as_communicator(comm)
     if types is None:
         types = make_halo_types(spec, comm)
     send_cts = tuple(types[d][0] for d in DIRECTIONS)
     recv_cts = tuple(types[d][1] for d in DIRECTIONS)
     perms = tuple(tuple(spec.perm(d)) for d in DIRECTIONS)
-    strategies, wire = comm.plan_neighbor(send_cts, perms)
+    strategies, wire = comm.plan_neighbor(
+        send_cts, perms, schedule_policy=schedule_policy
+    )
     return HaloPlan(
         spec=spec,
         send_cts=send_cts,
@@ -254,11 +252,12 @@ def halo_exchange(
     return ihalo_exchange(local, spec, comm, axis_name, types, plan).wait()
 
 
-def make_halo_step(spec: HaloSpec, comm, mesh: Mesh, axis_name="ranks"):
+def make_halo_step(spec: HaloSpec, comm, mesh: Mesh, axis_name="ranks",
+                   schedule_policy: str = "exact"):
     """jit-compiled shard_map wrapper: (nranks*az, ay, ax) global array,
     sharded on the leading axis, -> exchanged.  The halo plan (types,
     strategies, wire layout) is built here, once."""
-    plan = make_halo_plan(spec, comm)
+    plan = make_halo_plan(spec, comm, schedule_policy=schedule_policy)
 
     def step(local):
         return halo_exchange(local, spec, comm, axis_name, plan=plan)

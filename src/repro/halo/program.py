@@ -1,0 +1,336 @@
+"""HaloProgram: communication-avoiding deep-halo stencil schedules.
+
+TEMPI's discipline is that an interposed layer with empirical system
+measurements should restructure non-contiguous communication wherever
+the model says it wins.  The one-exchange-per-step halo loop leaves the
+biggest knob untouched: *how often* to exchange.  A
+:class:`HaloProgram` compiles the alternative — exchange a halo of
+depth ``s * r`` ONCE, then apply ``s`` stencil steps locally over a
+shrinking valid region (:func:`repro.halo.stencil.stencil_steps`) — and
+lets :meth:`repro.comm.perfmodel.PerfModel.price_program` choose ``s``
+from the same measured wire/copy tables every other strategy selection
+uses: deeper halos buy fewer collective launches and amortized wire
+latency at the price of more wire bytes per exchange and redundant
+ghost-shell compute.  Nothing is heuristic; the chosen depth is recorded
+in the :class:`~repro.measure.decisions.DecisionCache` like any other
+strategy selection, so ``--halo-steps auto`` is reproducible (pinned)
+across runs and auditable in the decisions file.
+
+Lifecycle (all host-side, paid once):
+
+```
+op + grid + interior ──▶ candidate depths s=1..max ──▶ price_program
+       │                        (deep HaloSpec,            │
+       │                         deep-halo WirePlan)       ▼
+       └────────────── pinned? ◀── DecisionCache ◀── argmin per-step
+                                                        cost
+```
+
+then per iteration: ONE fused exchange (the depth-``s*r`` region types
+are just bigger canonical strided blocks — the ragged wire path at new
+sizes) + ``s`` shrinking-region applications, bit-exact on the interior
+against the step-per-exchange reference.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.comm.api import as_communicator
+from repro.comm.perfmodel import ProgramEstimate
+from repro.core.datatypes import FLOAT, Named
+from repro.halo.exchange import HaloPlan, HaloSpec, halo_exchange, make_halo_plan
+from repro.halo.stencil import (
+    STENCIL26,
+    StencilOp,
+    overlapped_stencil_iteration,
+    stencil_steps,
+)
+
+__all__ = [
+    "HaloProgram",
+    "build_halo_program",
+    "make_program_step",
+    "program_fingerprint",
+    "parse_halo_steps",
+    "get_default_halo_steps",
+    "set_default_halo_steps",
+    "MAX_AUTO_STEPS",
+]
+
+#: deepest fusion the auto chooser considers (bounded: past a few steps
+#: the ghost shells dominate any realistic wire saving)
+MAX_AUTO_STEPS = 3
+
+#: process default for ``steps=None`` — what ``--halo-steps`` on the
+#: launch drivers configures for every program the job builds
+_DEFAULT_HALO_STEPS: Union[int, str] = "auto"
+
+
+def parse_halo_steps(value: Union[str, int]) -> Union[int, str]:
+    """CLI value of ``--halo-steps``: ``"auto"`` or a positive int."""
+    if value == "auto":
+        return "auto"
+    steps = int(value)
+    if steps < 1:
+        raise ValueError(f"--halo-steps must be >= 1 or 'auto', got {value!r}")
+    return steps
+
+
+def get_default_halo_steps() -> Union[int, str]:
+    return _DEFAULT_HALO_STEPS
+
+
+def set_default_halo_steps(steps: Union[int, str]) -> Union[int, str]:
+    """Set the process-wide default fusion depth (the launch drivers'
+    ``--halo-steps`` lands here; programs built with ``steps=None`` use
+    it)."""
+    global _DEFAULT_HALO_STEPS
+    _DEFAULT_HALO_STEPS = parse_halo_steps(steps)
+    return _DEFAULT_HALO_STEPS
+
+
+def program_fingerprint(
+    grid: Tuple[int, int, int],
+    interior: Tuple[int, int, int],
+    op: StencilOp,
+    element: Named,
+) -> str:
+    """Stable content hash of a program's geometry — the DecisionCache
+    key that pins ``--halo-steps auto`` across processes (the analogue
+    of ``CommittedType.fingerprint`` for per-type selections)."""
+    key = (
+        "haloprogram.v1",
+        tuple(grid),
+        tuple(interior),
+        tuple(op.radii),
+        float(op.weight),
+        element.name,
+        element.size,
+    )
+    return hashlib.sha256(repr(key).encode()).hexdigest()[:16]
+
+
+@dataclass(frozen=True)
+class HaloProgram:
+    """A compiled deep-halo schedule: {exchange at depth ``steps * r``,
+    apply steps ``1..steps`` over the shrinking valid region}.
+
+    Build with :func:`build_halo_program`; every per-iteration cost after
+    that is device compute plus the prebuilt :class:`HaloPlan`'s
+    dictionary lookups.
+    """
+
+    spec: HaloSpec              # deep geometry: radius == steps * op.radii
+    op: StencilOp
+    steps: int
+    plan: HaloPlan              # the one exchange, at the deep radius
+    estimate: ProgramEstimate   # model price that selected (or priced) steps
+    candidates: Tuple[ProgramEstimate, ...] = ()  # every depth priced
+    pinned: bool = False        # steps came from a pinned Decision
+
+    @property
+    def exchanges_per_step(self) -> float:
+        """Exchange collectives issued per stencil application — the
+        communication-avoidance figure the CI gate asserts (``1/s``)."""
+        return 1.0 / self.steps
+
+    @property
+    def fingerprint(self) -> str:
+        return program_fingerprint(
+            self.spec.grid, self.spec.interior, self.op, self.spec.element
+        )
+
+    def iteration(
+        self,
+        local: jax.Array,
+        comm,
+        axis_name: str = "ranks",
+        overlap: bool = False,
+        probe: Optional[dict] = None,
+    ) -> jax.Array:
+        """One program iteration: ONE fused exchange + ``steps``
+        shrinking-region stencil applications.  With ``overlap`` the
+        wire op hides behind the steps-deep interior chain."""
+        if overlap:
+            return overlapped_stencil_iteration(
+                local, self.spec, comm, axis_name,
+                steps=self.steps, probe=probe, plan=self.plan, op=self.op,
+            )
+        local = halo_exchange(local, self.spec, comm, axis_name, plan=self.plan)
+        return stencil_steps(local, self.spec, self.steps, self.op)
+
+
+def _feasible_steps(
+    interior: Tuple[int, int, int], op: StencilOp, max_steps: int
+) -> List[int]:
+    """Depths whose halo (= send-slab depth ``s * r``) still fits inside
+    the interior in every dimension."""
+    return [
+        s
+        for s in range(1, max_steps + 1)
+        if all(s * r <= n for n, r in zip(interior, op.radii))
+    ]
+
+
+def _price_candidate(
+    comm,
+    grid: Tuple[int, int, int],
+    interior: Tuple[int, int, int],
+    op: StencilOp,
+    steps: int,
+    element: Named,
+    schedule_policy: str,
+) -> Tuple[HaloSpec, HaloPlan, ProgramEstimate]:
+    """Build the deep geometry + wire plan for one candidate depth and
+    price the full iteration: member pack/unpack + wire per exchange,
+    redundant ghost-shell compute per fused step."""
+    spec = HaloSpec(
+        grid=grid, interior=interior, radius=op.halo_radii(steps),
+        element=element,
+    )
+    plan = make_halo_plan(spec, comm, schedule_policy=schedule_policy)
+    model = comm.model
+    t_members = 0.0
+    for ct, strat in zip(plan.send_cts, plan.strategies):
+        est = model.estimate(ct, 1, strat)
+        t_members += est.t_pack + est.t_unpack
+    estimate = model.price_program(
+        plan.wire,
+        interior,
+        op.radii,
+        op.nneighbors,
+        steps,
+        element_bytes=element.size,
+        t_members=t_members,
+        axis=model.axis,
+    )
+    return spec, plan, estimate
+
+
+def build_halo_program(
+    grid: Tuple[int, int, int],
+    interior: Tuple[int, int, int],
+    comm,
+    op: StencilOp = STENCIL26,
+    steps: Union[int, str, None] = None,
+    element: Named = FLOAT,
+    max_steps: int = MAX_AUTO_STEPS,
+    schedule_policy: str = "exact",
+) -> HaloProgram:
+    """Compile a deep-halo program for one rank geometry.
+
+    ``steps`` is a fixed depth, ``"auto"`` (the model prices every
+    feasible depth and takes the cheapest per stencil application), or
+    ``None`` (the process default — ``--halo-steps`` on the launch
+    drivers).  With ``"auto"`` and a communicator that carries a
+    :class:`~repro.measure.decisions.DecisionCache`, the choice is
+    looked up first and recorded after — reruns pin it, the audit log
+    shows it, CI can assert it.
+    """
+    comm = as_communicator(comm)
+    if steps is None:
+        steps = get_default_halo_steps()
+    fp = program_fingerprint(grid, interior, op, element)
+    decisions = comm.model.decisions
+    candidates: Tuple[ProgramEstimate, ...] = ()
+    pinned = False
+    built: Optional[Tuple[HaloSpec, HaloPlan, ProgramEstimate]] = None
+
+    if steps == "auto":
+        feasible = _feasible_steps(interior, op, max_steps)
+        if not feasible:
+            raise ValueError(
+                f"no feasible fusion depth: interior {interior} cannot host "
+                f"a depth-{op.radii} halo"
+            )
+        pin = decisions.lookup(fp, 0, 1, True) if decisions is not None else None
+        if (
+            pin is not None
+            and pin.strategy.startswith("program/s=")
+            # a pin recorded under a looser cap (or different geometry
+            # assumptions) must not smuggle in a depth this caller's
+            # max_steps/feasibility would refuse
+            and int(pin.strategy.split("=", 1)[1]) in feasible
+        ):
+            steps = int(pin.strategy.split("=", 1)[1])
+            pinned = True
+        else:
+            priced: Dict[int, Tuple[HaloSpec, HaloPlan, ProgramEstimate]] = {
+                s: _price_candidate(
+                    comm, grid, interior, op, s, element, schedule_policy
+                )
+                for s in feasible
+            }
+            candidates = tuple(priced[s][2] for s in feasible)
+            steps = min(priced, key=lambda s: priced[s][2].per_step)
+            built = priced[steps]
+            if decisions is not None:
+                from repro.comm.perfmodel import StrategyEstimate
+
+                best = priced[steps][2]
+                decisions.record(
+                    fp, 0, 1, True,
+                    StrategyEstimate(
+                        f"program/s={steps}",
+                        t_pack=best.t_redundant,
+                        t_link=best.t_exchange,
+                        t_unpack=0.0,
+                        wire_bytes=best.wire_bytes,
+                    ),
+                    signature=(
+                        f"halo program grid={tuple(grid)} "
+                        f"interior={tuple(interior)} op={op.radii} "
+                        + " ".join(
+                            f"s={e.steps}:{e.per_step:.3e}" for e in candidates
+                        )
+                    ),
+                )
+    else:
+        steps = parse_halo_steps(steps)
+        if steps not in _feasible_steps(interior, op, steps):
+            raise ValueError(
+                f"interior {interior} cannot host a depth-"
+                f"{op.halo_radii(steps)} halo (send slabs exceed the interior)"
+            )
+
+    if built is None:
+        built = _price_candidate(
+            comm, grid, interior, op, steps, element, schedule_policy
+        )
+    spec, plan, estimate = built
+    return HaloProgram(
+        spec=spec, op=op, steps=steps, plan=plan, estimate=estimate,
+        candidates=candidates, pinned=pinned,
+    )
+
+
+def make_program_step(
+    program: HaloProgram,
+    comm,
+    mesh: Mesh,
+    axis_name: str = "ranks",
+    overlap: bool = False,
+):
+    """jit-compiled shard_map wrapper over one program iteration:
+    (nranks*az, ay, ax) global array, sharded on the leading axis ->
+    one exchange + ``program.steps`` stencil applications."""
+    comm = as_communicator(comm)
+
+    def step(local):
+        return program.iteration(local, comm, axis_name, overlap=overlap)
+
+    fn = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=P(axis_name),
+        out_specs=P(axis_name),
+        check_vma=False,
+    )
+    return jax.jit(fn)

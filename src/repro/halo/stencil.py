@@ -1,89 +1,237 @@
-"""26-point 3D stencil update (paper §6.4: "standard 26 point" stencil,
-radius-2 halos, periodic boundaries, 4-byte gridpoints).
+"""Per-dimension-radius stencil kernels with shrinking-region deep-halo
+application (paper §6.4: "standard 26 point" stencil, radius-2 halos,
+periodic boundaries, 4-byte gridpoints).
 
-The radius-2 halo lets each exchange amortize over two local stencil
-applications (a standard deep-halo optimization; it keeps the
-exchange:compute ratio of the paper's setup).
+A :class:`StencilOp` describes one weighted box-neighborhood update with
+*per-dimension* radii ``(rz, ry, rx)`` — the paper's 26-point stencil is
+``StencilOp((1, 1, 1))``; a train-style workload that smooths deeper
+along the slow axis is ``StencilOp((2, 1, 1))``.  Nothing here requires
+a symmetric radius any more (the old ``HaloSpec.scalar_radius`` guard is
+gone): the halo radii, the stencil radii, and the valid-region
+bookkeeping are all per-dimension tuples.
+
+Deep halos trade wire for redundant compute: after one exchange at halo
+depth ``valid``, each application of a radius-``r`` op leaves a region
+deeper by ``r`` invalid, so :func:`stencil_apply` computes exactly the
+still-valid window — interior plus a shell of ``valid - r`` — and
+:func:`stencil_steps` walks ``valid`` down step by step.  With halo
+depth ``s * r`` that amortizes ONE exchange over ``s`` applications,
+bit-exact against the step-per-exchange reference on the interior
+(ghost-shell cells are recomputed redundantly; that redundancy is what
+:meth:`repro.comm.perfmodel.PerfModel.price_program` prices against the
+saved wire time).  :class:`repro.halo.program.HaloProgram` compiles the
+whole schedule.
+
+All window arithmetic goes through the shared
+:func:`repro.kernels.ops.stencil_window_update` primitive, so the
+full-allocation path, the shrinking-region path, and the dense interior
+chain of the overlap pipeline accumulate in the same order — which is
+what makes their overlapping regions bit-identical and the overlap
+splice legal.
 """
 
 from __future__ import annotations
 
 import itertools
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.halo.exchange import HaloPlan, HaloSpec, ihalo_exchange
+from repro.kernels.ops import stencil_window_update
 
 __all__ = [
+    "StencilOp",
+    "STENCIL26",
+    "stencil_apply",
+    "stencil_steps",
+    "stencil_interior_chain",
+    "max_pipeline_depth",
     "stencil26",
     "stencil26_interior",
     "stencil_iterations",
     "overlapped_stencil_iteration",
 ]
 
-_NEIGHBORS = tuple(
-    d for d in itertools.product((-1, 0, 1), repeat=3) if d != (0, 0, 0)
-)
 
+@dataclass(frozen=True)
+class StencilOp:
+    """One weighted box-neighborhood update with per-dimension radii.
 
-def stencil26(local: jax.Array, spec: HaloSpec) -> jax.Array:
-    """One 26-point update of the interior; halos must be current.
-
-    new[i] = (1-w)*u[i] + w/26 * sum_{26 neighbors} u[i+d]
+    ``new[i] = (1-w) * u[i] + w/N * sum over the N offsets d of u[i+d]``
+    where the offsets are every nonzero point of the
+    ``[-rz..rz] x [-ry..ry] x [-rx..rx]`` box.
     """
-    r = spec.scalar_radius
-    nz, ny, nx = spec.interior
-    w = jnp.float32(0.4)
-    acc = jnp.zeros((nz + 2 * (r - 1), ny + 2 * (r - 1), nx + 2 * (r - 1)),
-                    local.dtype)
-    # shifted views of the (interior + 1-cell shell) region
-    for dz, dy, dx in _NEIGHBORS:
-        acc = acc + jax.lax.dynamic_slice(
-            local,
-            (r - 1 + dz + 0, r - 1 + dy + 0, r - 1 + dx + 0),
-            acc.shape,
+
+    radii: Tuple[int, int, int] = (1, 1, 1)
+    weight: float = 0.4
+
+    def __post_init__(self):
+        r = tuple(int(x) for x in self.radii)
+        if len(r) != 3 or any(x < 1 for x in r):
+            raise ValueError(f"stencil radii must be 3 positive ints, got {r}")
+        object.__setattr__(self, "radii", r)
+
+    @property
+    def offsets(self) -> Tuple[Tuple[int, int, int], ...]:
+        """All nonzero neighbor offsets, in a deterministic order (the
+        accumulation order — part of the bit-exactness contract)."""
+        rz, ry, rx = self.radii
+        return tuple(
+            d
+            for d in itertools.product(
+                range(-rz, rz + 1), range(-ry, ry + 1), range(-rx, rx + 1)
+            )
+            if d != (0, 0, 0)
         )
-    center = jax.lax.dynamic_slice(local, (r - 1, r - 1, r - 1), acc.shape)
-    new_inner = (1 - w) * center + (w / 26.0) * acc
-    # write back the updated (interior + shell(r-1)) region
-    return jax.lax.dynamic_update_slice(local, new_inner, (r - 1, r - 1, r - 1))
+
+    @property
+    def nneighbors(self) -> int:
+        rz, ry, rx = self.radii
+        return (2 * rz + 1) * (2 * ry + 1) * (2 * rx + 1) - 1
+
+    def halo_radii(self, steps: int) -> Tuple[int, int, int]:
+        """Per-dimension halo depth that lets ``steps`` applications run
+        on one exchange."""
+        return tuple(steps * r for r in self.radii)
 
 
-def stencil_iterations(local: jax.Array, spec: HaloSpec, steps: int) -> jax.Array:
-    """``steps`` local stencil applications (valid until the halo depth
-    is exhausted: steps <= radius)."""
-    assert steps <= spec.scalar_radius
+#: the paper's 26-point stencil (radius 1 in every dimension)
+STENCIL26 = StencilOp((1, 1, 1))
+
+
+def _as_radii(valid, spec: HaloSpec) -> Tuple[int, int, int]:
+    if valid is None:
+        return spec.radii
+    if isinstance(valid, int):
+        return (valid, valid, valid)
+    return tuple(valid)
+
+
+def stencil_apply(
+    local: jax.Array,
+    spec: HaloSpec,
+    valid=None,
+    op: StencilOp = STENCIL26,
+) -> jax.Array:
+    """One stencil application over the still-valid window.
+
+    ``valid`` is the per-dimension halo depth whose cells currently hold
+    correct values (defaults to the full ``spec.radii`` — i.e. "the
+    exchange just ran").  The update writes interior plus a shell of
+    ``valid - op.radii`` — exactly the cells whose whole neighborhood is
+    valid — so after the call the valid depth has shrunk by ``op.radii``.
+    """
+    valid = _as_radii(valid, spec)
+    radii = spec.radii
+    for v, r, hr in zip(valid, op.radii, radii):
+        if v < r:
+            raise ValueError(
+                f"valid halo depth {valid} is shallower than the stencil "
+                f"radii {op.radii}; exchange first"
+            )
+        if v > hr:
+            raise ValueError(f"valid depth {valid} exceeds halo radii {radii}")
+    shell = tuple(v - r for v, r in zip(valid, op.radii))
+    origin = tuple(hr - s for hr, s in zip(radii, shell))
+    shape = tuple(n + 2 * s for n, s in zip(spec.interior, shell))
+    updated = stencil_window_update(local, op.offsets, op.weight, origin, shape)
+    return jax.lax.dynamic_update_slice(local, updated, origin)
+
+
+def stencil_steps(
+    local: jax.Array,
+    spec: HaloSpec,
+    steps: int,
+    op: StencilOp = STENCIL26,
+    valid=None,
+) -> jax.Array:
+    """``steps`` applications on one exchange, the valid region shrinking
+    by ``op.radii`` per step (valid until the halo depth is exhausted:
+    ``steps * op.radii <= valid``)."""
+    valid = _as_radii(valid, spec)
+    for v, r in zip(valid, op.radii):
+        if steps * r > v:
+            raise ValueError(
+                f"{steps} steps of radii {op.radii} exhaust the valid halo "
+                f"depth {valid}"
+            )
     for _ in range(steps):
-        local = stencil26(local, spec)
+        local = stencil_apply(local, spec, valid, op)
+        valid = tuple(v - r for v, r in zip(valid, op.radii))
     return local
 
 
-def stencil26_interior(local: jax.Array, spec: HaloSpec) -> jax.Array:
-    """First-application update of the DEEP interior: every cell whose
-    1-neighborhood lies entirely inside the interior, i.e. the cells
-    whose new values do not read any halo cell.
+def max_pipeline_depth(spec: HaloSpec, op: StencilOp, steps: int) -> int:
+    """How many of the ``steps`` fused applications have a nonempty deep
+    interior (every dim must keep >= 1 cell after shrinking ``k * r``
+    from each side) — the depth :func:`stencil_interior_chain` can
+    precompute while the exchange is on the wire."""
+    depth = 0
+    for k in range(1, steps + 1):
+        if any(n - 2 * k * r < 1 for n, r in zip(spec.interior, op.radii)):
+            break
+        depth = k
+    return depth
 
-    Returns the ``(nz-2, ny-2, nx-2)`` block of updated values (origin
-    ``(r+1, r+1, r+1)`` in the local allocation).  Because a halo
-    exchange only *writes* halo shells, this block is bit-identical to
-    the same region of ``stencil26(exchanged, spec)`` — which is what
-    makes it legal to compute while the exchange is still on the wire.
+
+def stencil_interior_chain(
+    local: jax.Array,
+    spec: HaloSpec,
+    depth: int,
+    op: StencilOp = STENCIL26,
+) -> List[jax.Array]:
+    """Steps-deep pipelining: applications ``1..depth`` restricted to the
+    cells that need NO halo data at all.
+
+    Block ``k`` (1-indexed) holds the application-``k`` values of the
+    interior shrunk by ``k * op.radii`` per side — computable from
+    ``local``'s interior alone, before any exchange completes.  Because a
+    halo exchange only *writes* halo shells, each block is bit-identical
+    to the same region of the post-exchange application (same primitive,
+    same accumulation order), which is what makes it legal to splice the
+    chain into the real iteration while the wire op is still in flight.
     """
-    r = spec.scalar_radius
-    nz, ny, nx = spec.interior
-    assert min(nz, ny, nx) > 2, "deep interior needs interior dims > 2"
-    w = jnp.float32(0.4)
-    shape = (nz - 2, ny - 2, nx - 2)
-    acc = jnp.zeros(shape, local.dtype)
-    for dz, dy, dx in _NEIGHBORS:
-        acc = acc + jax.lax.dynamic_slice(
-            local, (r + 1 + dz, r + 1 + dy, r + 1 + dx), shape
-        )
-    center = jax.lax.dynamic_slice(local, (r + 1, r + 1, r + 1), shape)
-    return (1 - w) * center + (w / 26.0) * acc
+    x = jax.lax.dynamic_slice(local, spec.radii, spec.interior)
+    blocks: List[jax.Array] = []
+    for _ in range(depth):
+        shape = tuple(s - 2 * r for s, r in zip(x.shape, op.radii))
+        if any(s < 1 for s in shape):
+            raise ValueError(
+                f"interior {spec.interior} too small for a depth-"
+                f"{len(blocks) + 1} chain of radii {op.radii}"
+            )
+        x = stencil_window_update(x, op.offsets, op.weight, op.radii, shape)
+        blocks.append(x)
+    return blocks
 
+
+# ---------------------------------------------------------------------------
+# legacy 26-point entry points (kept as thin wrappers over the per-dim API)
+# ---------------------------------------------------------------------------
+
+def stencil26(local: jax.Array, spec: HaloSpec) -> jax.Array:
+    """One 26-point update of the still-valid window (halos current)."""
+    return stencil_apply(local, spec, op=STENCIL26)
+
+
+def stencil26_interior(local: jax.Array, spec: HaloSpec) -> jax.Array:
+    """First-application update of the deep interior (no halo reads);
+    returns the ``interior - 2`` block at origin ``radii + 1``."""
+    return stencil_interior_chain(local, spec, 1, STENCIL26)[0]
+
+
+def stencil_iterations(local: jax.Array, spec: HaloSpec, steps: int) -> jax.Array:
+    """``steps`` 26-point applications on one exchange (shrinking valid
+    region)."""
+    return stencil_steps(local, spec, steps, STENCIL26)
+
+
+# ---------------------------------------------------------------------------
+# overlap: the exchange hidden behind the interior chain
+# ---------------------------------------------------------------------------
 
 def overlapped_stencil_iteration(
     local: jax.Array,
@@ -94,35 +242,44 @@ def overlapped_stencil_iteration(
     steps: int = 2,
     probe: Optional[dict] = None,
     plan: Optional[HaloPlan] = None,
+    op: StencilOp = STENCIL26,
 ) -> jax.Array:
-    """One halo-exchange + ``steps``-stencil iteration with the exchange
-    wire time hidden behind interior compute (ROADMAP: `Request` overlap
-    via :func:`ihalo_exchange`).
+    """One exchange + ``steps`` applications with the wire hidden behind
+    steps-deep interior pipelining.
 
-    Pipeline: the fused collective is issued immediately
-    (:func:`ihalo_exchange`), the deep-interior update — which needs no
-    halo data — is computed while the wire op is in flight, then
-    ``wait()`` materializes the halos and only the remaining rim of the
-    first application depends on them.  The deep-interior values are
-    spliced into the first application's result, so XLA sees two
-    independent dataflows (collective ∥ interior compute) it is free to
-    overlap.  Bit-identical to ``halo_exchange`` + ``stencil_iterations``.
+    The fused collective is issued immediately (:func:`ihalo_exchange`);
+    while it is in flight the :func:`stencil_interior_chain` precomputes
+    every fused application's deep interior — not just the first one —
+    so XLA sees ``depth + 1`` independent dataflows (collective ∥ chain)
+    it is free to overlap.  After ``wait()`` the real shrinking-region
+    applications run and each chain block is spliced over its (bit-
+    identical) region, keeping the early compute live in the graph
+    without changing the result.  Bit-identical to ``halo_exchange`` +
+    ``stencil_steps``.
 
-    ``probe``, when given, records ``pending_during_interior``: whether
-    the request was still pending when the interior compute was built —
-    the overlap invariant tests assert.
+    ``probe``, when given, records ``pending_during_interior`` (the wire
+    op was still pending when the chain was built — the overlap
+    invariant) and ``pipeline_depth`` (how many applications had a
+    nonempty deep interior to precompute).
     """
-    assert steps <= spec.scalar_radius
-    r = spec.scalar_radius
+    for v, r in zip(spec.radii, op.radii):
+        if steps * r > v:
+            raise ValueError(
+                f"halo radii {spec.radii} cannot host {steps} steps of "
+                f"stencil radii {op.radii}"
+            )
+    depth = max_pipeline_depth(spec, op, steps)
     req = ihalo_exchange(local, spec, comm, axis_name, types, plan)  # wire NOW
-    inner = stencil26_interior(local, spec)   # overlaps the collective
+    chain = stencil_interior_chain(local, spec, depth, op)  # overlaps the wire
     if probe is not None:
         probe["pending_during_interior"] = not req.completed
+        probe["pipeline_depth"] = depth
     full = req.wait()
-    stepped = stencil26(full, spec)
-    # splice the precomputed (identical) deep-interior values: keeps the
-    # early compute live in the graph without changing the result
-    stepped = jax.lax.dynamic_update_slice(stepped, inner, (r + 1, r + 1, r + 1))
-    for _ in range(steps - 1):
-        stepped = stencil26(stepped, spec)
-    return stepped
+    valid = spec.radii
+    for k in range(1, steps + 1):
+        full = stencil_apply(full, spec, valid, op)
+        valid = tuple(v - r for v, r in zip(valid, op.radii))
+        if k <= depth:
+            origin = tuple(hr + k * r for hr, r in zip(spec.radii, op.radii))
+            full = jax.lax.dynamic_update_slice(full, chain[k - 1], origin)
+    return full

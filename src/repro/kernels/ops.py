@@ -44,6 +44,8 @@ __all__ = [
     "run_pack_kernel",
     "run_unpack_kernel",
     "default_strategy",
+    "shifted_window_sum",
+    "stencil_window_update",
     "STRATEGIES",
 ]
 
@@ -82,6 +84,51 @@ def default_strategy(geom: Optional[PackGeometry]) -> str:
 def _interpret_default() -> bool:
     # Pallas TPU kernels run in interpret mode anywhere but real TPUs.
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# shifted-window stencil primitives (per-dimension radii)
+# ---------------------------------------------------------------------------
+#
+# The halo layer's stencil kernels are all instances of one operation:
+# accumulate dynamic slices of an N-D array shifted by a set of offsets,
+# over a window whose origin/shape the caller picks.  Keeping the
+# primitive here (rather than inside repro.halo) lets every consumer —
+# full-allocation applications, shrinking-region deep-halo steps, and
+# the dense interior chain of the overlap pipeline — share one
+# accumulation order, which is what makes their results bit-identical
+# on the overlapping regions.
+
+def shifted_window_sum(arr, offsets, origin, shape):
+    """Sum of ``arr`` windows at ``origin + d`` for each offset ``d``.
+
+    Offsets may be negative; the caller guarantees every shifted window
+    stays in bounds.  Accumulation is in ``offsets`` order, so two calls
+    with the same offsets and values produce bit-identical results.
+    """
+    acc = jnp.zeros(shape, arr.dtype)
+    for d in offsets:
+        acc = acc + jax.lax.dynamic_slice(
+            arr, tuple(o + di for o, di in zip(origin, d)), shape
+        )
+    return acc
+
+
+def stencil_window_update(arr, offsets, weight, origin, shape):
+    """One weighted-neighborhood stencil update of the window
+    ``arr[origin : origin + shape]``:
+
+        new = (1 - w) * center + (w / len(offsets)) * sum(shifted views)
+
+    Returns the updated window only (the caller splices it back, or uses
+    it directly as a deep-interior block).  ``offsets`` carries the
+    per-dimension stencil radii implicitly — any box neighborhood,
+    symmetric or not, is just a different offset list.
+    """
+    w = jnp.asarray(weight, arr.dtype)
+    acc = shifted_window_sum(arr, offsets, origin, shape)
+    center = jax.lax.dynamic_slice(arr, tuple(origin), shape)
+    return (1 - w) * center + (w / len(offsets)) * acc
 
 
 # ---------------------------------------------------------------------------

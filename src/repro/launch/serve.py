@@ -131,16 +131,29 @@ def main() -> None:
                          "communicator")
     ap.add_argument("--no-comm-cache", action="store_true",
                     help="skip calibration/decision pinning entirely")
+    ap.add_argument("--halo-steps", default="auto", metavar="auto|N",
+                    help="fusion depth for any deep-halo stencil program "
+                         "the deployment builds; 'auto' is model-priced "
+                         "and pinned through the decisions file")
     args = ap.parse_args()
+
+    from repro.halo.program import parse_halo_steps, set_default_halo_steps
+
+    halo_steps = parse_halo_steps(args.halo_steps)
 
     cfg = get_config(args.arch) if args.scale == "full" else smoke_config(args.arch)
     comm = save_decisions = None
     if not args.no_comm_cache:
         from repro.measure.production import production_communicator
 
-        comm, save_decisions = production_communicator(args.comm_cache)
+        comm, save_decisions = production_communicator(
+            args.comm_cache, halo_steps=halo_steps
+        )
         print(f"comm: params={comm.model.params.name} "
-              f"pinned_decisions={len(comm.model.decisions)}")
+              f"pinned_decisions={len(comm.model.decisions)} "
+              f"halo_steps={halo_steps}")
+    else:
+        set_default_halo_steps(halo_steps)
     loop = ServeLoop(cfg, args.batch, args.max_len, comm=comm)
     rng = np.random.default_rng(0)
     reqs = [

@@ -149,7 +149,16 @@ def main() -> None:
     ap.add_argument("--no-comm-cache", action="store_true",
                     help="skip calibration/decision pinning entirely "
                          "(analytic model, nothing persisted)")
+    ap.add_argument("--halo-steps", default="auto", metavar="auto|N",
+                    help="fusion depth for any deep-halo stencil program "
+                         "the job builds (repro.halo.program); 'auto' is "
+                         "model-priced and pinned through the decisions "
+                         "file so reruns reuse the same depth")
     args = ap.parse_args()
+
+    from repro.halo.program import parse_halo_steps
+
+    halo_steps = parse_halo_steps(args.halo_steps)
 
     cfg = resolve_config(args.arch, args.scale)
     n = cfg.param_count()
@@ -161,11 +170,19 @@ def main() -> None:
         from repro.measure.production import production_communicator
 
         comm, save_decisions = production_communicator(
-            args.comm_cache, axis_name="data"
+            args.comm_cache, axis_name="data", halo_steps=halo_steps
         )
         dc = comm.model.decisions
+        pinned_programs = sum(
+            1 for d in dc.log if d.strategy.startswith("program/s=")
+        )
         print(f"comm: params={comm.model.params.name} "
-              f"pinned_decisions={len(dc)}")
+              f"pinned_decisions={len(dc)} halo_steps={halo_steps} "
+              f"pinned_programs={pinned_programs}")
+    else:
+        from repro.halo.program import set_default_halo_steps
+
+        set_default_halo_steps(halo_steps)
 
     out = train(cfg, args.steps, args.seq_len, args.global_batch,
                 args.ckpt_dir, comm=comm)

@@ -36,6 +36,7 @@ def production_communicator(
     calibrate: bool = True,
     reduced: Optional[bool] = None,
     params: Optional[SystemParams] = None,
+    halo_steps: Optional[Union[int, str]] = None,
 ) -> Tuple[Communicator, Callable[[], Path]]:
     """A :class:`Communicator` wired for production reuse.
 
@@ -52,10 +53,21 @@ def production_communicator(
     reduced: grid size for a fresh calibration; defaults to reduced
         everywhere but on a real TPU backend.
     params: explicit SystemParams override (skips the store entirely).
+    halo_steps: when given (``"auto"`` or an int), installs the
+        process-wide deep-halo fusion-depth default
+        (:func:`repro.halo.program.set_default_halo_steps`) alongside
+        the decisions cache that pins ``"auto"`` — so any
+        :func:`~repro.halo.program.build_halo_program` the job runs
+        resolves its depth through this seam and the choice lands in
+        the same persisted decisions file.
 
     Returns ``(comm, save)``: call ``save()`` after the job to persist
     the decision cache — the file that lets the next run skip the model.
     """
+    if halo_steps is not None:
+        from repro.halo.program import set_default_halo_steps
+
+        set_default_halo_steps(halo_steps)
     store = ParamsStore(cache_dir)
     if params is None:
         if calibrate:

@@ -1,6 +1,6 @@
 """Tests: exchange/compute overlap in the stencil iteration (ROADMAP:
-`Request` double-buffering via ihalo_exchange, now wired into
-examples/stencil3d.py through `overlapped_stencil_iteration`)."""
+steps-deep pipelining — the wire now hides behind the interior chain of
+ALL fused applications, not just the first one)."""
 
 import numpy as np
 import pytest
@@ -13,12 +13,16 @@ from repro.compat import shard_map
 from repro.comm import Communicator
 from repro.halo import (
     HaloSpec,
+    STENCIL26,
+    StencilOp,
     halo_exchange,
     make_halo_types,
+    max_pipeline_depth,
     overlapped_stencil_iteration,
     stencil26,
     stencil26_interior,
-    stencil_iterations,
+    stencil_interior_chain,
+    stencil_steps,
 )
 
 
@@ -47,6 +51,42 @@ def test_interior_update_is_halo_independent():
     )
 
 
+def test_interior_chain_is_halo_independent_steps_deep():
+    """Steps-deep pipelining legality: EVERY chain block must be
+    poison-proof, and block k must equal the corresponding region of k
+    full shrinking-region applications."""
+    op = StencilOp((2, 1, 1))
+    spec = HaloSpec(grid=(1, 1, 1), interior=(12, 8, 8),
+                    radius=op.halo_radii(2))
+    rz, ry, rx = spec.radii
+    nz, ny, nx = spec.interior
+    az, ay, ax = spec.alloc
+    rng = np.random.default_rng(1)
+    full = rng.normal(size=(az, ay, ax)).astype(np.float32)
+    poisoned = np.full_like(full, 1e6)
+    poisoned[rz:rz + nz, ry:ry + ny, rx:rx + nx] = \
+        full[rz:rz + nz, ry:ry + ny, rx:rx + nx]
+
+    depth = max_pipeline_depth(spec, op, 2)
+    assert depth == 2
+    chain = stencil_interior_chain(jnp.asarray(poisoned), spec, depth, op)
+
+    stepped = jnp.asarray(full)
+    valid = spec.radii
+    for k in range(1, depth + 1):
+        from repro.halo import stencil_apply
+
+        stepped = stencil_apply(stepped, spec, valid, op)
+        valid = tuple(v - r for v, r in zip(valid, op.radii))
+        oz, oy, ox = (hr + k * r for hr, r in zip(spec.radii, op.radii))
+        sz, sy, sx = chain[k - 1].shape
+        np.testing.assert_array_equal(
+            np.asarray(chain[k - 1]),
+            np.asarray(stepped)[oz:oz + sz, oy:oy + sy, ox:ox + sx],
+            err_msg=f"chain block {k}",
+        )
+
+
 def test_overlapped_iteration_matches_plain_single_rank():
     spec = HaloSpec(grid=(1, 1, 1), interior=(6, 5, 4), radius=2)
     az, ay, ax = spec.alloc
@@ -56,7 +96,7 @@ def test_overlapped_iteration_matches_plain_single_rank():
 
     def plain(local):
         local = halo_exchange(local, spec, comm, "ranks", types)
-        return stencil_iterations(local, spec, steps=2)
+        return stencil_steps(local, spec, steps=2)
 
     def overlapped(local):
         return overlapped_stencil_iteration(
@@ -75,6 +115,8 @@ def test_overlapped_iteration_matches_plain_single_rank():
     # the overlap invariant: the wire was issued but NOT waited on when
     # the interior compute was built
     assert probe["pending_during_interior"] is True
+    # interior (6,5,4): the x dim (4 - 2*2 = 0) caps the chain at depth 1
+    assert probe["pipeline_depth"] == 1
 
     # single-rank periodic grid: all 26 transfers share one delta class,
     # so the fused exact-byte schedule issues exactly one collective
@@ -82,6 +124,36 @@ def test_overlapped_iteration_matches_plain_single_rank():
 
     counts = collective_payload_bytes(jo, x)
     assert counts["ops"] == 1, counts
+
+
+def test_overlapped_iteration_steps_deep_pipeline():
+    """A roomier interior pipelines BOTH fused applications; result stays
+    bit-identical to the plain path."""
+    spec = HaloSpec(grid=(1, 1, 1), interior=(8, 7, 6), radius=2)
+    az, ay, ax = spec.alloc
+    comm = Communicator(axis_name="ranks")
+    types = make_halo_types(spec, comm)
+    probe = {}
+
+    def plain(local):
+        local = halo_exchange(local, spec, comm, "ranks", types)
+        return stencil_steps(local, spec, steps=2)
+
+    def overlapped(local):
+        return overlapped_stencil_iteration(
+            local, spec, comm, "ranks", types, steps=2, probe=probe
+        )
+
+    mesh = _mesh1()
+    jp = jax.jit(shard_map(plain, mesh=mesh, in_specs=P(), out_specs=P(),
+                           check_vma=False))
+    jo = jax.jit(shard_map(overlapped, mesh=mesh, in_specs=P(), out_specs=P(),
+                           check_vma=False))
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(az, ay, ax)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(jp(x)), np.asarray(jo(x)))
+    assert probe["pending_during_interior"] is True
+    assert probe["pipeline_depth"] == 2  # both applications precomputed
 
 
 OVERLAP_8RANK_CODE = r"""
@@ -92,7 +164,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.comm import Communicator
 from repro.halo import (HaloSpec, halo_exchange, make_halo_types,
-                        overlapped_stencil_iteration, stencil_iterations)
+                        overlapped_stencil_iteration, stencil_steps)
 
 spec = HaloSpec(grid=(2, 2, 2), interior=(6, 5, 4), radius=2)
 R = spec.nranks
@@ -106,7 +178,7 @@ probe = {}
 
 def plain(local):
     local = halo_exchange(local, spec, comm, "ranks", types)
-    return stencil_iterations(local, spec, steps=2)
+    return stencil_steps(local, spec, steps=2)
 
 def overlapped(local):
     return overlapped_stencil_iteration(
@@ -121,6 +193,7 @@ rng = np.random.default_rng(7)
 x = jnp.asarray(rng.normal(size=(R * az, ay, ax)).astype(np.float32))
 np.testing.assert_array_equal(np.asarray(jp(x)), np.asarray(jo(x)))
 assert probe["pending_during_interior"] is True
+assert probe["pipeline_depth"] == 1
 # 2x2x2 grid: 7 delta classes -> 7 exact-payload wire ops, ragged bytes
 from repro.comm import collective_payload_bytes
 from repro.halo import make_halo_plan
