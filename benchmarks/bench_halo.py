@@ -6,10 +6,19 @@ per-iteration time for both interposer modes and the pack-only
 latency (the paper's phase split), plus the exchange's wire-byte
 accounting (exact ragged payload vs what the padded layout would move).
 
-``--assert-ragged`` runs the wire-bytes regression gate instead (CI):
-trace the fused halo step in interpret mode and FAIL (exit 1) if the
-bytes its collectives move exceed the ragged optimum — the sum of
-per-peer packed extents.
+``--assert-ragged`` runs the wire-bytes regression gate instead (CI),
+in two modes:
+
+* **exact**: trace the fused halo step planned under
+  ``schedule_policy="exact"`` and FAIL (exit 1) if the bytes its
+  collectives move exceed the ragged optimum — the sum of per-peer
+  packed extents;
+* **padded allowance**: trace the step planned under the *default*
+  (model-priced) policy and FAIL if the issued bytes exceed
+  ``(1 + allowance) x`` the ragged optimum or the uniform row-equalized
+  bound — the padding the model may legitimately buy is capped, so
+  flipping the default to ``"model"`` stays byte-gated
+  (``--padded-allowance X`` overrides the default 1.0).
 
 ``--assert-program`` runs the deep-halo HaloProgram gate (CI): for each
 fusion depth ``s``, one traced program iteration must issue exactly ONE
@@ -17,7 +26,11 @@ exchange (exchanges-per-stencil-step <= 1/s), the deep-radius wire
 layout must stay at the ragged optimum (the PR-3 wire-bytes gate, at the
 new segment sizes), depths must agree bit-exactly on the interior, and
 ``price_program`` must never pick a depth whose predicted per-step cost
-exceeds ``s=1``.
+exceeds ``s=1``.  It also runs the heterogeneous-cycle gate: a fused
+``[predictor, corrector]`` cycle with unequal per-dimension radii must
+issue <= 1 exchange per cycle repeat, stay bit-exact against the
+exchange-per-application reference, and price its auto depth no worse
+per application than ``s=1``.
 """
 
 from __future__ import annotations
@@ -81,9 +94,12 @@ for mode in ("baseline", "tempi"):
 """
 
 
-#: the CI regression gate: fused-path bytes must equal the ragged
-#: optimum — grows a diff the moment any padding creeps back in
+#: the CI regression gate: exact-policy bytes must equal the ragged
+#: optimum, and the default (model-priced) policy may buy at most the
+#: declared padding allowance — grows a diff the moment uncontrolled
+#: padding creeps back in
 _ASSERT_CODE = r"""
+import os
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -92,13 +108,15 @@ from repro.compat import shard_map
 from repro.comm import Communicator, FixedPolicy, collective_payload_bytes
 from repro.halo import HaloSpec, halo_exchange, make_halo_plan
 
+ALLOWANCE = float(os.environ.get("REPRO_PADDED_ALLOWANCE", "1.0"))
+
 spec = HaloSpec(grid=(2, 2, 2), interior=(6, 5, 4), radius=2)
 R = spec.nranks
 az, ay, ax = spec.alloc
 mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
 # forced pack strategy: the ragged optimum is exactly sum(ct.size)
 comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
-plan = make_halo_plan(spec, comm)
+plan = make_halo_plan(spec, comm, schedule_policy="exact")
 fn = jax.jit(shard_map(
     lambda x: halo_exchange(x, spec, comm, "ranks", plan=plan),
     mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"), check_vma=False))
@@ -111,12 +129,37 @@ print(f"wire-bytes-check: traced={counts['total']} "
       f"schedule={plan.wire.schedule} ops={counts['ops']}")
 assert plan.wire_bytes == ragged_optimum, (plan.wire_bytes, ragged_optimum)
 assert counts["total"] <= ragged_optimum, (
-    f"fused path moves {counts['total']} B > ragged optimum "
+    f"exact-policy path moves {counts['total']} B > ragged optimum "
     f"{ragged_optimum} B — padding has crept back into the wire layout")
 # the exchange must still be correct, in interpret mode, end to end
 out = np.asarray(fn(jnp.asarray(
     np.random.default_rng(0).normal(size=(R * az, ay, ax)).astype(np.float32))))
 assert np.isfinite(out).all()
+
+# padded-allowance mode: the DEFAULT policy is model-priced and may buy
+# uniform padding, but never more than the row-equalized bound nor the
+# declared allowance over the ragged optimum
+comm2 = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+plan2 = make_halo_plan(spec, comm2)
+fn2 = jax.jit(shard_map(
+    lambda x: halo_exchange(x, spec, comm2, "ranks", plan=plan2),
+    mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"), check_vma=False))
+counts2 = collective_payload_bytes(fn2, x)
+uniform_bound = plan2.wire.nranks * plan2.wire.seg_bytes
+print(f"padded-allowance-check: schedule={plan2.wire.schedule} "
+      f"issued={plan2.wire.issued_bytes} traced={counts2['total']} "
+      f"optimum={ragged_optimum} uniform_bound={uniform_bound} "
+      f"allowance={ALLOWANCE}")
+assert plan2.wire_bytes == ragged_optimum, (plan2.wire_bytes, ragged_optimum)
+assert counts2["total"] == plan2.wire.issued_bytes, (counts2, plan2.wire.issued_bytes)
+assert plan2.wire.issued_bytes <= uniform_bound, (
+    "model policy issued more than the uniform row-equalized layout")
+assert plan2.wire.issued_bytes <= (1.0 + ALLOWANCE) * ragged_optimum, (
+    f"model policy buys {plan2.wire.padding_bytes} B padding — beyond the "
+    f"{ALLOWANCE:.2f} allowance over the {ragged_optimum} B ragged optimum")
+out2 = np.asarray(fn2(jnp.asarray(
+    np.random.default_rng(0).normal(size=(R * az, ay, ax)).astype(np.float32))))
+assert np.isfinite(out2).all()
 print("WIRE_BYTES_OK")
 """
 
@@ -144,7 +187,8 @@ TOTAL_STEPS = 2
 interiors = {}
 for s in (1, 2):
     comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
-    prog = build_halo_program(grid, interior, comm, steps=s)
+    prog = build_halo_program(grid, interior, comm, steps=s,
+                              schedule_policy="exact")
     fn = make_program_step(prog, comm, mesh)
     az, ay, ax = prog.spec.alloc
     rz, ry, rx = prog.spec.radii
@@ -190,11 +234,110 @@ print("PROGRAM_OK")
 """
 
 
-def run(assert_ragged: bool = False, assert_program: bool = False) -> None:
+#: the heterogeneous-cycle gate: a fused [predictor, corrector] cycle
+#: with unequal per-dim radii must issue <= 1 exchange per cycle repeat,
+#: keep the ragged-optimal deep wire layout (exact policy), stay
+#: bit-exact against the exchange-per-application reference, and price
+#: its auto depth no worse per application than s=1
+_CYCLE_ASSERT_CODE = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.comm import Communicator, FixedPolicy, collective_payload_bytes
+from repro.halo import StencilOp, build_halo_program, make_program_step
+from repro.measure import DecisionCache
+
+ops = [StencilOp((2, 1, 1), weight=0.5), StencilOp((1, 1, 1), weight=0.25)]
+grid, interior = (2, 2, 2), (8, 6, 6)   # cycle radii (3, 2, 2)
+nz, ny, nx = interior
+R = 8
+mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
+field = np.random.default_rng(0).normal(size=(R, nz, ny, nx)).astype(np.float32)
+
+def run_program(prog, comm, state_field, iters):
+    fn = make_program_step(prog, comm, mesh)
+    az, ay, ax = prog.spec.alloc
+    rz, ry, rx = prog.spec.radii
+    state = np.zeros((R, az, ay, ax), np.float32)
+    state[:, rz:rz+nz, ry:ry+ny, rx:rx+nx] = state_field
+    x = jnp.asarray(state.reshape(R * az, ay, ax))
+    for _ in range(iters):
+        x = fn(x)
+    return np.asarray(x).reshape(R, az, ay, ax)[
+        :, rz:rz+nz, ry:ry+ny, rx:rx+nx]
+
+TOTAL = 2  # cycle repeats in every variant
+interiors = {}
+for s in (1, 2):
+    comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+    prog = build_halo_program(grid, interior, comm, ops=ops, steps=s,
+                              schedule_policy="exact")
+    assert prog.spec.radii == (3 * s, 2 * s, 2 * s), prog.spec.radii
+    assert prog.cycle_len == 2 and prog.applications == 2 * s
+    fn = make_program_step(prog, comm, mesh)
+    az, ay, ax = prog.spec.alloc
+    x0 = jnp.zeros((R * az, ay, ax), jnp.float32)
+    counts = collective_payload_bytes(fn, x0)
+    assert counts["ops"] == prog.plan.wire.wire_ops, (s, counts)
+    # wire-amortization measured over a FIXED amount of physical work:
+    # TOTAL cycle repeats need TOTAL/s program iterations, so the
+    # traced collective count must shrink to 1/s exchanges per repeat
+    def total_work(x):
+        for _ in range(TOTAL // s):
+            x = fn(x)
+        return x
+    total_counts = collective_payload_bytes(total_work, x0)
+    per_cycle = (total_counts["ops"] / prog.plan.wire.wire_ops) / TOTAL
+    assert abs(per_cycle - 1.0 / s) < 1e-12, (s, per_cycle, total_counts)
+    # exact-policy deep wire layout stays ragged-optimal
+    ragged_optimum = sum(ct.packed_extent() for ct in prog.plan.send_cts)
+    assert prog.plan.wire_bytes == ragged_optimum, (s, prog.plan.wire_bytes)
+    assert counts["total"] <= ragged_optimum, (s, counts, ragged_optimum)
+    print(f"cycle/s={s}: ops={counts['ops']} exchanges_per_cycle={per_cycle:.3f} "
+          f"wire_bytes={prog.plan.wire_bytes}")
+    interiors[s] = run_program(prog, comm, field, TOTAL // s)
+
+np.testing.assert_array_equal(interiors[1], interiors[2])
+
+# the per-application reference: exchange before EVERY op application
+comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+ref_progs = [
+    build_halo_program(grid, interior, comm, ops=[op], steps=1,
+                       schedule_policy="exact")
+    for op in ops
+]
+ref = field
+for _ in range(TOTAL):
+    for prog in ref_progs:
+        ref = run_program(prog, comm, ref, 1)
+np.testing.assert_array_equal(interiors[1], ref)
+print("cycle bit-exact vs per-application reference")
+
+# auto oracle + decision: never worse per application than s=1, and the
+# cycle fingerprint lands in the decisions log
+dc = DecisionCache()
+comm = Communicator(axis_name="ranks", decisions=dc)
+prog = build_halo_program(grid, interior, comm, ops=ops, steps="auto")
+one = [e for e in prog.candidates if e.steps == 1]
+assert one, prog.candidates
+assert prog.estimate.per_step <= one[0].per_step, (prog.estimate, one[0])
+rows = [d for d in dc.log if d.strategy == f"program/s={prog.steps}"]
+assert rows and "cycle=[" in rows[0].signature, rows
+print(f"cycle auto s={prog.steps} per_step={prog.estimate.per_step:.3e} "
+      f"(s=1 {one[0].per_step:.3e})")
+print("CYCLE_OK")
+"""
+
+
+def run(assert_ragged: bool = False, assert_program: bool = False,
+        padded_allowance: float = None) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
+    if padded_allowance is not None:
+        env["REPRO_PADDED_ALLOWANCE"] = str(padded_allowance)
     gate = assert_ragged or assert_program
     # both gates run when both flags are given — combining flags must
     # never silently drop a regression check
@@ -203,6 +346,7 @@ def run(assert_ragged: bool = False, assert_program: bool = False) -> None:
         jobs.append((_ASSERT_CODE, "WIRE_BYTES_OK"))
     if assert_program:
         jobs.append((_PROGRAM_ASSERT_CODE, "PROGRAM_OK"))
+        jobs.append((_CYCLE_ASSERT_CODE, "CYCLE_OK"))
     if not jobs:
         jobs.append((_CODE, None))
     for code, ok_token in jobs:
@@ -222,7 +366,12 @@ def run(assert_ragged: bool = False, assert_program: bool = False) -> None:
 
 
 if __name__ == "__main__":
+    argv = sys.argv[1:]
+    allowance = None
+    if "--padded-allowance" in argv:
+        allowance = float(argv[argv.index("--padded-allowance") + 1])
     run(
-        assert_ragged="--assert-ragged" in sys.argv[1:],
-        assert_program="--assert-program" in sys.argv[1:],
+        assert_ragged="--assert-ragged" in argv,
+        assert_program="--assert-program" in argv,
+        padded_allowance=allowance,
     )

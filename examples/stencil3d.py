@@ -15,6 +15,12 @@ depth).  ``--halo-steps auto`` lets ``PerfModel.price_program`` pick the
 depth from the measured wire/copy tables; with ``--decisions FILE`` the
 choice is recorded there and reruns pin it.
 
+``--cycle predictor-corrector`` fuses a heterogeneous two-op cycle —
+a far-reaching predictor (radii (2,1,1)) then a local corrector — into
+the same single exchange per iteration: the halo depth becomes
+``steps * cycle_radii`` (the per-op radii summed) and each application
+shrinks the valid region by its own op's radii.
+
 ``--overlap`` switches the iteration to the request-based pipeline:
 the fused collective is issued first and the steps-deep interior chain
 — which reads no halo cells — runs while the wire is in flight.
@@ -38,8 +44,21 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.comm import Communicator, MODES, policy_for_mode
-from repro.halo import build_halo_program, make_program_step, parse_halo_steps
+from repro.halo import (
+    STENCIL26,
+    build_halo_program,
+    make_program_step,
+    parse_halo_steps,
+)
+from repro.launch.smoother import smoother_cycle
 from repro.measure import DecisionCache
+
+#: the demo cycles: the paper's single op, or the same
+#: predictor/corrector pair the in-launch smoother workload fuses
+CYCLES = {
+    "single": (STENCIL26,),
+    "predictor-corrector": smoother_cycle("predictor-corrector"),
+}
 
 
 def main():
@@ -48,8 +67,12 @@ def main():
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--interior", type=int, default=24)
     ap.add_argument("--halo-steps", default="2", metavar="auto|N",
-                    help="stencil applications fused per exchange; 'auto' "
-                         "prices the depth with PerfModel.price_program")
+                    help="cycle repeats fused per exchange; 'auto' prices "
+                         "the depth with PerfModel.price_program")
+    ap.add_argument("--cycle", default="single", choices=list(CYCLES),
+                    help="op cycle fused per repeat (predictor-corrector "
+                         "= a (2,1,1) predictor then a 26-point corrector "
+                         "on one exchange)")
     ap.add_argument("--decisions", default=None, metavar="FILE",
                     help="decision-cache file: records the auto depth "
                          "choice (and every strategy selection); reruns "
@@ -65,7 +88,8 @@ def main():
     decisions = DecisionCache.load(args.decisions) if args.decisions else None
     comm = Communicator(axis_name="ranks", policy=policy_for_mode(args.mode),
                         decisions=decisions)
-    program = build_halo_program(grid, (n, n, n), comm, steps=steps)
+    program = build_halo_program(grid, (n, n, n), comm, steps=steps,
+                                 ops=CYCLES[args.cycle])
     spec = program.spec
     R = spec.nranks
     az, ay, ax = spec.alloc
@@ -97,9 +121,11 @@ def main():
     est = program.estimate
     print(f"mode={args.mode} overlap={args.overlap} ranks={R} "
           f"interior={spec.interior} halo-radius={spec.radii}")
-    print(f"program: steps={program.steps} "
+    print(f"program: cycle={args.cycle} ({program.cycle_len} op"
+          f"{'s' if program.cycle_len > 1 else ''}) steps={program.steps} "
           f"({'pinned' if program.pinned else args.halo_steps}), "
           f"exchanges/step={program.exchanges_per_step:.3f}, "
+          f"exchanges/cycle={program.exchanges_per_cycle:.3f}, "
           f"predicted per-step {est.per_step * 1e6:.2f} us "
           f"(exchange {est.t_exchange * 1e6:.2f} us, "
           f"redundant {est.t_redundant * 1e6:.2f} us)")
@@ -108,15 +134,15 @@ def main():
           f"({program.plan.wire.wire_ops} collectives per exchange, "
           f"{program.plan.wire_bytes} exact bytes, "
           f"padding {program.plan.wire.padding_bytes})")
-    print(f"time per iteration (1 exchange + {program.steps} stencil steps): "
-          f"{dt*1e3:.2f} ms")
+    print(f"time per iteration (1 exchange + {program.applications} stencil "
+          f"applications): {dt*1e3:.2f} ms")
     # interior checksum: comparable across fusion depths (same physical
     # state whenever iters * steps match — the halo shells and the alloc
     # itself are depth-dependent, the interior is bit-exact)
     interior = np.asarray(state).reshape(R, az, ay, ax)[
         :, rz:rz + nz, ry:ry + ny, rx:rx + nx
     ]
-    print(f"stencil steps applied: {args.iters * program.steps}")
+    print(f"stencil applications: {args.iters * program.applications}")
     print(f"interior checksum: {float(interior.sum()):.6e}")
     if decisions is not None:
         path = decisions.save(args.decisions)

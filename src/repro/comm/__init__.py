@@ -10,6 +10,7 @@ the on-disk SystemParams store, and the persistent selection cache);
 from repro.comm.api import (
     BaselinePolicy,
     Communicator,
+    DEFAULT_SCHEDULE_POLICY,
     FixedPolicy,
     ModelPolicy,
     MODES,
@@ -26,7 +27,7 @@ from repro.comm.api import (
     register_strategy,
     resolve_strategy,
 )
-from repro.comm.compress import INT8_WIRE, Int8Wire
+from repro.comm.compress import INT8_WIRE, Int8Wire, RLE_WIRE, RleWire
 from repro.comm.interposer import Interposer
 from repro.comm.perfmodel import (
     PerfModel,
@@ -42,17 +43,23 @@ from repro.comm.wireplan import (
     reschedule,
 )
 
-# the compressed-wire plugin ships registered (selectable=False: lossy,
-# opt-in via FixedPolicy) so its wire accounting is exercised everywhere
+# the compressed-wire plugins ship registered (selectable=False: lossy
+# or capacity-padded, opt-in via FixedPolicy) so their wire accounting
+# is exercised everywhere
 if Int8Wire.name not in default_registry():
     register_strategy(INT8_WIRE)
+if RleWire.name not in default_registry():
+    register_strategy(RLE_WIRE)
 
 __all__ = [
     "BaselinePolicy",
     "Communicator",
+    "DEFAULT_SCHEDULE_POLICY",
     "FixedPolicy",
     "INT8_WIRE",
     "Int8Wire",
+    "RLE_WIRE",
+    "RleWire",
     "Interposer",
     "MODES",
     "ModelPolicy",

@@ -89,6 +89,7 @@ __all__ = [
     "WirePlan",
     "WireGroup",
     "plan_neighbor_alltoallv",
+    "DEFAULT_SCHEDULE_POLICY",
 ]
 
 StrategyLike = Union[str, "Strategy", None]
@@ -699,6 +700,13 @@ class SendRequest(Request):
 # fused neighborhood alltoallv planning (host-side, cached)
 # ===========================================================================
 
+#: how :meth:`Communicator.plan_neighbor` chooses a wire schedule when
+#: the caller does not say: ``"model"`` prices grouped launches vs
+#: uniform padding on the measured wire tables (ROADMAP: the flipped
+#: default); ``"exact"`` restores the byte-exact ladder per call.
+DEFAULT_SCHEDULE_POLICY = "model"
+
+
 def plan_neighbor_alltoallv(
     sizes: Tuple[int, ...],
     perms: Tuple[Tuple[Tuple[int, int], ...], ...],
@@ -851,7 +859,7 @@ class Communicator:
         perms: Sequence[Sequence[Tuple[int, int]]],
         strategies: Optional[Sequence[Strategy]] = None,
         uniform_waste_tolerance: float = 0.0,
-        schedule_policy: str = "exact",
+        schedule_policy: Optional[str] = None,
     ) -> Tuple[Tuple[Strategy, ...], WirePlan]:
         """Select a strategy per transfer and lay the exchange out as an
         exact-byte :class:`WirePlan`.  Call once at setup time (e.g.
@@ -861,18 +869,24 @@ class Communicator:
         model and recorded (``wire_bytes`` included) in the attached
         :class:`~repro.measure.decisions.DecisionCache`, if any.
 
-        ``schedule_policy`` picks how the wire schedule is chosen:
+        ``schedule_policy`` picks how the wire schedule is chosen
+        (default: :data:`DEFAULT_SCHEDULE_POLICY` — ``"model"``):
 
-        ``"exact"``   the byte-exact ladder (``uniform`` only within
-                      ``uniform_waste_tolerance`` of zero padding) — the
-                      wire-bytes regression gates assume this.
         ``"model"``   :meth:`PerfModel.choose_wire_schedule` trades the
                       grouped schedule's per-class collective launches
                       against the uniform collective's padding bytes on
                       the measured (per-axis) wire tables; the chosen
                       schedule and the prices of the rejected
                       alternatives are recorded in the decision row.
+                      The padding it may buy is bounded by the uniform
+                      row-equalized layout and byte-gated in CI with a
+                      padded allowance (``bench_halo --assert-ragged``).
+        ``"exact"``   the byte-exact ladder (``uniform`` only within
+                      ``uniform_waste_tolerance`` of zero padding) — the
+                      strict wire-bytes regression gates assume this.
         """
+        if schedule_policy is None:
+            schedule_policy = DEFAULT_SCHEDULE_POLICY
         if schedule_policy not in ("exact", "model"):
             raise ValueError(
                 f"unknown schedule_policy {schedule_policy!r}; "

@@ -111,6 +111,10 @@ class SystemParams:
     # wire_table remains the axis-agnostic fallback
     wire_tables: Optional[Dict[str, Table1D]] = None
     wire_fits: Optional[Dict[str, Tuple]] = None  # axis -> (latency, bw)
+    # measured stencil-application sweep: rows (log2_neighbors,
+    # log2_window_bytes, sec) — prices the deep-halo redundant-compute
+    # term from a real sweep instead of the contiguous-copy proxy
+    stencil_table: Optional[Table2D] = None
 
     def __post_init__(self):
         # normalize list-of-lists (JSON) into hashable tuple tables
@@ -122,6 +126,7 @@ class SystemParams:
             self, "wire_tables", _freeze_axis_tables(self.wire_tables)
         )
         object.__setattr__(self, "wire_fits", _freeze_axis_fits(self.wire_fits))
+        object.__setattr__(self, "stencil_table", _freeze1d(self.stencil_table))
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -158,9 +163,17 @@ class StrategyEstimate:
 @dataclass(frozen=True)
 class ProgramEstimate:
     """Predicted cost of one deep-halo iteration: a single exchange at
-    halo depth ``steps * r`` amortized over ``steps`` stencil
-    applications, plus the redundant ghost-shell re-evaluation the
-    shrinking-region schedule pays instead of the saved exchanges.
+    halo depth ``steps * cycle_radii`` amortized over ``steps`` repeats
+    of a (possibly heterogeneous) op cycle, plus the redundant
+    ghost-shell re-evaluation the shrinking-region schedule pays instead
+    of the saved exchanges.
+
+    ``steps`` counts cycle repeats; :attr:`applications` counts the
+    individual stencil applications (``steps * cycle_len``; equal to
+    ``steps`` for the single-op cycle).  :attr:`op_redundant` splits
+    :attr:`t_redundant` per op *position in the cycle* (summed over the
+    repeats), so the audit shows which op of a predictor/corrector pair
+    is buying the ghost shells.
 
     The figure of merit is :attr:`per_step` — seconds per stencil
     application — which is what :func:`PerfModel.price_program`
@@ -171,6 +184,15 @@ class ProgramEstimate:
     t_exchange: float   # one deep exchange: member pack/unpack + wire
     t_redundant: float  # ghost-region re-evaluation across the fused steps
     wire_bytes: int     # bytes that one exchange puts on the wire
+    cycle_len: int = 1  # ops per cycle pass (1 = the single-op program)
+    #: redundant seconds per cycle position, summed over the repeats
+    #: (empty for estimates built before cycles existed)
+    op_redundant: Tuple[float, ...] = ()
+
+    @property
+    def applications(self) -> int:
+        """Stencil applications one iteration performs."""
+        return self.steps * max(self.cycle_len, 1)
 
     @property
     def total(self) -> float:
@@ -178,6 +200,13 @@ class ProgramEstimate:
 
     @property
     def per_step(self) -> float:
+        """Seconds per stencil application (the argmin of the auto
+        chooser)."""
+        return self.total / max(self.applications, 1)
+
+    @property
+    def per_cycle(self) -> float:
+        """Seconds per cycle repeat."""
         return self.total / max(self.steps, 1)
 
 
@@ -334,6 +363,18 @@ class PerfModel:
             return None
         return self._interp_for(t, _Interp1D)(math.log2(max(nbytes, 1)))
 
+    def measured_stencil(self, n_neighbors: int, nbytes: int) -> Optional[float]:
+        """Interpolated measured time of one stencil application with
+        ``n_neighbors`` neighbor reads over a window of ``nbytes``, or
+        None when no stencil sweep was calibrated (the redundant-compute
+        term then falls back to the contiguous-copy proxy)."""
+        t = self.params.stencil_table
+        if not t:
+            return None
+        return self._interp_for(t, _Interp2D)(
+            math.log2(max(n_neighbors, 1)), math.log2(max(nbytes, 1))
+        )
+
     # -- per-strategy terms (delegate to the registered plugin) ---------
     def t_pack(self, ct: CommittedType, incount: int, strategy) -> float:
         return self._resolve(strategy).model_pack(self, ct, incount)
@@ -463,58 +504,101 @@ class PerfModel:
         return reschedule(plan, best), costs
 
     # -- deep-halo program pricing (exchange vs redundant compute) ------
+    def _redundant_time(
+        self, n_neighbors: int, window_bytes: int, red_bytes: int
+    ) -> float:
+        """Seconds of redundant ghost-shell work inside one application
+        whose full window is ``window_bytes`` of which ``red_bytes`` are
+        shell cells some neighbor also computes.
+
+        Preferred source: the measured stencil-application sweep
+        (``SystemParams.stencil_table``) — the per-byte rate of a real
+        ``n_neighbors``-point application at this window size, times the
+        redundant bytes.  Fallback (no sweep calibrated): the
+        contiguous-copy proxy — ``n_neighbors + 2`` touches per cell, a
+        touch being half a measured copy (read + write), else analytic
+        HBM bandwidth.
+        """
+        t_app = self.measured_stencil(n_neighbors, window_bytes)
+        if t_app is not None and window_bytes > 0:
+            return t_app * (red_bytes / window_bytes)
+        touches = n_neighbors + 2
+        copy = self.measured_copy(red_bytes)
+        per_touch = (
+            copy / 2.0 if copy is not None else red_bytes / self.params.hbm_bw
+        )
+        return touches * per_touch
+
     def price_program(
         self,
         plan,
         interior: Tuple[int, int, int],
-        op_radii: Tuple[int, int, int],
-        n_neighbors: int,
+        op_radii,
+        n_neighbors,
         steps: int,
         element_bytes: int = 4,
         t_members: float = 0.0,
         axis: Optional[str] = None,
     ) -> ProgramEstimate:
         """Price one deep-halo iteration: ONE exchange at halo depth
-        ``steps * op_radii`` (wire plan ``plan``, member pack/unpack time
-        ``t_members``) amortized over ``steps`` stencil applications,
-        against the redundant ghost-shell re-evaluation the shrinking
-        valid region pays.
+        ``steps * cycle_radii`` (wire plan ``plan``, member pack/unpack
+        time ``t_members``) amortized over ``steps`` repeats of an op
+        cycle, against the redundant ghost-shell re-evaluation the
+        shrinking valid region pays.
 
-        Application ``k`` of ``steps`` writes interior plus a shell of
-        ``(steps - k) * op_radii`` — every shell cell is a cell some
-        neighbor also computes, i.e. pure redundancy bought to skip
-        ``steps - 1`` exchanges.  Each redundant cell costs a
-        neighborhood read sweep plus a center read and a write
-        (``n_neighbors + 2`` touches); the sweep time comes from the
-        measured contiguous-copy table when calibration filled it
-        (one copy = a read + a write = two touches), else from the
-        analytic HBM bandwidth.  Compare ``per_step`` across candidate
-        depths to pick ``s`` — ``price_program`` never guesses, it
-        prices the same tables every other selection uses.
+        ``op_radii`` is one per-dimension radii tuple (the single-op
+        program) or a *sequence* of them — the cycle ``[op_1..op_k]`` in
+        application order — with ``n_neighbors`` an int or matching
+        sequence.  Application ``j`` of the flattened ``steps * k``
+        schedule writes interior plus a shell of ``total - cum_j`` per
+        dimension (``total`` the full halo depth, ``cum_j`` the radii of
+        applications ``1..j`` summed) — every shell cell is a cell some
+        neighbor also computes, i.e. pure redundancy bought to skip the
+        other exchanges.  Redundant time is priced from the measured
+        stencil sweep when calibration filled it, else the contiguous-
+        copy proxy (see :meth:`_redundant_time`); per-op splits land in
+        :attr:`ProgramEstimate.op_redundant`.  Compare ``per_step``
+        across candidate depths to pick ``s`` — ``price_program`` never
+        guesses, it prices the same tables every other selection uses.
         """
+        if op_radii and isinstance(op_radii[0], (tuple, list)):
+            cycle = [tuple(r) for r in op_radii]
+        else:
+            cycle = [tuple(op_radii)]
+        if isinstance(n_neighbors, (tuple, list)):
+            neighbors = [int(n) for n in n_neighbors]
+        else:
+            neighbors = [int(n_neighbors)] * len(cycle)
+        if len(neighbors) != len(cycle):
+            raise ValueError(
+                f"n_neighbors ({len(neighbors)}) must match the cycle "
+                f"length ({len(cycle)})"
+            )
         wire = self.t_link(plan.issued_bytes, 1, axis)
         wire += (plan.wire_ops - 1) * self._hop_latency(axis)
         t_exchange = t_members + wire
-        p = self.params
         interior_cells = math.prod(interior)
-        touches = n_neighbors + 2
-        t_red = 0.0
-        for k in range(1, steps + 1):
-            shell = tuple((steps - k) * r for r in op_radii)
+        total = tuple(steps * sum(r[d] for r in cycle) for d in range(3))
+        op_red = [0.0] * len(cycle)
+        cum = (0, 0, 0)
+        for j in range(steps * len(cycle)):
+            pos = j % len(cycle)
+            cum = tuple(c + r for c, r in zip(cum, cycle[pos]))
+            shell = tuple(t - c for t, c in zip(total, cum))
             cells = math.prod(n + 2 * s for n, s in zip(interior, shell))
             red_bytes = (cells - interior_cells) * element_bytes
             if red_bytes <= 0:
                 continue
-            copy = self.measured_copy(red_bytes)
-            per_touch = (
-                copy / 2.0 if copy is not None else red_bytes / p.hbm_bw
+            op_red[pos] += self._redundant_time(
+                neighbors[pos], cells * element_bytes, red_bytes
             )
-            t_red += touches * per_touch
         return ProgramEstimate(
             steps=steps,
             t_exchange=t_exchange,
-            t_redundant=t_red,
+            t_redundant=sum(op_red),
             wire_bytes=plan.issued_bytes,
+            cycle_len=len(cycle),
+            op_redundant=tuple(op_red),
         )
 
     # -- full strategy estimates (Eqs. 1-3 analogue) ----------------------

@@ -185,13 +185,14 @@ class HaloPlan:
 
 
 def make_halo_plan(
-    spec: HaloSpec, comm, types=None, schedule_policy: str = "exact"
+    spec: HaloSpec, comm, types=None, schedule_policy: Optional[str] = None
 ) -> HaloPlan:
     """Commit the 26 region types, select strategies, and lay out the
     exact-byte wire plan — the full setup cost of a halo exchange, paid
-    once.  ``schedule_policy="model"`` lets the performance model trade
-    grouped launch latencies against uniform padding bytes (see
-    :meth:`Communicator.plan_neighbor`)."""
+    once.  ``schedule_policy`` defaults to the communicator's policy
+    (model-priced: grouped launch latencies traded against uniform
+    padding bytes — see :meth:`Communicator.plan_neighbor`); pass
+    ``"exact"`` for the byte-exact ladder the wire-bytes gates assert."""
     comm = as_communicator(comm)
     if types is None:
         types = make_halo_types(spec, comm)
@@ -253,7 +254,7 @@ def halo_exchange(
 
 
 def make_halo_step(spec: HaloSpec, comm, mesh: Mesh, axis_name="ranks",
-                   schedule_policy: str = "exact"):
+                   schedule_policy: Optional[str] = None):
     """jit-compiled shard_map wrapper: (nranks*az, ay, ax) global array,
     sharded on the leading axis, -> exchanged.  The halo plan (types,
     strategies, wire layout) is built here, once."""

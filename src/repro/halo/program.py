@@ -30,13 +30,21 @@ then per iteration: ONE fused exchange (the depth-``s*r`` region types
 are just bigger canonical strided blocks — the ragged wire path at new
 sizes) + ``s`` shrinking-region applications, bit-exact on the interior
 against the step-per-exchange reference.
+
+Programs also fuse heterogeneous *cycles*: ``build_halo_program(ops=
+[op_a, op_b], steps=s)`` exchanges ONE halo of depth
+``s * cycle_radii([op_a, op_b])`` (the per-op radii summed, per
+dimension) and applies the cycle ``s`` times over the per-application
+shrinking valid region — the predictor/corrector and smoother patterns
+that dominate real stencil codes ride the same mechanism, priced per
+application by the same model.
 """
 
 from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
@@ -48,9 +56,13 @@ from repro.core.datatypes import FLOAT, Named
 from repro.halo.exchange import HaloPlan, HaloSpec, halo_exchange, make_halo_plan
 from repro.halo.stencil import (
     STENCIL26,
+    Ops,
     StencilOp,
+    as_ops,
+    cycle_halo_radii,
+    cycle_radii,
     overlapped_stencil_iteration,
-    stencil_steps,
+    stencil_cycle,
 )
 
 __all__ = [
@@ -99,52 +111,106 @@ def set_default_halo_steps(steps: Union[int, str]) -> Union[int, str]:
 def program_fingerprint(
     grid: Tuple[int, int, int],
     interior: Tuple[int, int, int],
-    op: StencilOp,
+    op: Ops,
     element: Named,
 ) -> str:
     """Stable content hash of a program's geometry — the DecisionCache
     key that pins ``--halo-steps auto`` across processes (the analogue
-    of ``CommittedType.fingerprint`` for per-type selections)."""
-    key = (
-        "haloprogram.v1",
-        tuple(grid),
-        tuple(interior),
-        tuple(op.radii),
-        float(op.weight),
-        element.name,
-        element.size,
-    )
+    of ``CommittedType.fingerprint`` for per-type selections).
+
+    ``op`` is one :class:`StencilOp` or a cycle of them.  Single-op
+    programs keep the original (v1) key so decision files recorded
+    before cycles existed still pin; a cycle hashes every op in
+    application order under a v2 key (``[a, b] != [b, a]`` — the
+    shrinking-region schedule is order-sensitive).
+    """
+    ops = as_ops(op)
+    if len(ops) == 1:
+        key = (
+            "haloprogram.v1",
+            tuple(grid),
+            tuple(interior),
+            tuple(ops[0].radii),
+            float(ops[0].weight),
+            element.name,
+            element.size,
+        )
+    else:
+        key = (
+            "haloprogram.v2",
+            tuple(grid),
+            tuple(interior),
+            tuple((tuple(o.radii), float(o.weight)) for o in ops),
+            element.name,
+            element.size,
+        )
     return hashlib.sha256(repr(key).encode()).hexdigest()[:16]
+
+
+def _describe_cycle(ops: Tuple[StencilOp, ...]) -> str:
+    """Short human-readable cycle signature for the audit log."""
+    return "[" + ",".join(
+        f"{'x'.join(map(str, o.radii))}w{o.weight:g}" for o in ops
+    ) + "]"
 
 
 @dataclass(frozen=True)
 class HaloProgram:
-    """A compiled deep-halo schedule: {exchange at depth ``steps * r``,
-    apply steps ``1..steps`` over the shrinking valid region}.
+    """A compiled deep-halo schedule: {exchange at depth
+    ``steps * cycle_radii(ops)``, apply the op cycle ``steps`` times
+    over the shrinking valid region}.
 
-    Build with :func:`build_halo_program`; every per-iteration cost after
-    that is device compute plus the prebuilt :class:`HaloPlan`'s
-    dictionary lookups.
+    ``ops`` is the heterogeneous cycle applied in order each repeat —
+    ``(STENCIL26,)`` is the classic single-op program, a
+    predictor/corrector pair is ``(op_a, op_b)``.  Build with
+    :func:`build_halo_program`; every per-iteration cost after that is
+    device compute plus the prebuilt :class:`HaloPlan`'s dictionary
+    lookups.
     """
 
-    spec: HaloSpec              # deep geometry: radius == steps * op.radii
-    op: StencilOp
-    steps: int
+    spec: HaloSpec              # deep geometry: radius == steps * cycle_radii
+    ops: Tuple[StencilOp, ...]
+    steps: int                  # cycle repeats per iteration
     plan: HaloPlan              # the one exchange, at the deep radius
     estimate: ProgramEstimate   # model price that selected (or priced) steps
     candidates: Tuple[ProgramEstimate, ...] = ()  # every depth priced
     pinned: bool = False        # steps came from a pinned Decision
 
     @property
+    def op(self) -> StencilOp:
+        """The single op of a one-op cycle (raises on real cycles — a
+        heterogeneous program has no 'the' op)."""
+        if len(self.ops) != 1:
+            raise ValueError(
+                f"program fuses a {len(self.ops)}-op cycle; inspect .ops"
+            )
+        return self.ops[0]
+
+    @property
+    def cycle_len(self) -> int:
+        return len(self.ops)
+
+    @property
+    def applications(self) -> int:
+        """Stencil applications per iteration (``steps * cycle_len``)."""
+        return self.steps * len(self.ops)
+
+    @property
     def exchanges_per_step(self) -> float:
         """Exchange collectives issued per stencil application — the
-        communication-avoidance figure the CI gate asserts (``1/s``)."""
+        communication-avoidance figure the CI gate asserts."""
+        return 1.0 / self.applications
+
+    @property
+    def exchanges_per_cycle(self) -> float:
+        """Exchange collectives issued per cycle repeat (``1/steps``) —
+        the cycle-mode CI gate asserts this is ``<= 1``."""
         return 1.0 / self.steps
 
     @property
     def fingerprint(self) -> str:
         return program_fingerprint(
-            self.spec.grid, self.spec.interior, self.op, self.spec.element
+            self.spec.grid, self.spec.interior, self.ops, self.spec.element
         )
 
     def iteration(
@@ -155,27 +221,28 @@ class HaloProgram:
         overlap: bool = False,
         probe: Optional[dict] = None,
     ) -> jax.Array:
-        """One program iteration: ONE fused exchange + ``steps``
-        shrinking-region stencil applications.  With ``overlap`` the
-        wire op hides behind the steps-deep interior chain."""
+        """One program iteration: ONE fused exchange + ``steps`` repeats
+        of the shrinking-region op cycle.  With ``overlap`` the wire op
+        hides behind the steps-deep interior chain."""
         if overlap:
             return overlapped_stencil_iteration(
                 local, self.spec, comm, axis_name,
-                steps=self.steps, probe=probe, plan=self.plan, op=self.op,
+                steps=self.steps, probe=probe, plan=self.plan, op=self.ops,
             )
         local = halo_exchange(local, self.spec, comm, axis_name, plan=self.plan)
-        return stencil_steps(local, self.spec, self.steps, self.op)
+        return stencil_cycle(local, self.spec, self.ops, self.steps)
 
 
 def _feasible_steps(
-    interior: Tuple[int, int, int], op: StencilOp, max_steps: int
+    interior: Tuple[int, int, int], ops: Tuple[StencilOp, ...], max_steps: int
 ) -> List[int]:
-    """Depths whose halo (= send-slab depth ``s * r``) still fits inside
-    the interior in every dimension."""
+    """Repeat counts whose halo (= send-slab depth ``s * cycle_radii``)
+    still fits inside the interior in every dimension."""
+    cr = cycle_radii(ops)
     return [
         s
         for s in range(1, max_steps + 1)
-        if all(s * r <= n for n, r in zip(interior, op.radii))
+        if all(s * r <= n for n, r in zip(interior, cr))
     ]
 
 
@@ -183,16 +250,17 @@ def _price_candidate(
     comm,
     grid: Tuple[int, int, int],
     interior: Tuple[int, int, int],
-    op: StencilOp,
+    ops: Tuple[StencilOp, ...],
     steps: int,
     element: Named,
-    schedule_policy: str,
+    schedule_policy: Optional[str],
 ) -> Tuple[HaloSpec, HaloPlan, ProgramEstimate]:
-    """Build the deep geometry + wire plan for one candidate depth and
-    price the full iteration: member pack/unpack + wire per exchange,
-    redundant ghost-shell compute per fused step."""
+    """Build the deep geometry + wire plan for one candidate repeat
+    count and price the full iteration: member pack/unpack + wire per
+    exchange, redundant ghost-shell compute per fused application."""
     spec = HaloSpec(
-        grid=grid, interior=interior, radius=op.halo_radii(steps),
+        grid=grid, interior=interior,
+        radius=cycle_halo_radii(ops, steps),
         element=element,
     )
     plan = make_halo_plan(spec, comm, schedule_policy=schedule_policy)
@@ -204,8 +272,8 @@ def _price_candidate(
     estimate = model.price_program(
         plan.wire,
         interior,
-        op.radii,
-        op.nneighbors,
+        [o.radii for o in ops],
+        [o.nneighbors for o in ops],
         steps,
         element_bytes=element.size,
         t_members=t_members,
@@ -222,33 +290,45 @@ def build_halo_program(
     steps: Union[int, str, None] = None,
     element: Named = FLOAT,
     max_steps: int = MAX_AUTO_STEPS,
-    schedule_policy: str = "exact",
+    schedule_policy: Optional[str] = None,
+    ops: Optional[Sequence[StencilOp]] = None,
 ) -> HaloProgram:
     """Compile a deep-halo program for one rank geometry.
 
-    ``steps`` is a fixed depth, ``"auto"`` (the model prices every
-    feasible depth and takes the cheapest per stencil application), or
-    ``None`` (the process default — ``--halo-steps`` on the launch
-    drivers).  With ``"auto"`` and a communicator that carries a
-    :class:`~repro.measure.decisions.DecisionCache`, the choice is
-    looked up first and recorded after — reruns pin it, the audit log
-    shows it, CI can assert it.
+    ``ops`` fuses a heterogeneous *cycle* ``[op_1..op_k]`` applied in
+    order each repeat (``op`` is the single-op shorthand and is ignored
+    when ``ops`` is given).  One exchange at halo depth
+    ``steps * cycle_radii(ops)`` then hosts ``steps`` whole cycle
+    passes.
+
+    ``steps`` counts cycle repeats: a fixed count, ``"auto"`` (the model
+    prices every feasible count and takes the cheapest per stencil
+    application), or ``None`` (the process default — ``--halo-steps`` on
+    the launch drivers).  With ``"auto"`` and a communicator that
+    carries a :class:`~repro.measure.decisions.DecisionCache`, the
+    choice is looked up first and recorded after — reruns pin it, the
+    audit log shows it, CI can assert it.
+
+    ``schedule_policy`` is forwarded to the wire planner (``None`` =
+    the communicator's default — model-priced; pass ``"exact"`` for the
+    byte-exact ladder the wire-bytes gates assert).
     """
     comm = as_communicator(comm)
+    ops = as_ops(ops if ops is not None else op)
     if steps is None:
         steps = get_default_halo_steps()
-    fp = program_fingerprint(grid, interior, op, element)
+    fp = program_fingerprint(grid, interior, ops, element)
     decisions = comm.model.decisions
     candidates: Tuple[ProgramEstimate, ...] = ()
     pinned = False
     built: Optional[Tuple[HaloSpec, HaloPlan, ProgramEstimate]] = None
 
     if steps == "auto":
-        feasible = _feasible_steps(interior, op, max_steps)
+        feasible = _feasible_steps(interior, ops, max_steps)
         if not feasible:
             raise ValueError(
                 f"no feasible fusion depth: interior {interior} cannot host "
-                f"a depth-{op.radii} halo"
+                f"a depth-{cycle_radii(ops)} halo"
             )
         pin = decisions.lookup(fp, 0, 1, True) if decisions is not None else None
         if (
@@ -264,7 +344,7 @@ def build_halo_program(
         else:
             priced: Dict[int, Tuple[HaloSpec, HaloPlan, ProgramEstimate]] = {
                 s: _price_candidate(
-                    comm, grid, interior, op, s, element, schedule_policy
+                    comm, grid, interior, ops, s, element, schedule_policy
                 )
                 for s in feasible
             }
@@ -286,7 +366,8 @@ def build_halo_program(
                     ),
                     signature=(
                         f"halo program grid={tuple(grid)} "
-                        f"interior={tuple(interior)} op={op.radii} "
+                        f"interior={tuple(interior)} "
+                        f"cycle={_describe_cycle(ops)} "
                         + " ".join(
                             f"s={e.steps}:{e.per_step:.3e}" for e in candidates
                         )
@@ -294,19 +375,20 @@ def build_halo_program(
                 )
     else:
         steps = parse_halo_steps(steps)
-        if steps not in _feasible_steps(interior, op, steps):
+        if steps not in _feasible_steps(interior, ops, steps):
             raise ValueError(
                 f"interior {interior} cannot host a depth-"
-                f"{op.halo_radii(steps)} halo (send slabs exceed the interior)"
+                f"{cycle_halo_radii(ops, steps)} halo "
+                "(send slabs exceed the interior)"
             )
 
     if built is None:
         built = _price_candidate(
-            comm, grid, interior, op, steps, element, schedule_policy
+            comm, grid, interior, ops, steps, element, schedule_policy
         )
     spec, plan, estimate = built
     return HaloProgram(
-        spec=spec, op=op, steps=steps, plan=plan, estimate=estimate,
+        spec=spec, ops=ops, steps=steps, plan=plan, estimate=estimate,
         candidates=candidates, pinned=pinned,
     )
 

@@ -22,8 +22,17 @@ bit-exact against the step-per-exchange reference on the interior
 saved wire time).  :class:`repro.halo.program.HaloProgram` compiles the
 whole schedule.
 
+Ops also compose into *cycles*: a heterogeneous sequence
+``[op_1..op_k]`` (a predictor/corrector pair, a smoother sweep) applied
+in order and repeated.  One cycle pass consumes :func:`cycle_radii` of
+valid halo per dimension — the per-op radii summed — so a halo of depth
+``repeats * cycle_radii`` hosts ``repeats`` whole cycles on ONE
+exchange (:func:`stencil_cycle`); every helper here accepts either a
+single :class:`StencilOp` or a sequence of them.
+
 All window arithmetic goes through the shared
-:func:`repro.kernels.ops.stencil_window_update` primitive, so the
+:func:`repro.kernels.ops.stencil_window_update` /
+:func:`~repro.kernels.ops.stencil_window_chain` primitives, so the
 full-allocation path, the shrinking-region path, and the dense interior
 chain of the overlap pipeline accumulate in the same order — which is
 what makes their overlapping regions bit-identical and the overlap
@@ -34,19 +43,24 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.halo.exchange import HaloPlan, HaloSpec, ihalo_exchange
-from repro.kernels.ops import stencil_window_update
+from repro.kernels.ops import stencil_window_chain, stencil_window_update
 
 __all__ = [
     "StencilOp",
     "STENCIL26",
+    "as_ops",
+    "cycle_halo_radii",
+    "cycle_radii",
+    "op_sequence",
     "stencil_apply",
     "stencil_steps",
+    "stencil_cycle",
     "stencil_interior_chain",
     "max_pipeline_depth",
     "stencil26",
@@ -54,6 +68,10 @@ __all__ = [
     "stencil_iterations",
     "overlapped_stencil_iteration",
 ]
+
+#: one op or a heterogeneous cycle of them — every consumer normalizes
+#: through :func:`as_ops`
+Ops = Union["StencilOp", Sequence["StencilOp"]]
 
 
 @dataclass(frozen=True)
@@ -102,6 +120,36 @@ class StencilOp:
 STENCIL26 = StencilOp((1, 1, 1))
 
 
+def as_ops(op: Ops) -> Tuple[StencilOp, ...]:
+    """Normalize one op or an op sequence into a nonempty cycle tuple."""
+    ops = (op,) if isinstance(op, StencilOp) else tuple(op)
+    if not ops or not all(isinstance(o, StencilOp) for o in ops):
+        raise ValueError(f"expected a StencilOp or a nonempty sequence, got {op!r}")
+    return ops
+
+
+def cycle_radii(op: Ops) -> Tuple[int, int, int]:
+    """Per-dimension valid-halo depth ONE cycle pass consumes — the
+    per-op radii summed in application order."""
+    ops = as_ops(op)
+    return tuple(sum(o.radii[d] for o in ops) for d in range(3))
+
+
+def cycle_halo_radii(op: Ops, repeats: int) -> Tuple[int, int, int]:
+    """Per-dimension halo depth that hosts ``repeats`` whole cycle
+    passes on one exchange (the cycle analogue of
+    :meth:`StencilOp.halo_radii`)."""
+    return tuple(repeats * r for r in cycle_radii(op))
+
+
+def op_sequence(op: Ops, repeats: int) -> Tuple[StencilOp, ...]:
+    """The flattened application schedule: the cycle repeated
+    ``repeats`` times (``repeats * len(ops)`` applications)."""
+    if repeats < 1:
+        raise ValueError(f"cycle repeats must be >= 1, got {repeats}")
+    return as_ops(op) * repeats
+
+
 def _as_radii(valid, spec: HaloSpec) -> Tuple[int, int, int]:
     if valid is None:
         return spec.radii
@@ -141,6 +189,30 @@ def stencil_apply(
     return jax.lax.dynamic_update_slice(local, updated, origin)
 
 
+def stencil_cycle(
+    local: jax.Array,
+    spec: HaloSpec,
+    op: Ops,
+    repeats: int = 1,
+    valid=None,
+) -> jax.Array:
+    """``repeats`` passes of a (possibly heterogeneous) op cycle on one
+    exchange, the valid region shrinking by each op's radii per
+    application (valid until the halo depth is exhausted:
+    ``repeats * cycle_radii(op) <= valid``)."""
+    valid = _as_radii(valid, spec)
+    need = cycle_halo_radii(op, repeats)
+    if any(n > v for n, v in zip(need, valid)):
+        raise ValueError(
+            f"{repeats} repeats of cycle radii {cycle_radii(op)} exhaust "
+            f"the valid halo depth {valid}"
+        )
+    for o in op_sequence(op, repeats):
+        local = stencil_apply(local, spec, valid, o)
+        valid = tuple(v - r for v, r in zip(valid, o.radii))
+    return local
+
+
 def stencil_steps(
     local: jax.Array,
     spec: HaloSpec,
@@ -148,30 +220,32 @@ def stencil_steps(
     op: StencilOp = STENCIL26,
     valid=None,
 ) -> jax.Array:
-    """``steps`` applications on one exchange, the valid region shrinking
-    by ``op.radii`` per step (valid until the halo depth is exhausted:
-    ``steps * op.radii <= valid``)."""
-    valid = _as_radii(valid, spec)
-    for v, r in zip(valid, op.radii):
-        if steps * r > v:
-            raise ValueError(
-                f"{steps} steps of radii {op.radii} exhaust the valid halo "
-                f"depth {valid}"
-            )
-    for _ in range(steps):
-        local = stencil_apply(local, spec, valid, op)
-        valid = tuple(v - r for v, r in zip(valid, op.radii))
-    return local
+    """``steps`` applications of ONE op on one exchange (the single-op
+    cycle — see :func:`stencil_cycle` for heterogeneous cycles)."""
+    return stencil_cycle(local, spec, (op,), steps, valid)
 
 
-def max_pipeline_depth(spec: HaloSpec, op: StencilOp, steps: int) -> int:
-    """How many of the ``steps`` fused applications have a nonempty deep
-    interior (every dim must keep >= 1 cell after shrinking ``k * r``
-    from each side) — the depth :func:`stencil_interior_chain` can
-    precompute while the exchange is on the wire."""
+def _cum_shrink(op: Ops, applications: int) -> List[Tuple[int, int, int]]:
+    """Cumulative per-dimension shrink after each of the first
+    ``applications`` applications of the repeating cycle."""
+    cum = (0, 0, 0)
+    out = []
+    for o in itertools.islice(itertools.cycle(as_ops(op)), applications):
+        cum = tuple(c + r for c, r in zip(cum, o.radii))
+        out.append(cum)
+    return out
+
+
+def max_pipeline_depth(spec: HaloSpec, op: Ops, steps: int) -> int:
+    """How many of the ``steps * len(ops)`` fused applications have a
+    nonempty deep interior (every dim must keep >= 1 cell after the
+    cumulative shrink from each side) — the depth
+    :func:`stencil_interior_chain` can precompute while the exchange is
+    on the wire.  ``steps`` counts cycle repeats."""
+    ops = as_ops(op)
     depth = 0
-    for k in range(1, steps + 1):
-        if any(n - 2 * k * r < 1 for n, r in zip(spec.interior, op.radii)):
+    for k, cum in enumerate(_cum_shrink(ops, steps * len(ops)), 1):
+        if any(n - 2 * c < 1 for n, c in zip(spec.interior, cum)):
             break
         depth = k
     return depth
@@ -181,31 +255,31 @@ def stencil_interior_chain(
     local: jax.Array,
     spec: HaloSpec,
     depth: int,
-    op: StencilOp = STENCIL26,
+    op: Ops = STENCIL26,
 ) -> List[jax.Array]:
-    """Steps-deep pipelining: applications ``1..depth`` restricted to the
-    cells that need NO halo data at all.
+    """Steps-deep pipelining: applications ``1..depth`` of the repeating
+    op cycle, restricted to the cells that need NO halo data at all.
 
     Block ``k`` (1-indexed) holds the application-``k`` values of the
-    interior shrunk by ``k * op.radii`` per side — computable from
-    ``local``'s interior alone, before any exchange completes.  Because a
-    halo exchange only *writes* halo shells, each block is bit-identical
-    to the same region of the post-exchange application (same primitive,
-    same accumulation order), which is what makes it legal to splice the
-    chain into the real iteration while the wire op is still in flight.
+    interior shrunk by the cycle's cumulative radii per side —
+    computable from ``local``'s interior alone, before any exchange
+    completes.  Because a halo exchange only *writes* halo shells, each
+    block is bit-identical to the same region of the post-exchange
+    application (same primitive, same accumulation order), which is what
+    makes it legal to splice the chain into the real iteration while the
+    wire op is still in flight.
     """
     x = jax.lax.dynamic_slice(local, spec.radii, spec.interior)
-    blocks: List[jax.Array] = []
-    for _ in range(depth):
-        shape = tuple(s - 2 * r for s, r in zip(x.shape, op.radii))
-        if any(s < 1 for s in shape):
-            raise ValueError(
-                f"interior {spec.interior} too small for a depth-"
-                f"{len(blocks) + 1} chain of radii {op.radii}"
-            )
-        x = stencil_window_update(x, op.offsets, op.weight, op.radii, shape)
-        blocks.append(x)
-    return blocks
+    seq = list(itertools.islice(itertools.cycle(as_ops(op)), depth))
+    try:
+        return stencil_window_chain(
+            x, [(o.offsets, o.weight, o.radii) for o in seq]
+        )
+    except ValueError as e:
+        raise ValueError(
+            f"interior {spec.interior} too small for a depth-{depth} "
+            f"chain of the cycle {[o.radii for o in as_ops(op)]}: {e}"
+        ) from None
 
 
 # ---------------------------------------------------------------------------
@@ -242,44 +316,48 @@ def overlapped_stencil_iteration(
     steps: int = 2,
     probe: Optional[dict] = None,
     plan: Optional[HaloPlan] = None,
-    op: StencilOp = STENCIL26,
+    op: Ops = STENCIL26,
 ) -> jax.Array:
-    """One exchange + ``steps`` applications with the wire hidden behind
+    """One exchange + ``steps`` cycle repeats with the wire hidden behind
     steps-deep interior pipelining.
 
-    The fused collective is issued immediately (:func:`ihalo_exchange`);
-    while it is in flight the :func:`stencil_interior_chain` precomputes
-    every fused application's deep interior — not just the first one —
-    so XLA sees ``depth + 1`` independent dataflows (collective ∥ chain)
-    it is free to overlap.  After ``wait()`` the real shrinking-region
+    ``op`` is one op or a heterogeneous cycle; ``steps`` counts cycle
+    repeats (``steps * len(ops)`` applications total).  The fused
+    collective is issued immediately (:func:`ihalo_exchange`); while it
+    is in flight the :func:`stencil_interior_chain` precomputes every
+    fused application's deep interior — not just the first one — so XLA
+    sees ``depth + 1`` independent dataflows (collective ∥ chain) it is
+    free to overlap.  After ``wait()`` the real shrinking-region
     applications run and each chain block is spliced over its (bit-
     identical) region, keeping the early compute live in the graph
     without changing the result.  Bit-identical to ``halo_exchange`` +
-    ``stencil_steps``.
+    ``stencil_cycle``.
 
     ``probe``, when given, records ``pending_during_interior`` (the wire
     op was still pending when the chain was built — the overlap
     invariant) and ``pipeline_depth`` (how many applications had a
     nonempty deep interior to precompute).
     """
-    for v, r in zip(spec.radii, op.radii):
-        if steps * r > v:
-            raise ValueError(
-                f"halo radii {spec.radii} cannot host {steps} steps of "
-                f"stencil radii {op.radii}"
-            )
-    depth = max_pipeline_depth(spec, op, steps)
+    ops = as_ops(op)
+    if any(n > v for n, v in zip(cycle_halo_radii(ops, steps), spec.radii)):
+        raise ValueError(
+            f"halo radii {spec.radii} cannot host {steps} repeats of "
+            f"cycle radii {cycle_radii(ops)}"
+        )
+    depth = max_pipeline_depth(spec, ops, steps)
     req = ihalo_exchange(local, spec, comm, axis_name, types, plan)  # wire NOW
-    chain = stencil_interior_chain(local, spec, depth, op)  # overlaps the wire
+    chain = stencil_interior_chain(local, spec, depth, ops)  # overlaps the wire
     if probe is not None:
         probe["pending_during_interior"] = not req.completed
         probe["pipeline_depth"] = depth
     full = req.wait()
     valid = spec.radii
-    for k in range(1, steps + 1):
-        full = stencil_apply(full, spec, valid, op)
-        valid = tuple(v - r for v, r in zip(valid, op.radii))
+    seq = op_sequence(ops, steps)
+    shrink = _cum_shrink(ops, len(seq))
+    for k, o in enumerate(seq, 1):
+        full = stencil_apply(full, spec, valid, o)
+        valid = tuple(v - r for v, r in zip(valid, o.radii))
         if k <= depth:
-            origin = tuple(hr + k * r for hr, r in zip(spec.radii, op.radii))
+            origin = tuple(hr + c for hr, c in zip(spec.radii, shrink[k - 1]))
             full = jax.lax.dynamic_update_slice(full, chain[k - 1], origin)
     return full

@@ -46,6 +46,7 @@ __all__ = [
     "default_strategy",
     "shifted_window_sum",
     "stencil_window_update",
+    "stencil_window_chain",
     "STRATEGIES",
 ]
 
@@ -129,6 +130,33 @@ def stencil_window_update(arr, offsets, weight, origin, shape):
     acc = shifted_window_sum(arr, offsets, origin, shape)
     center = jax.lax.dynamic_slice(arr, tuple(origin), shape)
     return (1 - w) * center + (w / len(offsets)) * acc
+
+
+def stencil_window_chain(arr, stages):
+    """Apply a *sequence* of stencil window updates, each stage consuming
+    the previous stage's window: stage ``(offsets, weight, radii)``
+    shrinks the current window by ``radii`` per side and applies
+    :func:`stencil_window_update` to it.  Returns every intermediate
+    block, so the caller can splice each one over its region of a wider
+    computation (the deep-interior overlap chain does exactly that).
+
+    The stages need not share radii — a heterogeneous op cycle (e.g. a
+    predictor/corrector pair) is just a different stage list.  Because
+    every stage goes through the same primitive, the chain's blocks are
+    bit-identical to the matching regions of the full-allocation path.
+    """
+    blocks = []
+    x = arr
+    for k, (offsets, weight, radii) in enumerate(stages):
+        shape = tuple(s - 2 * r for s, r in zip(x.shape, radii))
+        if any(s < 1 for s in shape):
+            raise ValueError(
+                f"window {arr.shape} too small for stage {k + 1} of the "
+                f"chain (radii {tuple(radii)})"
+            )
+        x = stencil_window_update(x, offsets, weight, tuple(radii), shape)
+        blocks.append(x)
+    return blocks
 
 
 # ---------------------------------------------------------------------------

@@ -135,6 +135,13 @@ def main() -> None:
                     help="fusion depth for any deep-halo stencil program "
                          "the deployment builds; 'auto' is model-priced "
                          "and pinned through the decisions file")
+    ap.add_argument("--smoother-iters", type=int, default=1,
+                    help="iterations of the data-axis smoother workload "
+                         "(the in-launch HaloProgram exercising "
+                         "--halo-steps end to end; 0 disables)")
+    ap.add_argument("--smoother-cycle", default="smooth",
+                    help="op cycle the smoother fuses (see "
+                         "repro.launch.smoother.CYCLES)")
     args = ap.parse_args()
 
     from repro.halo.program import parse_halo_steps, set_default_halo_steps
@@ -149,11 +156,22 @@ def main() -> None:
         comm, save_decisions = production_communicator(
             args.comm_cache, halo_steps=halo_steps
         )
+        dc = comm.model.decisions
         print(f"comm: params={comm.model.params.name} "
-              f"pinned_decisions={len(comm.model.decisions)} "
-              f"halo_steps={halo_steps}")
+              f"pinned_decisions={len(dc)} halo_steps={halo_steps} "
+              f"pinned_programs={len(dc.program_rows())}")
     else:
         set_default_halo_steps(halo_steps)
+    if args.smoother_iters > 0 and comm is not None:
+        # the deployment's deep-halo workload: a state-smoothing pass
+        # over the data axis through the same production communicator,
+        # so the --halo-steps seam is exercised (and pinned) in serving
+        # jobs too
+        from repro.launch.smoother import run_smoother
+
+        report = run_smoother(comm, iters=args.smoother_iters,
+                              cycle=args.smoother_cycle, axis_name="data")
+        print(report.summary)
     loop = ServeLoop(cfg, args.batch, args.max_len, comm=comm)
     rng = np.random.default_rng(0)
     reqs = [

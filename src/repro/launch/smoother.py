@@ -1,0 +1,196 @@
+"""In-launch diffusion-style smoother over the data axis.
+
+The deep-halo :class:`~repro.halo.program.HaloProgram` layer existed
+(PR 4) but no in-tree launch workload built one — ``--halo-steps`` on
+``launch.train`` / ``launch.serve`` installed a default nobody read.
+This module is that workload: a 3D scalar field sharded over the data
+axis, smoothed by a stencil cycle compiled into ONE fused deep-halo
+program — so the production communicator's calibrated tables price the
+fusion depth, the choice lands in the job's decisions file as a
+``program/s=N`` row, and a rerun pins it.  The train driver runs it as
+a data-conditioning pass before the step loop; the serve driver runs it
+once at deployment startup, before the serve loop is built; CI runs it
+one step and asserts the decision row exists.
+
+Cycles:
+
+``smooth``
+    the paper's 26-point op applied each repeat — the classic diffusion
+    smoother.
+``predictor-corrector``
+    a two-op cycle: a far-reaching predictor (radii ``(2, 1, 1)`` —
+    deeper along the slow/sharded axis) followed by a local corrector
+    (the 26-point op at a lighter weight).  Unequal per-dimension radii
+    exercise the cumulative-radii halo end to end.
+
+    PYTHONPATH=src python -m repro.launch.smoother --iters 1 \
+        --halo-steps auto --comm-cache /tmp/ci_store --assert-decision
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+from typing import Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.comm.api import as_communicator
+from repro.halo.program import (
+    HaloProgram,
+    build_halo_program,
+    make_program_step,
+)
+from repro.halo.stencil import STENCIL26, StencilOp
+
+__all__ = ["CYCLES", "SmootherReport", "run_smoother", "smoother_cycle"]
+
+#: the in-launch cycles by name (argparse choices on every driver)
+CYCLES: Tuple[str, ...] = ("smooth", "predictor-corrector")
+
+
+def smoother_cycle(name: str) -> Tuple[StencilOp, ...]:
+    """The op cycle a ``--smoother-cycle`` name denotes."""
+    if name == "smooth":
+        return (STENCIL26,)
+    if name == "predictor-corrector":
+        return (StencilOp((2, 1, 1), weight=0.5), StencilOp((1, 1, 1), weight=0.25))
+    raise ValueError(f"unknown smoother cycle {name!r}; expected one of {CYCLES}")
+
+
+@dataclass(frozen=True)
+class SmootherReport:
+    """What one smoother run did — the launch drivers print it and the
+    CI step asserts on it."""
+
+    program: HaloProgram
+    iterations: int
+    checksum: float      # interior sum after the run (reproducibility probe)
+    decision_recorded: bool  # a program/s=N row exists in the decisions
+
+    @property
+    def summary(self) -> str:
+        p = self.program
+        return (
+            f"smoother: cycle_len={p.cycle_len} steps={p.steps}"
+            f"{' (pinned)' if p.pinned else ''} "
+            f"applications={self.iterations * p.applications} "
+            f"exchanges/cycle={p.exchanges_per_cycle:.2f} "
+            f"wire={p.plan.wire.schedule}/{p.plan.wire.issued_bytes}B "
+            f"checksum={self.checksum:.6e}"
+        )
+
+
+def run_smoother(
+    comm,
+    iters: int = 1,
+    interior: Tuple[int, int, int] = (8, 8, 8),
+    cycle: str = "predictor-corrector",
+    halo_steps: Union[int, str, None] = None,
+    axis_name: str = "data",
+    seed: int = 0,
+    devices=None,
+) -> SmootherReport:
+    """Smooth a sharded 3D field with one fused deep-halo program.
+
+    The field is sharded over ``len(devices)`` ranks along the leading
+    (slow) dimension — the data axis — with a periodic domain; each
+    iteration is ONE exchange plus ``steps`` repeats of the cycle.
+    ``halo_steps=None`` resolves through the process default
+    (``--halo-steps`` / ``production_communicator(halo_steps=...)``), so
+    this is the end-to-end path for the fusion-depth seam: with
+    ``"auto"`` the depth is priced on the communicator's calibrated
+    tables and recorded/pinned in its decisions cache.
+    """
+    comm = as_communicator(comm)
+    devs = list(devices if devices is not None else jax.devices())
+    R = len(devs)
+    grid = (R, 1, 1)
+    ops = smoother_cycle(cycle)
+    program = build_halo_program(
+        grid, interior, comm, ops=ops, steps=halo_steps
+    )
+    mesh = Mesh(np.array(devs), (axis_name,))
+    step = make_program_step(program, comm, mesh, axis_name)
+
+    nz, ny, nx = interior
+    rz, ry, rx = program.spec.radii
+    az, ay, ax = program.spec.alloc
+    rng = np.random.default_rng(seed)
+    state = np.zeros((R, az, ay, ax), np.float32)
+    state[:, rz:rz + nz, ry:ry + ny, rx:rx + nx] = rng.normal(
+        size=(R, nz, ny, nx)
+    ).astype(np.float32)
+    x = jnp.asarray(state.reshape(R * az, ay, ax))
+    for _ in range(iters):
+        x = step(x)
+    out = np.asarray(x).reshape(R, az, ay, ax)
+    checksum = float(
+        out[:, rz:rz + nz, ry:ry + ny, rx:rx + nx].sum()
+    )
+    decisions = comm.model.decisions
+    recorded = bool(
+        decisions is not None
+        and any(
+            d.fingerprint == program.fingerprint
+            for d in decisions.program_rows()
+        )
+    )
+    return SmootherReport(
+        program=program,
+        iterations=iters,
+        checksum=checksum,
+        decision_recorded=recorded,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="repro.launch.smoother",
+                                 description=__doc__)
+    ap.add_argument("--iters", type=int, default=1)
+    ap.add_argument("--interior", type=int, default=8,
+                    help="interior cube side per rank")
+    ap.add_argument("--cycle", default="predictor-corrector", choices=CYCLES)
+    ap.add_argument("--halo-steps", default="auto", metavar="auto|N")
+    ap.add_argument("--comm-cache", default=None, metavar="DIR",
+                    help="measure-store root for the production "
+                         "communicator (calibrated params + decisions "
+                         "file; decisions are saved back)")
+    ap.add_argument("--assert-decision", action="store_true",
+                    help="exit 1 unless a program/s=N decision row was "
+                         "recorded (or pinned) for this program — the "
+                         "CI gate on the end-to-end --halo-steps seam")
+    args = ap.parse_args()
+
+    from repro.halo.program import parse_halo_steps
+    from repro.measure.production import production_communicator
+
+    halo_steps = parse_halo_steps(args.halo_steps)
+    comm, save_decisions = production_communicator(
+        args.comm_cache, axis_name="data", halo_steps=halo_steps
+    )
+    n = args.interior
+    report = run_smoother(comm, iters=args.iters, interior=(n, n, n),
+                          cycle=args.cycle)
+    print(report.summary)
+    rows = comm.model.decisions.program_rows()
+    for d in rows:
+        print(f"decision: {d.strategy} fp={d.fingerprint} {d.signature}")
+    path = save_decisions()
+    print(f"decisions -> {path}")
+    if args.assert_decision:
+        ok = report.decision_recorded or report.program.pinned
+        if not ok:
+            raise SystemExit(
+                "no program/s=N decision row recorded for the smoother "
+                "program — the --halo-steps auto seam is broken"
+            )
+        print("SMOOTHER_DECISION_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -154,6 +154,14 @@ def main() -> None:
                          "the job builds (repro.halo.program); 'auto' is "
                          "model-priced and pinned through the decisions "
                          "file so reruns reuse the same depth")
+    ap.add_argument("--smoother-iters", type=int, default=1,
+                    help="iterations of the data-axis smoother workload "
+                         "run before training (the in-launch HaloProgram "
+                         "that exercises --halo-steps end to end; 0 "
+                         "disables)")
+    ap.add_argument("--smoother-cycle", default="predictor-corrector",
+                    help="op cycle the smoother fuses (see "
+                         "repro.launch.smoother.CYCLES)")
     args = ap.parse_args()
 
     from repro.halo.program import parse_halo_steps
@@ -173,16 +181,24 @@ def main() -> None:
             args.comm_cache, axis_name="data", halo_steps=halo_steps
         )
         dc = comm.model.decisions
-        pinned_programs = sum(
-            1 for d in dc.log if d.strategy.startswith("program/s=")
-        )
         print(f"comm: params={comm.model.params.name} "
               f"pinned_decisions={len(dc)} halo_steps={halo_steps} "
-              f"pinned_programs={pinned_programs}")
+              f"pinned_programs={len(dc.program_rows())}")
     else:
         from repro.halo.program import set_default_halo_steps
 
         set_default_halo_steps(halo_steps)
+
+    if args.smoother_iters > 0 and comm is not None:
+        # the in-launch deep-halo workload: smooth a data-axis field
+        # before training so the fusion-depth seam (--halo-steps ->
+        # production communicator -> build_halo_program -> decisions
+        # file) runs end to end on every job
+        from repro.launch.smoother import run_smoother
+
+        report = run_smoother(comm, iters=args.smoother_iters,
+                              cycle=args.smoother_cycle)
+        print(report.summary)
 
     out = train(cfg, args.steps, args.seq_len, args.global_batch,
                 args.ckpt_dir, comm=comm)

@@ -26,6 +26,7 @@ from repro.measure.bench import (
     fit_latency_bandwidth,
     measure_copy_table,
     measure_pack_table,
+    measure_stencil_table,
     measure_unpack_table,
     measure_wire_table,
     measure_wire_tables,
@@ -66,6 +67,7 @@ __all__ = [
     "load_or_calibrate",
     "measure_copy_table",
     "measure_pack_table",
+    "measure_stencil_table",
     "measure_unpack_table",
     "measure_wire_table",
     "measure_wire_tables",

@@ -20,7 +20,12 @@ all of them on the *running* backend:
   and fit, and ``PerfModel.t_link(axis=...)`` prices the axis it is
   actually crossing;
 * :func:`measure_copy_table` — contiguous device copy over sizes (the
-  memcpy analogue every strategy's staging bottoms out in).
+  memcpy analogue every strategy's staging bottoms out in);
+* :func:`measure_stencil_table` — one stencil application
+  (:func:`repro.kernels.ops.stencil_window_update`) over (neighbor
+  count x window bytes): the redundant ghost-shell term of
+  :meth:`~repro.comm.perfmodel.PerfModel.price_program` priced from a
+  real sweep instead of the contiguous-copy proxy.
 
 :func:`calibrate_params` assembles everything into a
 :class:`~repro.comm.perfmodel.SystemParams`.  On a real TPU the
@@ -56,6 +61,9 @@ __all__ = [
     "measure_wire_table",
     "measure_wire_tables",
     "measure_copy_table",
+    "measure_stencil_table",
+    "STENCIL_RADII",
+    "REDUCED_STENCIL_RADII",
     "fit_latency_bandwidth",
     "calibrate_params",
 ]
@@ -68,6 +76,13 @@ TOTAL_BYTES: Tuple[int, ...] = (1 << 10, 1 << 14, 1 << 18, 1 << 22)
 REDUCED_BLOCK_BYTES: Tuple[int, ...] = (8, 128)
 REDUCED_TOTAL_BYTES: Tuple[int, ...] = (1 << 10, 1 << 14)
 PITCH = 512  # paper Fig. 7 uses 512 B pitch
+
+#: stencil-sweep op shapes: per-dimension radii -> neighbor counts 26,
+#: 44, and 124 — spanning the paper's 26-point op up to deep boxes
+STENCIL_RADII: Tuple[Tuple[int, int, int], ...] = (
+    (1, 1, 1), (2, 1, 1), (2, 2, 2),
+)
+REDUCED_STENCIL_RADII: Tuple[Tuple[int, int, int], ...] = ((1, 1, 1), (2, 1, 1))
 
 
 def time_fn(fn, *args, iters: int = 5) -> float:
@@ -183,6 +198,54 @@ def measure_copy_table(
     return rows
 
 
+def measure_stencil_table(
+    radii_set: Sequence[Tuple[int, int, int]] = STENCIL_RADII,
+    total_bytes: Sequence[int] = TOTAL_BYTES,
+    iters: int = 5,
+) -> List[Tuple[float, float, float]]:
+    """One weighted box-stencil application over (neighbor count x
+    window bytes): rows ``(log2_neighbors, log2_window_bytes, sec)``.
+
+    Times :func:`repro.kernels.ops.stencil_window_update` — the exact
+    primitive every deep-halo application runs — on a float32 cube whose
+    window holds ~``total`` bytes, for each op shape in ``radii_set``.
+    ``PerfModel.price_program`` interpolates this table to price the
+    redundant ghost-shell compute a fused program buys, instead of
+    approximating a sweep with ``n_neighbors + 2`` contiguous-copy
+    touches.
+    """
+    import itertools as _it
+
+    from repro.kernels.ops import stencil_window_update
+
+    rows: List[Tuple[float, float, float]] = []
+    for radii in radii_set:
+        rz, ry, rx = radii
+        offsets = tuple(
+            d
+            for d in _it.product(
+                range(-rz, rz + 1), range(-ry, ry + 1), range(-rx, rx + 1)
+            )
+            if d != (0, 0, 0)
+        )
+        for total in total_bytes:
+            m = max(int(round((total / 4) ** (1.0 / 3.0))), 1)
+            shape = (m, m, m)
+            arr = jnp.zeros(
+                tuple(s + 2 * r for s, r in zip(shape, radii)), jnp.float32
+            )
+            jfn = jax.jit(
+                lambda a, _o=offsets, _r=radii, _s=shape: stencil_window_update(
+                    a, _o, 0.4, _r, _s
+                )
+            )
+            sec = time_fn(jfn, arr, iters=iters)
+            rows.append(
+                (math.log2(len(offsets)), math.log2(4 * m ** 3), sec)
+            )
+    return rows
+
+
 def measure_wire_table(
     total_bytes: Sequence[int] = TOTAL_BYTES,
     iters: int = 5,
@@ -288,7 +351,8 @@ def calibrate_params(
     iters: Optional[int] = None,
     mesh_axes: Optional[Dict[str, int]] = None,
 ) -> SystemParams:
-    """Full-term calibration: pack + unpack + wire + contiguous copy.
+    """Full-term calibration: pack + unpack + wire + contiguous copy +
+    stencil application.
 
     ``mesh_axes`` (axis name -> size, e.g. ``{"ici": 4, "dcn": 2}``)
     sweeps the wire term once per mesh axis and stores one table + fit
@@ -302,11 +366,13 @@ def calibrate_params(
     """
     blocks = REDUCED_BLOCK_BYTES if reduced else BLOCK_BYTES
     totals = REDUCED_TOTAL_BYTES if reduced else TOTAL_BYTES
+    radii_set = REDUCED_STENCIL_RADII if reduced else STENCIL_RADII
     it = iters if iters is not None else (2 if reduced else 5)
 
     pack = measure_pack_table(strategies, blocks, totals, iters=it)
     unpack = measure_unpack_table(strategies, blocks, totals, iters=it)
     copy = measure_copy_table(totals, iters=it)
+    stencil = measure_stencil_table(radii_set, totals, iters=it)
     wire = measure_wire_table(totals, iters=it)
     wire_lat, wire_bw = fit_latency_bandwidth(wire)
     wire_tables = wire_fits = None
@@ -333,6 +399,7 @@ def calibrate_params(
         unpack_table={k: tuple(v) for k, v in unpack.items() if v},
         wire_table=tuple(wire),
         copy_table=tuple(copy),
+        stencil_table=tuple(stencil),
         wire_tables=(
             {k: tuple(v) for k, v in wire_tables.items()} if wire_tables else None
         ),

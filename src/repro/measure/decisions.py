@@ -157,6 +157,14 @@ class DecisionCache:
             return DecisionCache()
         return DecisionCache.from_json(p.read_text())
 
+    # -- queries ---------------------------------------------------------
+    def program_rows(self) -> List[Decision]:
+        """The deep-halo fusion-depth decisions (``program/s=N`` rows,
+        keyed by program fingerprint — one per distinct
+        grid/interior/cycle geometry).  The launch drivers report these
+        and the CI smoother step asserts one was recorded."""
+        return [d for d in self.log if d.strategy.startswith("program/s=")]
+
     # -- audit -----------------------------------------------------------
     def report(self) -> str:
         """The audit log as aligned text: one selection per line."""

@@ -46,13 +46,15 @@ __all__ = [
 ]
 
 #: bump when the envelope or SystemParams schema changes incompatibly
-STORE_FORMAT = 3
+STORE_FORMAT = 4
 
 #: formats this reader still understands: format 2 predates the
-#: per-axis wire tables (``wire_tables`` / ``wire_fits``), which are
-#: optional fields — a format-2 envelope (e.g. the checked-in
-#: ``ci_params.json``) loads unchanged with those fields absent
-COMPATIBLE_FORMATS = (2, STORE_FORMAT)
+#: per-axis wire tables (``wire_tables`` / ``wire_fits``), format 3 the
+#: stencil-application sweep (``stencil_table``) — all optional fields,
+#: so older envelopes (e.g. the checked-in ``ci_params.json``) load
+#: unchanged with those fields absent (the model then falls back to the
+#: contiguous-copy proxy for the redundant-compute term)
+COMPATIBLE_FORMATS = (2, 3, STORE_FORMAT)
 
 _ENV_ROOT = "REPRO_MEASURE_DIR"
 

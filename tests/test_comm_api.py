@@ -337,8 +337,29 @@ class TestNeighborAlltoallv:
         want[48:52] = want[16:20]
         np.testing.assert_array_equal(out, want)
 
-        # the whole exchange must be ONE collective
-        jaxpr = str(jax.make_jaxpr(fn)(buf))
+        # the whole exchange must be ONE collective whichever schedule
+        # the default (model-priced) policy lands on for the single
+        # delta class
+        from repro.comm import collective_payload_bytes
+
+        counts = collective_payload_bytes(fn, buf)
+        assert counts["ops"] == 1
+        # the exact ladder keeps the old shape: one uniform all_to_all
+        strats, plan = comm.plan_neighbor(send_cts, perms,
+                                          schedule_policy="exact")
+        assert plan.schedule == "uniform" and plan.wire_ops == 1
+
+        def body_exact(b):
+            return comm.neighbor_alltoallv(
+                b, send_cts, recv_cts, perms, plan=plan, strategies=strats
+            )
+
+        fn_exact = jax.jit(shard_map(
+            body_exact, mesh=_mesh1(), in_specs=P(), out_specs=P(),
+            check_vma=False
+        ))
+        np.testing.assert_array_equal(np.asarray(fn_exact(buf)), want)
+        jaxpr = str(jax.make_jaxpr(fn_exact)(buf))
         assert jaxpr.count("all_to_all") == 1
         assert "ppermute" not in jaxpr
 

@@ -58,8 +58,8 @@ np.testing.assert_array_equal(results["baseline"], results["tempi"])
 from repro.comm import Communicator, FixedPolicy, collective_payload_bytes
 from repro.halo import make_halo_plan
 comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
-plan = make_halo_plan(spec, comm)
-step = make_halo_step(spec, comm, mesh)
+plan = make_halo_plan(spec, comm, schedule_policy="exact")
+step = make_halo_step(spec, comm, mesh, schedule_policy="exact")
 counts = collective_payload_bytes(step, x0)
 assert plan.wire.ngroups == 7
 assert counts["ops"] == plan.wire.wire_ops == 7, counts

@@ -312,6 +312,84 @@ class TestStore:
 
 
 # ===========================================================================
+# the stencil-application sweep (ISSUE 5: store format 4)
+# ===========================================================================
+
+class TestStencilTable:
+    def test_measure_stencil_table_rows(self):
+        from repro.measure import measure_stencil_table
+
+        rows = measure_stencil_table(
+            radii_set=((1, 1, 1),), total_bytes=(1 << 10,), iters=1
+        )
+        assert len(rows) == 1
+        log_n, log_b, sec = rows[0]
+        assert log_n == pytest.approx(np.log2(26))
+        assert sec > 0
+
+    def test_stencil_table_roundtrips(self):
+        p = SystemParams(
+            name="t",
+            stencil_table=[[np.log2(26), 12.0, 3e-5], [np.log2(26), 16.0, 4e-4]],
+        )
+        # frozen into tuples, JSON round-trips
+        assert p.stencil_table == ((np.log2(26), 12.0, 3e-5),
+                                   (np.log2(26), 16.0, 4e-4))
+        assert SystemParams.from_json(p.to_json()) == p
+
+    def test_store_format_4_and_older_envelopes_load(self, tmp_path):
+        assert STORE_FORMAT == 4
+        store = ParamsStore(tmp_path)
+        p = SystemParams(name="x", stencil_table=((4.7, 12.0, 3e-5),))
+        out = store.save(p)
+        assert json.loads(out.read_text())["format"] == 4
+        assert store.load() == p
+        # a format-3 envelope (pre-stencil-table) still loads
+        d = json.loads(out.read_text())
+        d["format"] = 3
+        del d["params"]["stencil_table"]
+        out.write_text(json.dumps(d))
+        got = store.load()
+        assert got is not None and got.stencil_table is None
+        # ...as does format 2 (pre-per-axis-wire)
+        d["format"] = 2
+        out.write_text(json.dumps(d))
+        assert store.load() is not None
+
+    def test_price_program_prefers_measured_stencil_rate(self):
+        """With a stencil table the redundant term is the measured
+        per-byte application rate x redundant bytes — not the copy
+        proxy — and the cost responds to the neighbor count axis."""
+        from repro.comm import PerfModel, plan_wire
+
+        plan = plan_wire((64,), (((0, 0),),), native=False)
+        interior, radii, steps = (8, 8, 8), (1, 1, 1), 2
+        # application windows here span 10^3 cells = 4000 B (log2 ~12);
+        # one measured point per neighbor count (nearest-neighbor interp)
+        t26, t124 = 1e-3, 8e-3
+        p = SystemParams(
+            name="s",
+            stencil_table=(
+                (np.log2(26), 12.0, t26),
+                (np.log2(124), 12.0, t124),
+            ),
+        )
+        model = PerfModel(p)
+        est26 = model.price_program(plan, interior, radii, 26, steps)
+        est124 = model.price_program(plan, interior, (2, 2, 2), 124, 2)
+        # shell-1 window = 10^3 cells, 488 redundant: rate * red_bytes
+        cells, red = 10 ** 3, 10 ** 3 - 8 ** 3
+        want26 = t26 * (red * 4) / (cells * 4)
+        assert est26.t_redundant == pytest.approx(want26, rel=1e-6)
+        # no table -> the copy/hbm proxy prices differently
+        bare = PerfModel(SystemParams(name="b"))
+        est_proxy = bare.price_program(plan, interior, radii, 26, steps)
+        assert est_proxy.t_redundant != pytest.approx(est26.t_redundant)
+        # the 124-neighbor row is consulted for the deeper op
+        assert est124.t_redundant > 0
+
+
+# ===========================================================================
 # decisions: audit log + pinning
 # ===========================================================================
 

@@ -176,13 +176,18 @@ mesh = Mesh(np.array(jax.devices()), ("ranks",))
 types = make_halo_types(spec, comm)
 probe = {}
 
+# byte-exact ladder: the 7-wire-op / ragged-bytes assertions below gate
+# the exact schedule (the model-priced default may buy uniform padding)
+from repro.halo import make_halo_plan
+plan = make_halo_plan(spec, comm, types, schedule_policy="exact")
+
 def plain(local):
-    local = halo_exchange(local, spec, comm, "ranks", types)
+    local = halo_exchange(local, spec, comm, "ranks", types, plan=plan)
     return stencil_steps(local, spec, steps=2)
 
 def overlapped(local):
     return overlapped_stencil_iteration(
-        local, spec, comm, "ranks", types, steps=2, probe=probe)
+        local, spec, comm, "ranks", types, steps=2, probe=probe, plan=plan)
 
 jp = jax.jit(shard_map(plain, mesh=mesh, in_specs=P("ranks"),
                        out_specs=P("ranks"), check_vma=False))
@@ -196,8 +201,6 @@ assert probe["pending_during_interior"] is True
 assert probe["pipeline_depth"] == 1
 # 2x2x2 grid: 7 delta classes -> 7 exact-payload wire ops, ragged bytes
 from repro.comm import collective_payload_bytes
-from repro.halo import make_halo_plan
-plan = make_halo_plan(spec, comm)
 counts = collective_payload_bytes(jo, x)
 assert counts["ops"] == plan.wire.wire_ops == 7, counts
 assert counts["total"] == plan.wire_bytes, counts

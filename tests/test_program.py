@@ -33,11 +33,14 @@ from repro.halo import (
     STENCIL26,
     StencilOp,
     build_halo_program,
+    cycle_radii,
     get_default_halo_steps,
     halo_exchange,
+    op_sequence,
     program_fingerprint,
     set_default_halo_steps,
     stencil_apply,
+    stencil_cycle,
     stencil_steps,
 )
 from repro.measure import DecisionCache, load_ci_params
@@ -215,6 +218,227 @@ class TestBuildProgram:
             set_default_halo_steps(before)
 
 
+# ===========================================================================
+# heterogeneous op cycles (ISSUE 5)
+# ===========================================================================
+
+#: the predictor/corrector pair with unequal per-dimension radii used
+#: throughout the cycle tests
+CYCLE_OPS = (StencilOp((2, 1, 1), weight=0.5), StencilOp((1, 1, 1), weight=0.25))
+
+
+class TestCyclePrograms:
+    def test_cycle_radii_and_sequence(self):
+        assert cycle_radii(CYCLE_OPS) == (3, 2, 2)
+        assert cycle_radii(STENCIL26) == (1, 1, 1)
+        seq = op_sequence(CYCLE_OPS, 3)
+        assert len(seq) == 6
+        assert seq[0] is CYCLE_OPS[0] and seq[1] is CYCLE_OPS[1]
+        assert seq[4] is CYCLE_OPS[0]
+        with pytest.raises(ValueError, match="repeats"):
+            op_sequence(CYCLE_OPS, 0)
+
+    def test_stencil_cycle_matches_periodic_oracle(self):
+        """Two repeats of the [predictor, corrector] cycle on one
+        exchange, single periodic rank, vs the roll oracle applied
+        op-by-op."""
+        spec = HaloSpec(grid=(1, 1, 1), interior=(8, 7, 6),
+                        radius=tuple(2 * r for r in cycle_radii(CYCLE_OPS)))
+        rz, ry, rx = spec.radii
+        nz, ny, nx = spec.interior
+        comm = Communicator(axis_name="ranks")
+        rng = np.random.default_rng(0)
+        g = rng.normal(size=spec.interior).astype(np.float32)
+        local = np.zeros(spec.alloc, np.float32)
+        local[rz:rz + nz, ry:ry + ny, rx:rx + nx] = g
+
+        def it(x):
+            x = halo_exchange(x, spec, comm, "ranks")
+            return stencil_cycle(x, spec, CYCLE_OPS, 2)
+
+        fn = jax.jit(shard_map(it, mesh=_mesh1(), in_specs=P(),
+                               out_specs=P(), check_vma=False))
+        out = np.asarray(fn(jnp.asarray(local)))
+        want = g
+        for op in op_sequence(CYCLE_OPS, 2):
+            want = _stencil_np(want, op)
+        np.testing.assert_allclose(
+            out[rz:rz + nz, ry:ry + ny, rx:rx + nx], want,
+            rtol=2e-6, atol=2e-6,
+        )
+
+    def test_cycle_exhaustion_validated(self):
+        spec = HaloSpec(grid=(1, 1, 1), interior=(8, 8, 8),
+                        radius=cycle_radii(CYCLE_OPS))
+        x = jnp.zeros(spec.alloc, jnp.float32)
+        with pytest.raises(ValueError, match="exhaust"):
+            stencil_cycle(x, spec, CYCLE_OPS, 2)
+
+    def test_cycle_program_geometry(self):
+        comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+        prog = build_halo_program((2, 2, 2), (8, 6, 6), comm, ops=CYCLE_OPS,
+                                  steps=2, schedule_policy="exact")
+        assert prog.spec.radii == (6, 4, 4)
+        assert prog.cycle_len == 2
+        assert prog.applications == 4
+        assert prog.exchanges_per_step == 0.25
+        assert prog.exchanges_per_cycle == 0.5
+        assert prog.plan.wire_bytes == sum(
+            ct.packed_extent() for ct in prog.plan.send_cts
+        )
+        with pytest.raises(ValueError, match="cycle"):
+            prog.op  # a 2-op program has no single 'the' op
+
+    def test_cycle_infeasible_depth_raises(self):
+        comm = Communicator(axis_name="ranks")
+        with pytest.raises(ValueError, match="cannot host"):
+            build_halo_program((2, 2, 2), (8, 6, 6), comm, ops=CYCLE_OPS,
+                               steps=3)  # 3 * (3,2,2) exceeds (8,6,6)
+
+    def test_cycle_fingerprint_order_sensitive_and_v1_compatible(self):
+        a, b = CYCLE_OPS
+        fab = program_fingerprint((2, 2, 2), (8, 6, 6), (a, b), FLOAT)
+        fba = program_fingerprint((2, 2, 2), (8, 6, 6), (b, a), FLOAT)
+        assert fab != fba  # the shrinking schedule is order-sensitive
+        # single-op cycles keep the v1 key: decision files recorded
+        # before cycles existed still pin
+        f1 = program_fingerprint((2, 2, 2), (8, 6, 6), a, FLOAT)
+        f1_seq = program_fingerprint((2, 2, 2), (8, 6, 6), (a,), FLOAT)
+        assert f1 == f1_seq != fab
+
+    def test_cycle_price_oracle_on_ci_params(self):
+        """The auto chooser on the CI-pinned measured tables: never a
+        repeat count predicted worse per application than s=1, per-op
+        redundant terms split and summing to t_redundant, wire bytes
+        strictly growing with depth."""
+        comm = Communicator(axis_name="ranks", params=load_ci_params(),
+                            policy=FixedPolicy("rows"))
+        prog = build_halo_program((2, 2, 2), (9, 8, 8), comm, ops=CYCLE_OPS,
+                                  steps="auto", schedule_policy="exact")
+        assert prog.candidates
+        by_steps = {e.steps: e for e in prog.candidates}
+        assert 1 in by_steps
+        assert prog.estimate.per_step <= by_steps[1].per_step
+        for est in prog.candidates:
+            assert est.cycle_len == 2
+            assert est.applications == 2 * est.steps
+            assert len(est.op_redundant) == 2
+            assert est.t_redundant == pytest.approx(sum(est.op_redundant))
+        wire = [by_steps[s].wire_bytes for s in sorted(by_steps)]
+        assert wire == sorted(wire) and wire[0] < wire[-1]
+
+    def test_cycle_auto_pinned_across_processes(self):
+        """Pinned cycle Decision replay: the program/s=N row records the
+        cycle signature, round-trips through JSON, and pins the repeat
+        count in a fresh process."""
+        dc = DecisionCache()
+        comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"),
+                            decisions=dc)
+        prog = build_halo_program((2, 2, 2), (8, 6, 6), comm, ops=CYCLE_OPS,
+                                  steps="auto")
+        assert not prog.pinned
+        rows = dc.program_rows()
+        assert len(rows) == 1
+        assert rows[0].strategy == f"program/s={prog.steps}"
+        assert rows[0].fingerprint == prog.fingerprint
+        assert "cycle=[2x1x1w0.5,1x1x1w0.25]" in rows[0].signature
+
+        dc2 = DecisionCache.from_json(dc.to_json())
+        comm2 = Communicator(axis_name="ranks", policy=FixedPolicy("rows"),
+                             decisions=dc2)
+        prog2 = build_halo_program((2, 2, 2), (8, 6, 6), comm2, ops=CYCLE_OPS,
+                                   steps="auto")
+        assert prog2.pinned
+        assert prog2.steps == prog.steps
+        assert len(dc2.program_rows()) == 1
+        # a different cycle (swapped order) must NOT ride that pin
+        a, b = CYCLE_OPS
+        prog3 = build_halo_program((2, 2, 2), (8, 6, 6), comm2, ops=(b, a),
+                                   steps="auto")
+        assert not prog3.pinned
+
+    def test_price_program_cycle_normalizes_scalar_form(self):
+        """A one-op cycle prices identically through the scalar and the
+        sequence signatures."""
+        from repro.comm import PerfModel, plan_wire
+
+        model = PerfModel(load_ci_params())
+        plan = plan_wire((256,), (((0, 0),),), native=False)
+        one = model.price_program(plan, (8, 8, 8), (1, 1, 1), 26, 2)
+        seq = model.price_program(plan, (8, 8, 8), [(1, 1, 1)], [26], 2)
+        assert one.total == seq.total
+        assert one.per_step == seq.per_step
+        assert one.applications == seq.applications == 2
+        with pytest.raises(ValueError, match="match the cycle"):
+            model.price_program(plan, (8, 8, 8), [(1, 1, 1)], [26, 8], 2)
+
+
+CYCLE_DEEP_CODE = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.comm import Communicator, FixedPolicy, collective_payload_bytes
+from repro.halo import StencilOp, build_halo_program, make_program_step
+
+# unequal per-dim radii: cycle radii (3, 2, 2); s in {1,2,3} all fit the
+# (9, 6, 6) interior and divide 6 total cycle repeats
+ops = [StencilOp((2, 1, 1), weight=0.5), StencilOp((1, 1, 1), weight=0.25)]
+grid, interior = (2, 2, 2), (9, 6, 6)
+nz, ny, nx = interior
+R = 8
+mesh = Mesh(np.array(jax.devices()), ("ranks",))
+field = np.random.default_rng(0).normal(size=(R, nz, ny, nx)).astype(np.float32)
+
+def run(prog, comm, state_field, iters):
+    fn = make_program_step(prog, comm, mesh)
+    az, ay, ax = prog.spec.alloc
+    rz, ry, rx = prog.spec.radii
+    state = np.zeros((R, az, ay, ax), np.float32)
+    state[:, rz:rz+nz, ry:ry+ny, rx:rx+nx] = state_field
+    x = jnp.asarray(state.reshape(R * az, ay, ax))
+    for _ in range(iters):
+        x = fn(x)
+    return np.asarray(x).reshape(R, az, ay, ax)[
+        :, rz:rz+nz, ry:ry+ny, rx:rx+nx]
+
+TOTAL = 6  # cycle repeats in every variant
+interiors = {}
+for s in (1, 2, 3):
+    comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+    prog = build_halo_program(grid, interior, comm, ops=ops, steps=s,
+                              schedule_policy="exact")
+    assert prog.spec.radii == (3 * s, 2 * s, 2 * s)
+    fn = make_program_step(prog, comm, mesh)
+    az, ay, ax = prog.spec.alloc
+    counts = collective_payload_bytes(fn, jnp.zeros((R * az, ay, ax), jnp.float32))
+    assert counts["ops"] == prog.plan.wire.wire_ops, (s, counts)
+    assert counts["total"] == prog.plan.wire_bytes, (s, counts)
+    interiors[s] = run(prog, comm, field, TOTAL // s)
+
+np.testing.assert_array_equal(interiors[1], interiors[2])
+np.testing.assert_array_equal(interiors[1], interiors[3])
+
+# the exchange-per-application reference: one single-op program per op,
+# exchanged before EVERY application
+comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
+ref_progs = [build_halo_program(grid, interior, comm, ops=[op], steps=1,
+                                schedule_policy="exact") for op in ops]
+ref = field
+for _ in range(TOTAL):
+    for prog in ref_progs:
+        ref = run(prog, comm, ref, 1)
+np.testing.assert_array_equal(interiors[1], ref)
+print("CYCLE_DEEP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_cycle_bit_exact_s123_vs_per_step_reference():
+    out = run_with_devices(CYCLE_DEEP_CODE, ndev=8)
+    assert "CYCLE_DEEP_OK" in out
+
+
 DEEP_HALO_CODE = r"""
 import numpy as np
 import jax
@@ -235,7 +459,8 @@ TOTAL = 6
 interiors = {}
 for s in (1, 2, 3):
     comm = Communicator(axis_name="ranks", policy=FixedPolicy("rows"))
-    prog = build_halo_program(grid, interior, comm, op=op, steps=s)
+    prog = build_halo_program(grid, interior, comm, op=op, steps=s,
+                              schedule_policy="exact")
     assert prog.spec.radii == (2 * s, s, s)
     fn = make_program_step(prog, comm, mesh)
     az, ay, ax = prog.spec.alloc
@@ -317,13 +542,31 @@ class TestModelPricedSchedule:
         assert plan.schedule == "grouped"
         assert plan.issued_bytes == plan.wire_bytes == 16
 
-    def test_exact_policy_unchanged(self):
-        # the default byte-exact ladder is untouched (the wire-bytes CI
-        # gates depend on it)
-        comm = Communicator(axis_name="x")
+    def test_default_policy_is_model(self):
+        # ROADMAP flip: plan_neighbor defaults to the model-priced
+        # schedule choice — on latency-heavy analytic params the two
+        # delta classes fuse into one padded uniform collective without
+        # anyone passing schedule_policy
+        from repro.comm import DEFAULT_SCHEDULE_POLICY
+
+        assert DEFAULT_SCHEDULE_POLICY == "model"
+        p = SystemParams(name="lat", ici_latency=1e-3)
+        comm = Communicator(axis_name="x", params=p)
         cts, perms = _two_group_case(comm)
         _, plan = comm.plan_neighbor(cts, perms)
+        assert plan.schedule == "uniform"
+        # the padding the model may buy is bounded by the row-equalized
+        # layout (the CI padded-allowance gate asserts the same bound)
+        assert plan.issued_bytes <= plan.nranks * plan.seg_bytes
+
+    def test_exact_policy_selectable(self):
+        # the byte-exact ladder stays selectable per plan (the strict
+        # wire-bytes CI gates request it)
+        comm = Communicator(axis_name="x")
+        cts, perms = _two_group_case(comm)
+        _, plan = comm.plan_neighbor(cts, perms, schedule_policy="exact")
         assert plan.schedule == "grouped"
+        assert plan.issued_bytes == plan.wire_bytes
         with pytest.raises(ValueError, match="schedule_policy"):
             comm.plan_neighbor(cts, perms, schedule_policy="nope")
 
@@ -472,6 +715,113 @@ class TestInt8PerBlock:
         with pytest.raises(ValueError, match="scales"):
             INT8_WIRE.unpack_wire(comm, jnp.zeros((32, 32), jnp.float32),
                                   bad, ct)
+
+
+# ===========================================================================
+# RleWire: lossless zero-run wire compression
+# ===========================================================================
+
+class TestRleWire:
+    def _ct(self, comm):
+        return comm.commit(Subarray((32, 32), (16, 16), (4, 4), FLOAT))
+
+    def test_wire_bytes_and_plan_accounting(self):
+        from repro.comm import RLE_WIRE, RleWire
+
+        comm = Communicator(axis_name="x",
+                            policy=FixedPolicy(RleWire.name))
+        ct = self._ct(comm)
+        assert RLE_WIRE.wire_bytes(ct) == ct.size + 8
+        assert RLE_WIRE.wire_segment(ct).nbytes == ct.size + 8
+        # the WirePlan carries the capacity bytes (header included), and
+        # the traced collective moves exactly that
+        strats, plan = comm.plan_neighbor([ct], [[(0, 0)]],
+                                          schedule_policy="exact")
+        assert strats[0].name == RleWire.name
+        assert plan.wire_bytes == ct.size + 8
+
+        recv = comm.commit(Subarray((32, 32), (16, 16), (4, 4), FLOAT))
+
+        def body(b):
+            return comm.neighbor_alltoallv(
+                b, [ct], [recv], [[(0, 0)]], plan=plan, strategies=strats
+            )
+
+        fn = jax.jit(shard_map(body, mesh=_mesh1("x"), in_specs=P(),
+                               out_specs=P(), check_vma=False))
+        counts = collective_payload_bytes(fn, jnp.zeros((32, 32), jnp.float32))
+        assert counts["total"] == plan.issued_bytes == ct.size + 8
+
+    def test_zero_run_payload_rides_rle_mode_exactly(self):
+        from repro.comm import RLE_WIRE
+
+        comm = Communicator(axis_name="x")
+        ct = self._ct(comm)
+        src = np.zeros((32, 32), np.float32)
+        src[10:12, 4:20] = 3.25  # a few runs in a sea of zeros
+        wire = RLE_WIRE.pack(jnp.asarray(src), ct)
+        assert wire.shape[0] == RLE_WIRE.wire_bytes(ct)
+        mode, nruns = np.asarray(wire[:8]).view(np.uint32)
+        assert mode == 1  # fits the run capacity -> rle mode
+        assert nruns <= ct.size // 5
+        out = np.asarray(RLE_WIRE.unpack_wire(
+            comm, jnp.zeros((32, 32), jnp.float32), wire, ct))
+        # LOSSLESS: bit-exact, not allclose
+        np.testing.assert_array_equal(out[4:20, 4:20], src[4:20, 4:20])
+
+    def test_incompressible_payload_stored_exactly(self):
+        from repro.comm import RLE_WIRE
+
+        comm = Communicator(axis_name="x")
+        ct = self._ct(comm)
+        rng = np.random.default_rng(0)
+        src = rng.normal(size=(32, 32)).astype(np.float32)
+        wire = RLE_WIRE.pack(jnp.asarray(src), ct)
+        mode, _ = np.asarray(wire[:8]).view(np.uint32)
+        assert mode == 0  # too many runs -> stored-block fallback
+        out = np.asarray(RLE_WIRE.unpack_wire(
+            comm, jnp.zeros((32, 32), jnp.float32), wire, ct))
+        np.testing.assert_array_equal(out[4:20, 4:20], src[4:20, 4:20])
+
+    def test_end_to_end_sendrecv_both_modes(self):
+        from repro.comm import RleWire
+
+        comm = Communicator(axis_name="x", policy=FixedPolicy(RleWire.name))
+        ct = self._ct(comm)
+
+        def body(b):
+            return comm.sendrecv(b, jnp.zeros_like(b), ct, [(0, 0)])
+
+        fn = jax.jit(shard_map(body, mesh=_mesh1("x"), in_specs=P(),
+                               out_specs=P(), check_vma=False))
+        sparse = np.zeros((32, 32), np.float32)
+        sparse[5, 5] = 1.0
+        dense = np.random.default_rng(1).normal(size=(32, 32)).astype(np.float32)
+        for src in (sparse, dense):
+            out = np.asarray(fn(jnp.asarray(src)))
+            np.testing.assert_array_equal(out[4:20, 4:20], src[4:20, 4:20])
+
+    def test_not_selectable_and_wire_only(self):
+        from repro.comm import RLE_WIRE, default_registry
+
+        assert RLE_WIRE.name in default_registry()
+        assert not RLE_WIRE.selectable
+        assert RLE_WIRE.wire_only
+        comm = Communicator(axis_name="x")
+        ct = self._ct(comm)
+        # the model must never auto-pick a capacity-padded wire
+        assert comm.select(ct, wire=True).name != RLE_WIRE.name
+        with pytest.raises(TypeError, match="wire-only"):
+            RLE_WIRE.unpack(jnp.zeros(4), jnp.zeros(4, jnp.uint8), ct)
+
+    def test_wrong_length_refused(self):
+        from repro.comm import RLE_WIRE
+
+        comm = Communicator(axis_name="x")
+        ct = self._ct(comm)
+        with pytest.raises(ValueError, match="rle wire"):
+            RLE_WIRE.unpack_wire(comm, jnp.zeros((32, 32), jnp.float32),
+                                 jnp.zeros((ct.size,), jnp.uint8), ct)
 
 
 # ===========================================================================
