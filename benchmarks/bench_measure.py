@@ -5,18 +5,30 @@ binary, here over ALL model terms).
 Reports the reduced-grid calibration cost, the measured term values the
 model will interpolate, and the effect on selection: how often the
 measured tables flip the decision the analytic constants would make.
+
+``--telemetry-overhead`` measures the fleet layer's own cost: the
+per-call price of the :class:`repro.fleet.ExchangeTelemetry` probe
+against a pinned-decision exchange loop (the smoother's compiled deep-
+halo step), so the observability layer is held to the same standard as
+everything else it observes.  ``--assert-telemetry-overhead`` gates it
+at <2%.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_host_us
 from repro.comm.perfmodel import PerfModel, TPU_V5E
 from repro.core import BYTE, TypeRegistry, Vector
 from repro.measure import DecisionCache, calibrate_params
 
 REG = TypeRegistry()
+
+#: the probe may add at most this fraction to a pinned-decision
+#: exchange iteration (the --assert-telemetry-overhead gate)
+TELEMETRY_OVERHEAD_BUDGET = 0.02
 
 
 def run() -> None:
@@ -52,5 +64,69 @@ def run() -> None:
     emit("measure/decisions-recorded", float(len(measured.decisions)), "audit")
 
 
-if __name__ == "__main__":
+def telemetry_overhead(iters: int = 30) -> float:
+    """The probe's cost relative to one pinned-decision exchange loop
+    iteration.
+
+    The loop is the smoother's compiled deep-halo step — every strategy
+    and depth decision pinned after the first iteration — timed by the
+    probe itself (its ``mean`` is the per-iteration wall cost).  The
+    probe's own per-call price is measured directly (one dict lookup +
+    one ring write) rather than by differencing two noisy loop timings:
+    the ratio is the overhead the probe adds when every iteration is
+    observed, without the gate flapping on loop-to-loop noise.
+    """
+    from repro.comm.api import Communicator
+    from repro.fleet import ExchangeTelemetry
+    from repro.launch.smoother import run_smoother
+
+    tel = ExchangeTelemetry()
+    comm = Communicator(
+        axis_name="data", decisions=DecisionCache(), telemetry=tel
+    )
+    report = run_smoother(
+        comm, iters=iters, interior=(8, 8, 8), cycle="smooth", halo_steps=2
+    )
+    agg = tel.get(report.program.fingerprint)
+    assert agg is not None and agg.count == iters
+    t_iter = agg.mean
+    t_probe = time_host_us(
+        lambda: tel.observe(agg.key, t_iter), iters=2000
+    ) * 1e-6
+    overhead = t_probe / t_iter
+    emit("measure/telemetry/exchange-iter", t_iter * 1e6,
+         f"iters={iters};pinned={report.program.pinned}")
+    emit("measure/telemetry/probe-call", t_probe * 1e6, "observe()")
+    emit("measure/telemetry/overhead-pct", overhead * 100.0,
+         f"budget={TELEMETRY_OVERHEAD_BUDGET * 100:.0f}%")
+    return overhead
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_measure",
+                                 description=__doc__)
+    ap.add_argument("--telemetry-overhead", action="store_true",
+                    help="measure only the telemetry probe's relative "
+                         "cost (skips the calibration lifecycle rows)")
+    ap.add_argument("--assert-telemetry-overhead", action="store_true",
+                    help="exit 1 when the probe adds >= "
+                         f"{TELEMETRY_OVERHEAD_BUDGET:.0%} to a pinned-"
+                         "decision exchange iteration (implies "
+                         "--telemetry-overhead)")
+    args = ap.parse_args()
+    if args.telemetry_overhead or args.assert_telemetry_overhead:
+        overhead = telemetry_overhead()
+        if (
+            args.assert_telemetry_overhead
+            and overhead >= TELEMETRY_OVERHEAD_BUDGET
+        ):
+            raise SystemExit(
+                f"telemetry probe overhead {overhead:.2%} >= "
+                f"{TELEMETRY_OVERHEAD_BUDGET:.0%} budget"
+            )
+        return
     run()
+
+
+if __name__ == "__main__":
+    main()

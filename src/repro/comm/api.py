@@ -40,6 +40,7 @@ via :func:`policy_for_mode`).
 
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -743,6 +744,15 @@ class Communicator:
     decisions: optional :class:`repro.measure.DecisionCache` — persists
         strategy selections (fingerprint-keyed) and records the audit
         log.
+    telemetry: optional :class:`repro.fleet.ExchangeTelemetry` — the
+        runtime half of the feedback loop.  Planning entry points
+        register the model's predicted seconds per decision key
+        (host-side, safe under tracing); the *blocking* entry points
+        (:meth:`sendrecv`, :meth:`neighbor_alltoallv`) additionally
+        observe wall time — but only when running eagerly: inside a
+        ``jit``/``shard_map`` trace a timer would measure tracing, so
+        tracer arguments skip the probe and jitted workloads time their
+        compiled step from the launch layer instead.
     """
 
     def __init__(
@@ -753,12 +763,14 @@ class Communicator:
         strategies: Optional[StrategyRegistry] = None,
         policy: Optional[Policy] = None,
         decisions=None,
+        telemetry=None,
     ):
         self.axis_name = axis_name
         self.registry = registry or TypeRegistry()
         self.strategies = strategies or default_registry()
         self.model = PerfModel(params, decisions=decisions, axis=axis_name)
         self.policy = policy or ModelPolicy()
+        self.telemetry = telemetry
         self.wire_ops = 0  # collectives issued through this communicator
         self.wire_payload_bytes = 0  # exact bytes those collectives carried
 
@@ -813,6 +825,12 @@ class Communicator:
         axis = self._axis(axis_name)
         s = self.select(ct, incount, wire=True)
         seg = s.wire_segment(ct, incount)
+        if self.telemetry is not None:
+            # price through the chosen strategy directly (no decision
+            # recording — a baseline/fixed policy must not grow decision
+            # rows just because telemetry is attached)
+            est = s.plan(self.model, ct, incount)
+            self.telemetry.register(ct.fingerprint, est.total, s.name)
         payload = s.pack(buf, ct, incount)
         wire = lax.ppermute(payload, axis, list(perm))
         self.wire_ops += 1
@@ -846,9 +864,19 @@ class Communicator:
         incount: int = 1,
     ) -> jax.Array:
         """Blocking pack -> permute -> unpack; returns the updated
-        ``dst_buf``."""
+        ``dst_buf``.  With telemetry attached and eager arguments, the
+        whole blocking exchange is timed against the send type's
+        fingerprint (tracers skip the probe — a timer inside a trace
+        measures tracing, not transfer)."""
+        if self.telemetry is None or isinstance(src_buf, jax.core.Tracer):
+            req = self.isend(src_buf, send_ct, perm, axis_name, incount)
+            return self.irecv(dst_buf, recv_ct or send_ct, req).wait()
+        t0 = time.perf_counter()
         req = self.isend(src_buf, send_ct, perm, axis_name, incount)
-        return self.irecv(dst_buf, recv_ct or send_ct, req).wait()
+        out = self.irecv(dst_buf, recv_ct or send_ct, req).wait()
+        jax.block_until_ready(out)  # async dispatch would under-report
+        self.telemetry.observe(send_ct.fingerprint, time.perf_counter() - t0)
+        return out
 
     # ------------------------------------------------------------------
     # fused neighborhood alltoallv (the paper's MPI_Alltoallv halo path)
@@ -910,7 +938,11 @@ class Communicator:
             note = " priced[" + " ".join(
                 f"{k}={v:.3e}" for k, v in sorted(costs.items())
             ) + "]"
-        self.model.price_exchange(plan, note=note)
+        est = self.model.price_exchange(plan, note=note)
+        if self.telemetry is not None:
+            # trace-time half of the probe: the prediction is on file
+            # before the first observation arrives
+            self.telemetry.register(plan.fingerprint, est.total, est.strategy)
         return strats, plan
 
     def _issue_wire(
@@ -1070,10 +1102,29 @@ class Communicator:
         plan: Optional[WirePlan] = None,
         strategies: Optional[Sequence[Strategy]] = None,
     ) -> jax.Array:
-        """Blocking :meth:`ineighbor_alltoallv`."""
-        return self.ineighbor_alltoallv(
+        """Blocking :meth:`ineighbor_alltoallv`.  With telemetry
+        attached and eager arguments the fused exchange is timed against
+        the wire plan's fingerprint (the same key the decision cache
+        records the schedule choice under)."""
+        if (
+            self.telemetry is None
+            or isinstance(buf, jax.core.Tracer)
+            or len(send_cts) == 0
+        ):
+            return self.ineighbor_alltoallv(
+                buf, send_cts, recv_cts, perms, axis_name, plan, strategies
+            ).wait()
+        if plan is None:
+            strategies, plan = self.plan_neighbor(
+                send_cts, perms, strategies=strategies
+            )
+        t0 = time.perf_counter()
+        out = self.ineighbor_alltoallv(
             buf, send_cts, recv_cts, perms, axis_name, plan, strategies
         ).wait()
+        jax.block_until_ready(out)
+        self.telemetry.observe(plan.fingerprint, time.perf_counter() - t0)
+        return out
 
     # ------------------------------------------------------------------
     # collectives on datatypes
@@ -1121,6 +1172,9 @@ class Communicator:
             "strategies": len(self.strategies),
             "wire_ops": self.wire_ops,
             "wire_payload_bytes": self.wire_payload_bytes,
+            "telemetry_keys": (
+                len(self.telemetry) if self.telemetry is not None else 0
+            ),
         }
 
 

@@ -1,0 +1,70 @@
+"""Fleet layer: the engine's runtime feedback loop.
+
+PRs 1-5 built a *predictive* pipeline — canonical types are priced on
+once-measured tables and the winning strategies are pinned.  This
+package closes the loop for production fleets:
+
+* :mod:`repro.fleet.telemetry` — per-exchange observed wall time,
+  aggregated per decision key (observed vs predicted, always one
+  division away);
+* :mod:`repro.fleet.drift` — flag stale decisions, attribute the drift
+  to a model term, re-measure *only* that term's table;
+* :mod:`repro.fleet.bundle` — generation-numbered decision envelopes
+  with deterministic merge, diff, promote and rollback.
+
+``python -m repro.fleet {report,diff,merge,promote}`` is the operator
+surface; ``docs/measure.md`` ("fleet lifecycle") walks the whole
+telemetry -> drift -> re-measure -> promote cycle.
+"""
+
+from repro.fleet.bundle import (
+    BUNDLE_FORMAT,
+    CONFLICT_POLICIES,
+    DecisionBundle,
+    diff_bundles,
+    load_bundle,
+    merge_bundles,
+    promote,
+    rollback,
+)
+from repro.fleet.drift import (
+    DEFAULT_MIN_SAMPLES,
+    DEFAULT_THRESHOLD,
+    TERMS,
+    DriftDetector,
+    DriftFinding,
+    DriftReport,
+    remeasure_term,
+)
+from repro.fleet.telemetry import (
+    DEFAULT_WINDOW,
+    TELEMETRY_FILENAME,
+    TELEMETRY_FORMAT,
+    ExchangeTelemetry,
+    RingAggregate,
+    predict_program_iteration,
+)
+
+__all__ = [
+    "BUNDLE_FORMAT",
+    "CONFLICT_POLICIES",
+    "DEFAULT_MIN_SAMPLES",
+    "DEFAULT_THRESHOLD",
+    "DEFAULT_WINDOW",
+    "TELEMETRY_FILENAME",
+    "TELEMETRY_FORMAT",
+    "TERMS",
+    "DecisionBundle",
+    "DriftDetector",
+    "DriftFinding",
+    "DriftReport",
+    "ExchangeTelemetry",
+    "RingAggregate",
+    "diff_bundles",
+    "load_bundle",
+    "merge_bundles",
+    "predict_program_iteration",
+    "promote",
+    "remeasure_term",
+    "rollback",
+]

@@ -1,0 +1,444 @@
+"""Drift detection + targeted re-measurement.
+
+A pinned :class:`~repro.measure.decisions.Decision` carries the terms
+the model believed at decision time (``t_pack`` / ``t_link`` /
+``t_unpack``).  Two things can invalidate it:
+
+* the **system moved** — a JAX upgrade, a driver change, thermal
+  throttling: the stored :class:`~repro.comm.perfmodel.SystemParams`
+  tables no longer describe the machine.  Detected by comparing the
+  stored tables against a *reference* calibration (freshly measured, or
+  the CI artifact recorded minutes ago) term by term;
+* the **traffic moved** — runtime observations
+  (:class:`~repro.fleet.telemetry.ExchangeTelemetry`) diverge from the
+  recorded price beyond a threshold over a minimum sample count.
+
+Either way the response is the same and *targeted*: re-measure only the
+drifted term's table (:func:`remeasure_term` re-runs just that
+``measure.bench`` sweep), not the full calibration — the paper's
+"record once" economy survives contact with a fleet.
+
+Term attribution maps the model's cost decomposition onto the sweep
+that produced each term:
+
+====================  =======================================  ==========
+term                  decision rows it prices                   sweep
+====================  =======================================  ==========
+``wire``              ``wire/<schedule>`` exchange rows; the    ``measure_wire_table``
+                      ``t_link`` of every strategy row; the
+                      exchange half of ``program/s=N`` rows
+``pack_unpack``       ``t_pack``/``t_unpack`` of strategy rows  ``measure_pack_table`` +
+                                                                ``measure_unpack_table``
+``stencil``           the redundant-compute half of             ``measure_stencil_table``
+                      ``program/s=N`` rows
+``copy``              the contiguous-copy proxy terms           ``measure_copy_table``
+====================  =======================================  ==========
+
+The whole audit is machine-readable: :class:`DriftReport` serializes to
+JSON (CI asserts well-formedness and gates on ``drifted_count == 0``),
+and ``python -m repro.fleet report`` renders it next to the telemetry
+table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.comm.perfmodel import PerfModel, SystemParams
+from repro.fleet.telemetry import ExchangeTelemetry
+
+__all__ = [
+    "DRIFT_FORMAT",
+    "TERMS",
+    "DEFAULT_THRESHOLD",
+    "DEFAULT_MIN_SAMPLES",
+    "DriftFinding",
+    "DriftReport",
+    "DriftDetector",
+    "remeasure_term",
+]
+
+#: bump when the persisted DriftReport schema changes incompatibly
+DRIFT_FORMAT = 1
+
+#: the model terms a drift can be attributed to, each owning exactly one
+#: calibration sweep (see module docstring table)
+TERMS: Tuple[str, ...] = ("wire", "pack_unpack", "stencil", "copy")
+
+#: flag when stored/reference (or observed/predicted) diverge beyond
+#: this factor in either direction — generous because CPU-runner sweeps
+#: are noisy; a fleet with stable hardware should tighten it
+DEFAULT_THRESHOLD = 5.0
+
+#: runtime findings need at least this many window samples: one slow
+#: exchange is an outlier, a windowful is drift
+DEFAULT_MIN_SAMPLES = 8
+
+
+@dataclass(frozen=True)
+class DriftFinding:
+    """One decision row's drift verdict."""
+
+    fingerprint: str
+    strategy: str
+    term: str            # attributed term ("" when nothing diverges)
+    ratio: float         # stored/reference price ratio for that term
+    drifted: bool
+    source: str          # "params" (table audit) or "telemetry" (runtime)
+    recorded_total: float = 0.0   # the Decision's recorded price (sec)
+    repriced_total: float = 0.0   # same decision priced on the reference
+    observed_mean: float = 0.0    # runtime mean (telemetry joins only)
+    observed_ratio: float = 0.0   # observed/predicted (0 = no telemetry)
+    samples: int = 0
+    signature: str = ""
+
+
+@dataclass
+class DriftReport:
+    """Machine-readable audit result: per-term table ratios + per-row
+    findings.  ``drifted_count == 0`` is the CI gate."""
+
+    system: str
+    threshold: float
+    min_samples: int
+    term_ratios: Dict[str, float] = field(default_factory=dict)
+    findings: Tuple[DriftFinding, ...] = ()
+
+    @property
+    def drifted(self) -> Tuple[DriftFinding, ...]:
+        return tuple(f for f in self.findings if f.drifted)
+
+    @property
+    def drifted_count(self) -> int:
+        return len(self.drifted)
+
+    @property
+    def drifted_terms(self) -> Tuple[str, ...]:
+        """The distinct attributed terms, sorted — what
+        :func:`remeasure_term` should be pointed at."""
+        return tuple(sorted({f.term for f in self.drifted if f.term}))
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "format": DRIFT_FORMAT,
+                "system": self.system,
+                "threshold": self.threshold,
+                "min_samples": self.min_samples,
+                "term_ratios": dict(sorted(self.term_ratios.items())),
+                "findings": [dataclasses.asdict(f) for f in self.findings],
+            },
+            indent=2,
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "DriftReport":
+        d = json.loads(s)
+        if d.get("format") != DRIFT_FORMAT:
+            raise ValueError(
+                f"drift report format {d.get('format')!r} != {DRIFT_FORMAT}"
+            )
+        return DriftReport(
+            system=d.get("system", ""),
+            threshold=float(d["threshold"]),
+            min_samples=int(d["min_samples"]),
+            term_ratios=dict(d.get("term_ratios", {})),
+            findings=tuple(
+                DriftFinding(**row) for row in d.get("findings", ())
+            ),
+        )
+
+    def save(self, path: Union[str, Path]) -> Path:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json())
+        return p
+
+    def summary(self) -> str:
+        lines = [
+            f"drift audit: {len(self.findings)} decisions, "
+            f"{self.drifted_count} drifted "
+            f"(threshold x{self.threshold:g}, min_samples "
+            f"{self.min_samples})"
+        ]
+        for t in TERMS:
+            if t in self.term_ratios:
+                lines.append(
+                    f"  term {t:12s} stored/reference = "
+                    f"{self.term_ratios[t]:.3f}"
+                )
+        for f in self.findings:
+            mark = "DRIFT" if f.drifted else "ok"
+            obs = (
+                f" observed/pred={f.observed_ratio:.2f} (n={f.samples})"
+                if f.samples else ""
+            )
+            lines.append(
+                f"  [{mark:5s}] {f.fingerprint:16s} {f.strategy:14s} "
+                f"term={f.term or '-':11s} ratio={f.ratio:.3f} "
+                f"source={f.source}{obs}"
+            )
+        return "\n".join(lines)
+
+
+def _geomean_ratio(pairs: Sequence[Tuple[float, float]]) -> Optional[float]:
+    """Geometric mean of a/b over positive pairs (None when empty) —
+    robust to the odd noisy grid point in a way an arithmetic mean of
+    ratios is not."""
+    logs = [
+        math.log(a / b) for a, b in pairs if a > 0.0 and b > 0.0
+    ]
+    if not logs:
+        return None
+    return math.exp(sum(logs) / len(logs))
+
+
+def _table1d_ratio(stored, reference) -> Optional[float]:
+    """stored/reference ratio of two (log2_x, sec) tables, compared by
+    interpolating the stored table at the reference's grid points."""
+    if not stored or not reference:
+        return None
+    from repro.comm.perfmodel import _Interp1D
+
+    interp = _Interp1D(tuple(tuple(r) for r in stored))
+    return _geomean_ratio([(interp(x), sec) for x, sec in reference])
+
+
+def _table2d_ratio(stored, reference) -> Optional[float]:
+    """Same, for (log2_a, log2_b, sec) tables."""
+    if not stored or not reference:
+        return None
+    from repro.comm.perfmodel import _Interp2D
+
+    interp = _Interp2D(tuple(tuple(r) for r in stored))
+    return _geomean_ratio([(interp(x, y), sec) for x, y, sec in reference])
+
+
+def _strategy_tables_ratio(stored, reference) -> Optional[float]:
+    """stored/reference over the per-strategy 2D tables they share."""
+    if not stored or not reference:
+        return None
+    ratios = []
+    for name in sorted(set(stored) & set(reference)):
+        r = _table2d_ratio(stored[name], reference[name])
+        if r is not None:
+            ratios.append((r, 1.0))
+    return _geomean_ratio(ratios)
+
+
+def _terms_of(strategy: str) -> Tuple[str, ...]:
+    """Which model terms a decision row's price is built from, in
+    attribution priority order."""
+    if strategy.startswith("wire/"):
+        return ("wire",)
+    if strategy.startswith("program/s="):
+        # t_link slot holds the exchange, t_pack slot the redundant
+        # stencil compute (see build_halo_program's record call)
+        return ("wire", "stencil", "copy")
+    return ("pack_unpack", "wire")
+
+
+class DriftDetector:
+    """Compare what the engine believes against a reference (and the
+    runtime), flag divergent decisions, attribute each to a term."""
+
+    def __init__(
+        self,
+        threshold: float = DEFAULT_THRESHOLD,
+        min_samples: int = DEFAULT_MIN_SAMPLES,
+    ):
+        if threshold <= 1.0:
+            raise ValueError(f"threshold must be > 1, got {threshold}")
+        self.threshold = float(threshold)
+        self.min_samples = int(min_samples)
+
+    # -- table-level comparison ------------------------------------------
+    def term_ratios(
+        self, params: SystemParams, reference: SystemParams
+    ) -> Dict[str, float]:
+        """stored/reference price ratio per term, from the term's own
+        calibration table (absent tables are skipped, not guessed)."""
+        out: Dict[str, float] = {}
+        r = _table1d_ratio(params.wire_table, reference.wire_table)
+        if r is not None:
+            out["wire"] = r
+        pack = _strategy_tables_ratio(params.pack_table, reference.pack_table)
+        unpack = _strategy_tables_ratio(
+            params.unpack_table, reference.unpack_table
+        )
+        pu = _geomean_ratio(
+            [(v, 1.0) for v in (pack, unpack) if v is not None]
+        )
+        if pu is not None:
+            out["pack_unpack"] = pu
+        r = _table2d_ratio(params.stencil_table, reference.stencil_table)
+        if r is not None:
+            out["stencil"] = r
+        r = _table1d_ratio(params.copy_table, reference.copy_table)
+        if r is not None:
+            out["copy"] = r
+        return out
+
+    def _out_of_band(self, ratio: float) -> bool:
+        return ratio > self.threshold or ratio < 1.0 / self.threshold
+
+    # -- the audit -------------------------------------------------------
+    def audit(
+        self,
+        decisions,
+        params: SystemParams,
+        reference: Optional[SystemParams] = None,
+        telemetry: Optional[ExchangeTelemetry] = None,
+        system: str = "",
+    ) -> DriftReport:
+        """One finding per decision row.
+
+        With ``reference``: each row's terms are checked against the
+        reference tables; a row drifts when a term it prices is out of
+        band, attributed to the *worst* such term.  The ``wire`` term is
+        additionally re-priced point-wise at the row's exact
+        ``wire_bytes`` (more honest than the table-mean for a row living
+        at one message size).  With ``telemetry``: rows whose
+        observed/predicted ratio is out of band over ``min_samples``
+        drift too — attributed through the reference when one is given,
+        else left unattributed (``term=""``; re-measure everything or
+        bring a reference).
+        """
+        ratios = (
+            self.term_ratios(params, reference) if reference is not None
+            else {}
+        )
+        model = PerfModel(params)
+        ref_model = PerfModel(reference) if reference is not None else None
+        findings: List[DriftFinding] = []
+        for d in decisions.log:
+            terms = _terms_of(d.strategy)
+            # per-row term ratios: start from the table-level numbers,
+            # refine "wire" at the row's own byte count
+            row_ratios: Dict[str, float] = {
+                t: ratios[t] for t in terms if t in ratios
+            }
+            if (
+                ref_model is not None
+                and "wire" in terms
+                and d.wire_bytes > 0
+            ):
+                hops = max(d.hops, 1)
+                stored_link = model.t_link(d.wire_bytes, hops)
+                ref_link = ref_model.t_link(d.wire_bytes, hops)
+                if stored_link > 0 and ref_link > 0:
+                    row_ratios["wire"] = stored_link / ref_link
+            # re-price the recorded total term by term: each recorded
+            # slot divided by its stored/reference ratio (strategy class
+            # determines which slot belongs to which term — program rows
+            # keep redundant stencil compute in t_pack, see _terms_of)
+            per_term = {
+                "wire": d.t_link,
+                "pack_unpack": d.t_pack + d.t_unpack,
+                "stencil": d.t_pack if "stencil" in terms else 0.0,
+                "copy": 0.0,
+            }
+            if "stencil" in terms:
+                per_term["pack_unpack"] = 0.0
+            repriced = sum(
+                per_term.get(t, 0.0) / row_ratios.get(t, 1.0) for t in terms
+            )
+            worst_term, worst = "", 1.0
+            for t, r in row_ratios.items():
+                if abs(math.log(r)) > abs(math.log(worst)):
+                    worst_term, worst = t, r
+            drifted = bool(worst_term) and self._out_of_band(worst)
+            source = "params"
+
+            obs_mean = obs_ratio = 0.0
+            samples = 0
+            agg = telemetry.get(d.fingerprint) if telemetry is not None else None
+            if agg is not None:
+                obs_mean = agg.mean
+                samples = agg.count
+                r = agg.ratio
+                if r is not None:
+                    obs_ratio = r
+                    if samples >= self.min_samples and self._out_of_band(r):
+                        if not drifted:
+                            source = "telemetry"
+                        drifted = True
+            findings.append(
+                DriftFinding(
+                    fingerprint=d.fingerprint,
+                    strategy=d.strategy,
+                    term=worst_term if self._out_of_band(worst) else "",
+                    ratio=worst,
+                    drifted=drifted,
+                    source=source,
+                    recorded_total=d.total,
+                    repriced_total=repriced,
+                    observed_mean=obs_mean,
+                    observed_ratio=obs_ratio,
+                    samples=samples,
+                    signature=d.signature,
+                )
+            )
+        return DriftReport(
+            system=system,
+            threshold=self.threshold,
+            min_samples=self.min_samples,
+            term_ratios=ratios,
+            findings=tuple(findings),
+        )
+
+
+def remeasure_term(
+    params: SystemParams,
+    term: str,
+    reduced: bool = True,
+    iters: Optional[int] = None,
+    measured: Optional[dict] = None,
+) -> SystemParams:
+    """Targeted re-measurement: re-run ONLY the drifted term's sweep and
+    splice the fresh table into ``params``, leaving every other measured
+    term untouched — the surgical response a :class:`DriftReport`
+    prescribes (a full ``calibrate_params`` re-run would throw away
+    every still-valid table with it).
+
+    ``measured`` injects pre-computed sweep output keyed by the
+    SystemParams field names (tests and offline replays); by default the
+    sweep runs on the live backend via ``repro.measure.bench``.
+    """
+    if term not in TERMS:
+        raise ValueError(f"unknown term {term!r}; expected one of {TERMS}")
+    from repro.measure import bench
+
+    totals = bench.REDUCED_TOTAL_BYTES if reduced else bench.TOTAL_BYTES
+    blocks = bench.REDUCED_BLOCK_BYTES if reduced else bench.BLOCK_BYTES
+    radii = bench.REDUCED_STENCIL_RADII if reduced else bench.STENCIL_RADII
+    it = iters if iters is not None else (2 if reduced else 5)
+
+    updates: Dict[str, object] = {}
+    if measured is not None:
+        updates = dict(measured)
+    elif term == "wire":
+        rows = bench.measure_wire_table(totals, iters=it)
+        lat, bw = bench.fit_latency_bandwidth(rows)
+        updates = {
+            "wire_table": tuple(rows), "wire_latency": lat, "wire_bw": bw,
+        }
+    elif term == "pack_unpack":
+        pack = bench.measure_pack_table(None, blocks, totals, iters=it)
+        unpack = bench.measure_unpack_table(None, blocks, totals, iters=it)
+        updates = {
+            "pack_table": {k: tuple(v) for k, v in pack.items() if v},
+            "unpack_table": {k: tuple(v) for k, v in unpack.items() if v},
+        }
+    elif term == "stencil":
+        rows = bench.measure_stencil_table(radii, totals, iters=it)
+        updates = {"stencil_table": tuple(rows)}
+    elif term == "copy":
+        rows = bench.measure_copy_table(totals, iters=it)
+        updates = {"copy_table": tuple(rows)}
+    return dataclasses.replace(params, **updates)

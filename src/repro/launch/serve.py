@@ -142,6 +142,14 @@ def main() -> None:
     ap.add_argument("--smoother-cycle", default="smooth",
                     help="op cycle the smoother fuses (see "
                          "repro.launch.smoother.CYCLES)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach the runtime exchange probe "
+                         "(repro.fleet): observed-vs-predicted wall time "
+                         "per decision key, persisted to telemetry.json "
+                         "in the measure store on save")
+    ap.add_argument("--drift-report", default=None, metavar="FILE",
+                    help="write a repro.fleet DriftReport JSON after the "
+                         "run (implies --telemetry)")
     args = ap.parse_args()
 
     from repro.halo.program import parse_halo_steps, set_default_halo_steps
@@ -150,11 +158,13 @@ def main() -> None:
 
     cfg = get_config(args.arch) if args.scale == "full" else smoke_config(args.arch)
     comm = save_decisions = None
+    want_telemetry = bool(args.telemetry or args.drift_report)
     if not args.no_comm_cache:
         from repro.measure.production import production_communicator
 
         comm, save_decisions = production_communicator(
-            args.comm_cache, halo_steps=halo_steps
+            args.comm_cache, halo_steps=halo_steps,
+            telemetry=want_telemetry or None,
         )
         dc = comm.model.decisions
         print(f"comm: params={comm.model.params.name} "
@@ -194,6 +204,16 @@ def main() -> None:
     if save_decisions is not None:
         path = save_decisions()
         print(f"comm: decisions -> {path}")
+    if comm is not None and want_telemetry:
+        print(comm.telemetry.report())
+        if args.drift_report:
+            from repro.fleet.drift import DriftDetector
+
+            drift = DriftDetector().audit(
+                comm.model.decisions, comm.model.params,
+                telemetry=comm.telemetry, system="serve",
+            )
+            print(f"drift report -> {drift.save(args.drift_report)}")
 
 
 if __name__ == "__main__":

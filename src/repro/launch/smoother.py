@@ -126,8 +126,33 @@ def run_smoother(
         size=(R, nz, ny, nx)
     ).astype(np.float32)
     x = jnp.asarray(state.reshape(R * az, ay, ax))
-    for _ in range(iters):
-        x = step(x)
+    telemetry = getattr(comm, "telemetry", None)
+    if telemetry is None:
+        for _ in range(iters):
+            x = step(x)
+    else:
+        # telemetry: the program runs jitted, so the Communicator's
+        # eager probe never fires — time the compiled step here instead.
+        # AOT-compile first so compile time never pollutes the samples,
+        # and block each iteration (async dispatch would under-report).
+        import time
+
+        from repro.fleet.telemetry import predict_program_iteration
+
+        predicted = predict_program_iteration(program, comm.model)
+        telemetry.register(
+            program.fingerprint, predicted, f"program/s={program.steps}"
+        )
+        try:
+            run = step.lower(x).compile()
+        except AttributeError:  # not a jit-wrapped callable
+            run = step
+        jax.block_until_ready(x)
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            x = run(x)
+            jax.block_until_ready(x)
+            telemetry.observe(program.fingerprint, time.perf_counter() - t0)
     out = np.asarray(x).reshape(R, az, ay, ax)
     checksum = float(
         out[:, rz:rz + nz, ry:ry + ny, rx:rx + nx].sum()
@@ -164,14 +189,32 @@ def main() -> None:
                     help="exit 1 unless a program/s=N decision row was "
                          "recorded (or pinned) for this program — the "
                          "CI gate on the end-to-end --halo-steps seam")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach the runtime exchange probe: per-"
+                         "iteration wall time vs the model's prediction, "
+                         "persisted to telemetry.json in the store "
+                         "(render with `python -m repro.fleet report`)")
+    ap.add_argument("--drift-report", default=None, metavar="FILE",
+                    help="write a DriftReport JSON after the run "
+                         "(implies --telemetry)")
+    ap.add_argument("--drift-reference", default=None, metavar="ENVELOPE",
+                    help="reference params envelope for the drift audit "
+                         "(default: self-audit on telemetry only)")
+    ap.add_argument("--assert-no-drift", action="store_true",
+                    help="exit 1 when the drift audit flags any decision "
+                         "— the CI drift gate")
     args = ap.parse_args()
 
     from repro.halo.program import parse_halo_steps
     from repro.measure.production import production_communicator
 
     halo_steps = parse_halo_steps(args.halo_steps)
+    want_telemetry = bool(
+        args.telemetry or args.drift_report or args.assert_no_drift
+    )
     comm, save_decisions = production_communicator(
-        args.comm_cache, axis_name="data", halo_steps=halo_steps
+        args.comm_cache, axis_name="data", halo_steps=halo_steps,
+        telemetry=want_telemetry or None,
     )
     n = args.interior
     report = run_smoother(comm, iters=args.iters, interior=(n, n, n),
@@ -182,6 +225,32 @@ def main() -> None:
         print(f"decision: {d.strategy} fp={d.fingerprint} {d.signature}")
     path = save_decisions()
     print(f"decisions -> {path}")
+    if want_telemetry:
+        print(comm.telemetry.report())
+    if args.drift_report or args.assert_no_drift:
+        from repro.fleet.drift import DriftDetector
+        from repro.measure.store import ParamsStore
+
+        reference = (
+            ParamsStore.read_envelope(args.drift_reference)
+            if args.drift_reference else None
+        )
+        if args.drift_reference and reference is None:
+            raise SystemExit(
+                f"unreadable reference envelope {args.drift_reference}"
+            )
+        drift = DriftDetector().audit(
+            comm.model.decisions, comm.model.params,
+            reference=reference, telemetry=comm.telemetry,
+            system="smoother",
+        )
+        print(drift.summary())
+        if args.drift_report:
+            print(f"drift report -> {drift.save(args.drift_report)}")
+        if args.assert_no_drift and drift.drifted_count:
+            raise SystemExit(
+                f"DRIFT: {drift.drifted_count} decision(s) out of band"
+            )
     if args.assert_decision:
         ok = report.decision_recorded or report.program.pinned
         if not ok:

@@ -76,13 +76,24 @@ class DecisionCache:
     def __init__(self, decisions: Optional[List[Decision]] = None):
         self._by_key: Dict[Key, Decision] = {}
         self.log: List[Decision] = []      # insertion-ordered audit trail
+        self._log_index: Dict[Key, int] = {}  # key -> position in the log
         self.pinned_hits = 0               # lookups served from the cache
         for d in decisions or ():
             self._insert(d)
 
     def _insert(self, d: Decision) -> None:
-        self._by_key[d.key] = d
-        self.log.append(d)
+        # last-wins per key, stable order: re-recording an existing key
+        # replaces its row in place instead of appending a duplicate —
+        # otherwise every record -> save -> load -> record cycle would
+        # compound duplicate rows in the persisted audit log
+        k = d.key
+        at = self._log_index.get(k)
+        if at is None:
+            self._log_index[k] = len(self.log)
+            self.log.append(d)
+        else:
+            self.log[at] = d
+        self._by_key[k] = d
 
     # -- model-facing ----------------------------------------------------
     def lookup(

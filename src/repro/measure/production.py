@@ -11,6 +11,13 @@ through this module.
     comm, save = production_communicator(axis_name="data")
     ... run the job; every datatype exchange goes through `comm` ...
     save()          # persist the (possibly grown) decision file
+
+With ``telemetry=True`` the communicator also carries an
+:class:`~repro.fleet.telemetry.ExchangeTelemetry` probe whose
+aggregates persist to ``telemetry.json`` next to the decisions file on
+``save()`` — the observation side of the fleet feedback loop
+(``python -m repro.fleet report`` renders it; ``repro.fleet.drift``
+audits it).
 """
 
 from __future__ import annotations
@@ -37,6 +44,7 @@ def production_communicator(
     reduced: Optional[bool] = None,
     params: Optional[SystemParams] = None,
     halo_steps: Optional[Union[int, str]] = None,
+    telemetry: Union[bool, "object", None] = None,
 ) -> Tuple[Communicator, Callable[[], Path]]:
     """A :class:`Communicator` wired for production reuse.
 
@@ -60,6 +68,12 @@ def production_communicator(
         :func:`~repro.halo.program.build_halo_program` the job runs
         resolves its depth through this seam and the choice lands in
         the same persisted decisions file.
+    telemetry: ``True`` loads (or starts) the store's runtime telemetry
+        (``telemetry.json``, persisted by ``save()`` alongside the
+        decisions); an explicit
+        :class:`~repro.fleet.telemetry.ExchangeTelemetry` instance is
+        attached as-is (the caller owns persistence); ``None``/``False``
+        attaches no probe.
 
     Returns ``(comm, save)``: call ``save()`` after the job to persist
     the decision cache — the file that lets the next run skip the model.
@@ -80,9 +94,22 @@ def production_communicator(
             params = store.load() or TPU_V5E
     decisions_path = store.root / DECISIONS_FILENAME
     decisions = DecisionCache.load(decisions_path)
-    comm = Communicator(axis_name=axis_name, params=params, decisions=decisions)
+    tel = None
+    tel_path = None
+    if telemetry is True:
+        from repro.fleet.telemetry import TELEMETRY_FILENAME, ExchangeTelemetry
+
+        tel_path = store.root / TELEMETRY_FILENAME
+        tel = ExchangeTelemetry.load(tel_path)
+    elif telemetry:  # an ExchangeTelemetry (or compatible) instance
+        tel = telemetry
+    comm = Communicator(
+        axis_name=axis_name, params=params, decisions=decisions, telemetry=tel
+    )
 
     def save() -> Path:
+        if tel_path is not None:
+            tel.save(tel_path)
         return decisions.save(decisions_path)
 
     return comm, save

@@ -51,9 +51,13 @@ STORE_FORMAT = 4
 #: formats this reader still understands: format 2 predates the
 #: per-axis wire tables (``wire_tables`` / ``wire_fits``), format 3 the
 #: stencil-application sweep (``stencil_table``) — all optional fields,
-#: so older envelopes (e.g. the checked-in ``ci_params.json``) load
-#: unchanged with those fields absent (the model then falls back to the
-#: contiguous-copy proxy for the redundant-compute term)
+#: so older envelopes load unchanged with those fields absent (the
+#: model then falls back to the contiguous-copy proxy for the
+#: redundant-compute term).  The checked-in ``ci_params.json`` is
+#: recorded at the current format (stencil sweep included, so CI's
+#: ``price_program`` oracles pin through measured stencil times);
+#: format-2/3 loading stays covered by synthetic envelopes in
+#: ``tests/test_measure.py``
 COMPATIBLE_FORMATS = (2, 3, STORE_FORMAT)
 
 _ENV_ROOT = "REPRO_MEASURE_DIR"

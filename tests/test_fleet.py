@@ -1,0 +1,540 @@
+"""Fleet layer: telemetry aggregates, drift detection + targeted
+re-measurement, and decision-bundle rollout semantics."""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.comm.perfmodel import SystemParams, TPU_V5E
+from repro.fleet import (
+    BUNDLE_FORMAT,
+    CONFLICT_POLICIES,
+    DecisionBundle,
+    DriftDetector,
+    DriftReport,
+    ExchangeTelemetry,
+    RingAggregate,
+    diff_bundles,
+    load_bundle,
+    merge_bundles,
+    promote,
+    remeasure_term,
+    rollback,
+)
+from repro.fleet.drift import TERMS
+from repro.measure.decisions import Decision, DecisionCache
+
+from _subproc import run_with_devices
+
+
+# ===========================================================================
+# telemetry
+# ===========================================================================
+
+class TestRingAggregate:
+    def test_window_is_bounded_but_lifetime_count_is_not(self):
+        agg = RingAggregate("k", predicted=1e-4, capacity=4)
+        for i in range(10):
+            agg.observe(float(i))
+        assert agg.count == 4          # window holds the newest 4
+        assert agg.total_count == 10   # lifetime tally keeps going
+        # ring overwrote 0..5; the window is {6,7,8,9} in some order
+        assert agg.mean == pytest.approx((6 + 7 + 8 + 9) / 4)
+
+    def test_p95_is_window_order_statistic(self):
+        agg = RingAggregate("k", capacity=100)
+        for i in range(100):
+            agg.observe(float(i))
+        assert agg.p95 == 94.0
+
+    def test_ratio_needs_prediction_and_samples(self):
+        agg = RingAggregate("k", predicted=0.0)
+        assert agg.ratio is None       # no prediction
+        agg.predicted = 2.0
+        assert agg.ratio is None       # no samples
+        agg.observe(3.0)
+        assert agg.ratio == pytest.approx(1.5)
+
+
+class TestExchangeTelemetry:
+    def test_register_then_observe_joins_by_key(self):
+        tel = ExchangeTelemetry()
+        tel.register("fp", 1e-4, "wire/grouped")
+        tel.observe("fp", 2e-4)
+        agg = tel.get("fp")
+        assert agg.strategy == "wire/grouped"
+        assert agg.ratio == pytest.approx(2.0)
+        # re-registering updates the prediction without dropping samples
+        tel.register("fp", 4e-4)
+        assert tel.get("fp").count == 1
+        assert tel.get("fp").ratio == pytest.approx(0.5)
+
+    def test_save_load_round_trip(self, tmp_path):
+        tel = ExchangeTelemetry(capacity=8)
+        tel.register("a", 1e-5, "rows")
+        for _ in range(3):
+            tel.observe("a", 2e-5)
+        tel.observe("b", 5e-5)
+        p = tel.save(tmp_path / "telemetry.json")
+        back = ExchangeTelemetry.load(p)
+        assert len(back) == 2
+        assert back.get("a").count == 3
+        assert back.get("a").ratio == pytest.approx(2.0)
+        assert back.get("a").strategy == "rows"
+        # absent file -> empty registry (cold start)
+        assert len(ExchangeTelemetry.load(tmp_path / "nope.json")) == 0
+
+    def test_format_mismatch_refused(self, tmp_path):
+        p = tmp_path / "telemetry.json"
+        p.write_text(json.dumps({"format": 999, "aggregates": []}))
+        with pytest.raises(ValueError, match="format"):
+            ExchangeTelemetry.load(p)
+
+    def test_report_shows_observed_vs_predicted(self):
+        tel = ExchangeTelemetry()
+        tel.register("deadbeef", 1e-4, "program/s=2")
+        tel.observe("deadbeef", 1.2e-4)
+        rep = tel.report()
+        assert "obs/pred" in rep and "deadbeef" in rep
+        assert "1.200" in rep
+
+    def test_timed_context_observes(self):
+        tel = ExchangeTelemetry()
+        with tel.timed("k", predicted=1.0):
+            pass
+        assert tel.get("k").count == 1
+        assert tel.get("k").mean >= 0.0
+
+
+def test_communicator_eager_sendrecv_feeds_telemetry(monkeypatch):
+    # an eager (non-traced) blocking exchange is timed; the key is the
+    # committed type's content fingerprint, and a prediction is on file
+    # from the isend planning half.  JAX has no eager evaluation rule
+    # for collectives, so the wire op is stubbed to a self-send — the
+    # pack/unpack halves and the probe run for real.
+    import jax.numpy as jnp
+
+    from repro.comm import api
+    from repro.core import BYTE, Vector
+
+    monkeypatch.setattr(api.lax, "ppermute", lambda x, axis, perm: x)
+    tel = ExchangeTelemetry()
+    comm = api.Communicator(axis_name="x", telemetry=tel)
+    ct = comm.commit(Vector(4, 8, 16, BYTE))
+    buf = jnp.arange(ct.extent, dtype=jnp.uint8)
+    out = comm.sendrecv(buf, jnp.zeros_like(buf), ct, [(0, 0)])
+    assert out.shape == buf.shape
+    agg = tel.get(ct.fingerprint)
+    assert agg is not None and agg.count == 1
+    assert agg.predicted > 0.0
+    assert comm.stats()["telemetry_keys"] >= 1
+
+
+def test_communicator_plan_neighbor_registers_prediction():
+    # the trace-time half: planning a fused exchange puts the wire
+    # plan's predicted seconds on file under the plan fingerprint
+    from repro.comm.api import Communicator
+    from repro.core import BYTE, Vector
+
+    tel = ExchangeTelemetry()
+    comm = Communicator(axis_name="x", telemetry=tel,
+                        decisions=DecisionCache())
+    ct = comm.commit(Vector(4, 8, 16, BYTE))
+    _, plan = comm.plan_neighbor([ct], [((0, 0),)])
+    agg = tel.get(plan.fingerprint)
+    assert agg is not None
+    assert agg.predicted > 0.0
+    assert agg.strategy.startswith("wire/")
+    # the same key exists in the decision cache: telemetry rows join
+    # decision rows by fingerprint
+    assert any(
+        d.fingerprint == plan.fingerprint for d in comm.model.decisions.log
+    )
+
+
+# ===========================================================================
+# drift
+# ===========================================================================
+
+def _reference_params() -> SystemParams:
+    return dataclasses.replace(
+        TPU_V5E,
+        name="ref",
+        wire_table=((10.0, 1e-5), (14.0, 2e-5), (18.0, 9e-5)),
+        stencil_table=((2.58, 10.0, 5e-6), (2.58, 14.0, 2e-5)),
+        copy_table=((10.0, 1e-6), (14.0, 4e-6)),
+        pack_table={"rows": ((3.0, 10.0, 2e-6), (3.0, 14.0, 8e-6))},
+        unpack_table={"rows": ((3.0, 10.0, 3e-6), (3.0, 14.0, 9e-6))},
+    )
+
+
+def _decisions() -> DecisionCache:
+    return DecisionCache([
+        Decision("wplan1", 2, 3, True, "wire/grouped", 0.0, 3e-4, 0.0,
+                 "exchange", 4096),
+        Decision("prog1", 0, 1, True, "program/s=2", 1e-5, 3e-5, 0.0,
+                 "deep halo", 2048),
+        Decision("ct1", 1, 1, True, "rows", 2e-6, 1e-5, 3e-6, "vec", 1024),
+    ])
+
+
+class TestDriftDetector:
+    def test_identical_params_no_drift(self):
+        ref = _reference_params()
+        rep = DriftDetector(threshold=2.0).audit(
+            _decisions(), ref, reference=ref
+        )
+        assert rep.drifted_count == 0
+        assert all(r == pytest.approx(1.0) for r in rep.term_ratios.values())
+
+    def test_perturbed_wire_flags_exactly_the_wire_term(self):
+        ref = _reference_params()
+        live = dataclasses.replace(
+            ref, wire_table=tuple((x, 10 * s) for x, s in ref.wire_table)
+        )
+        rep = DriftDetector(threshold=3.0).audit(
+            _decisions(), live, reference=ref
+        )
+        # every strategy class prices through the wire -> all drift,
+        # all attributed to the wire term
+        assert rep.drifted_count == 3
+        assert rep.drifted_terms == ("wire",)
+
+    def test_perturbed_stencil_flags_only_the_program_row(self):
+        ref = _reference_params()
+        live = dataclasses.replace(
+            ref,
+            stencil_table=tuple(
+                (a, b, 8 * s) for a, b, s in ref.stencil_table
+            ),
+        )
+        rep = DriftDetector(threshold=3.0).audit(
+            _decisions(), live, reference=ref
+        )
+        assert [(f.strategy, f.term) for f in rep.drifted] == [
+            ("program/s=2", "stencil")
+        ]
+
+    def test_perturbed_pack_flags_only_the_strategy_row(self):
+        ref = _reference_params()
+        live = dataclasses.replace(
+            ref,
+            pack_table={
+                "rows": tuple((a, b, 20 * s) for a, b, s in
+                              ref.pack_table["rows"])
+            },
+        )
+        rep = DriftDetector(threshold=3.0).audit(
+            _decisions(), live, reference=ref
+        )
+        assert [(f.strategy, f.term) for f in rep.drifted] == [
+            ("rows", "pack_unpack")
+        ]
+
+    def test_targeted_remeasure_clears_the_flag(self):
+        ref = _reference_params()
+        live = dataclasses.replace(
+            ref, wire_table=tuple((x, 10 * s) for x, s in ref.wire_table)
+        )
+        det = DriftDetector(threshold=3.0)
+        assert det.audit(_decisions(), live, reference=ref).drifted_count == 3
+        fixed = remeasure_term(
+            live, "wire", measured={"wire_table": ref.wire_table}
+        )
+        assert det.audit(_decisions(), fixed, reference=ref).drifted_count == 0
+        # ...and only the wire table moved
+        assert fixed.stencil_table == live.stencil_table
+        assert fixed.pack_table == live.pack_table
+
+    def test_remeasure_rejects_unknown_term(self):
+        with pytest.raises(ValueError, match="unknown term"):
+            remeasure_term(_reference_params(), "latency")
+        assert set(TERMS) == {"wire", "pack_unpack", "stencil", "copy"}
+
+    def test_telemetry_drift_needs_min_samples(self):
+        ref = _reference_params()
+        tel = ExchangeTelemetry()
+        dc = _decisions()
+        tel.register("ct1", dc.log[2].total, "rows")
+        det = DriftDetector(threshold=3.0, min_samples=4)
+        for _ in range(3):
+            tel.observe("ct1", 100 * dc.log[2].total)
+        rep = det.audit(dc, ref, reference=ref, telemetry=tel)
+        assert rep.drifted_count == 0  # 3 < min_samples: outliers, not drift
+        tel.observe("ct1", 100 * dc.log[2].total)
+        rep = det.audit(dc, ref, reference=ref, telemetry=tel)
+        drifted = rep.drifted
+        assert len(drifted) == 1
+        assert drifted[0].fingerprint == "ct1"
+        assert drifted[0].source == "telemetry"
+        assert drifted[0].samples == 4
+
+    def test_report_json_round_trips(self):
+        ref = _reference_params()
+        live = dataclasses.replace(
+            ref, wire_table=tuple((x, 10 * s) for x, s in ref.wire_table)
+        )
+        rep = DriftDetector(threshold=3.0).audit(
+            _decisions(), live, reference=ref, system="t"
+        )
+        back = DriftReport.from_json(rep.to_json())
+        assert back.to_json() == rep.to_json()
+        assert back.drifted_count == rep.drifted_count
+
+    def test_threshold_must_exceed_one(self):
+        with pytest.raises(ValueError):
+            DriftDetector(threshold=1.0)
+
+
+def test_predict_program_iteration_includes_interior_compute():
+    # the launch-layer prediction = the model's exchange+redundant
+    # estimate plus the interior stencil compute price_program excludes
+    from repro.comm.api import Communicator
+    from repro.fleet import predict_program_iteration
+    from repro.halo.program import build_halo_program
+
+    comm = Communicator(axis_name="data", decisions=DecisionCache())
+    program = build_halo_program((1, 1, 1), (8, 8, 8), comm, steps=2)
+    t = predict_program_iteration(program, comm.model)
+    assert t > program.estimate.total
+
+
+# ===========================================================================
+# bundles
+# ===========================================================================
+
+def _row(fp, strategy="rows", total=1e-5, hops=1):
+    return Decision(fp, 1, hops, True, strategy, total / 2, total / 4,
+                    total / 4, f"sig-{fp}", 64)
+
+
+class TestBundleEnvelope:
+    def test_json_round_trip_and_canonical_order(self):
+        b = DecisionBundle(
+            DecisionCache([_row("b"), _row("a")]),
+            generation=3, system="sysfp", host="h1",
+        )
+        back = DecisionBundle.from_json(b.to_json())
+        assert back.generation == 3 and back.system == "sysfp"
+        assert len(back.decisions) == 2
+        # canonical: rows key-sorted regardless of recording order
+        b2 = DecisionBundle(
+            DecisionCache([_row("a"), _row("b")]),
+            generation=3, system="sysfp", host="h1",
+        )
+        assert b.to_json() == b2.to_json()
+
+    def test_format_mismatch_refused(self):
+        d = json.loads(
+            DecisionBundle(DecisionCache([_row("a")])).to_json()
+        )
+        d["bundle_format"] = 99
+        with pytest.raises(ValueError, match="bundle format"):
+            DecisionBundle.from_json(json.dumps(d))
+        assert BUNDLE_FORMAT == 1
+
+    def test_load_bundle_auto_wraps_raw_decisions_file(self, tmp_path):
+        dc = DecisionCache([_row("x")])
+        p = dc.save(tmp_path / "decisions.json")
+        b = load_bundle(p)
+        assert b.generation == 0
+        assert len(b.decisions) == 1
+        # a real bundle file loads with its provenance intact
+        bp = DecisionBundle(dc, generation=7).save(tmp_path / "b.json")
+        assert load_bundle(bp).generation == 7
+
+
+class TestMerge:
+    def test_disjoint_merge_is_union(self):
+        a = DecisionBundle(DecisionCache([_row("a")]), generation=1)
+        b = DecisionBundle(DecisionCache([_row("b")]), generation=2)
+        m = merge_bundles([a, b])
+        assert len(m.decisions) == 2
+        assert m.generation == 3  # max(input)+1: a merge is a rollout
+
+    @pytest.mark.parametrize("policy", CONFLICT_POLICIES)
+    def test_merge_commutative_and_deterministic(self, policy):
+        shared_old = _row("s", strategy="rows", total=1e-5)
+        shared_new = _row("s", strategy="dma", total=2e-5)
+        a = DecisionBundle(
+            DecisionCache([shared_old, _row("a")]), generation=1, host="a"
+        )
+        b = DecisionBundle(
+            DecisionCache([shared_new, _row("b")]), generation=2, host="b"
+        )
+        m1 = merge_bundles([a, b], policy=policy)
+        m2 = merge_bundles([b, a], policy=policy)
+        assert m1.to_json() == m2.to_json()
+
+    def test_newest_generation_policy_prefers_newer_row(self):
+        old = _row("s", strategy="rows", total=1e-6)   # cheaper but older
+        new = _row("s", strategy="dma", total=2e-5)
+        a = DecisionBundle(DecisionCache([old]), generation=1)
+        b = DecisionBundle(DecisionCache([new]), generation=5)
+        m = merge_bundles([a, b], policy="newest-generation")
+        assert m.decisions.log[0].strategy == "dma"
+
+    def test_lowest_price_policy_prefers_cheaper_row(self):
+        old = _row("s", strategy="rows", total=1e-6)
+        new = _row("s", strategy="dma", total=2e-5)
+        a = DecisionBundle(DecisionCache([old]), generation=1)
+        b = DecisionBundle(DecisionCache([new]), generation=5)
+        m = merge_bundles([a, b], policy="lowest-price")
+        assert m.decisions.log[0].strategy == "rows"
+
+    def test_unknown_policy_refused(self):
+        a = DecisionBundle(DecisionCache([_row("a")]))
+        with pytest.raises(ValueError, match="conflict policy"):
+            merge_bundles([a], policy="coin-flip")
+
+    def test_provenance_carries_only_when_unanimous(self):
+        a = DecisionBundle(DecisionCache([_row("a")]), system="s1")
+        b = DecisionBundle(DecisionCache([_row("b")]), system="s1")
+        assert merge_bundles([a, b]).system == "s1"
+        c = DecisionBundle(DecisionCache([_row("c")]), system="s2")
+        assert merge_bundles([a, c]).system == ""  # cross-system: no lie
+
+
+class TestDiffPromote:
+    def test_diff_round_trips_byte_identically(self):
+        a = DecisionBundle(
+            DecisionCache([_row("a"), _row("s", strategy="rows")]),
+            generation=1,
+        )
+        b = DecisionBundle(
+            DecisionCache([_row("b"), _row("s", strategy="dma")]),
+            generation=2,
+        )
+        d = diff_bundles(a, b)
+        s1 = json.dumps(d, sort_keys=True, indent=2)
+        s2 = json.dumps(json.loads(s1), sort_keys=True, indent=2)
+        assert s1 == s2
+        assert len(d["added"]) == 1 and len(d["removed"]) == 1
+        assert len(d["changed"]) == 1
+        assert d["changed"][0]["before"]["strategy"] == "rows"
+
+    def test_promote_and_rollback(self, tmp_path):
+        live = tmp_path / "decisions.json"
+        DecisionCache([_row("old")]).save(live)
+        staged = DecisionBundle(
+            DecisionCache([_row("new")]), generation=2
+        )
+        installed, backup = promote(staged, live)
+        # the live file is raw engine-loadable decisions JSON
+        assert DecisionCache.load(installed).log[0].fingerprint == "new"
+        assert backup is not None and backup.exists()
+        # provenance survives next to the live file
+        assert load_bundle(live.with_name(live.name + ".bundle")).generation == 2
+        rollback(live)
+        assert DecisionCache.load(live).log[0].fingerprint == "old"
+
+    def test_rollback_without_promote_refused(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            rollback(tmp_path / "decisions.json")
+
+
+# ===========================================================================
+# CLI
+# ===========================================================================
+
+class TestCli:
+    def test_merge_diff_promote_cli(self, tmp_path, capsys):
+        from repro.fleet.__main__ import main
+
+        a = DecisionBundle(DecisionCache([_row("a")]), generation=1)
+        b = DecisionBundle(DecisionCache([_row("b")]), generation=2)
+        pa, pb = a.save(tmp_path / "a.json"), b.save(tmp_path / "b.json")
+        out = tmp_path / "merged.json"
+        assert main(["merge", str(pa), str(pb), "--out", str(out)]) == 0
+        assert len(load_bundle(out).decisions) == 2
+        assert main(["diff", str(pa), str(pb)]) == 0
+        assert main(["diff", str(pa), str(pa), "--assert-same"]) == 0
+        assert main(["diff", str(pa), str(pb), "--assert-same"]) == 1
+        live = tmp_path / "live.json"
+        assert main(["promote", str(out), "--live", str(live)]) == 0
+        assert len(DecisionCache.load(live)) == 2
+        capsys.readouterr()
+
+    def test_report_cli_renders_ratios(self, tmp_path, capsys):
+        from repro.fleet.__main__ import main
+
+        tel = ExchangeTelemetry()
+        tel.register("fp1", 1e-4, "wire/grouped")
+        tel.observe("fp1", 2e-4)
+        tel.save(tmp_path / "telemetry.json")
+        DecisionCache(
+            [_row("fp1", strategy="wire/grouped")]
+        ).save(tmp_path / "decisions.json")
+        assert main(["report", "--store", str(tmp_path)]) == 0
+        out = capsys.readouterr().out
+        assert "obs/pred" in out and "2.000" in out
+
+
+# ===========================================================================
+# cross-process merge (two hosts record, results merge deterministically)
+# ===========================================================================
+
+_RECORD_CODE = """
+import os
+from repro.comm import PerfModel
+from repro.core import BYTE, TypeRegistry, Vector
+from repro.fleet import DecisionBundle
+from repro.measure import DecisionCache, load_ci_params
+
+dts = {dts}
+reg = TypeRegistry()
+dc = DecisionCache()
+model = PerfModel(load_ci_params(), decisions=dc)
+for n, b, s in dts:
+    model.select(reg.commit(Vector(n, b, s, BYTE)))
+DecisionBundle(dc, generation={gen}, host="{host}").save(r"{out}")
+print(len(dc))
+"""
+
+
+class TestCrossProcessMerge:
+    def _record(self, tmp_path):
+        # two processes record overlapping decision sets: the vector
+        # (16, 64, 512) is shared, the others are disjoint
+        pa = tmp_path / "host_a.json"
+        pb = tmp_path / "host_b.json"
+        run_with_devices(
+            _RECORD_CODE.format(
+                dts=[(16, 64, 512), (4096, 8, 4096)], gen=1, host="a",
+                out=pa,
+            ),
+            ndev=1,
+        )
+        run_with_devices(
+            _RECORD_CODE.format(
+                dts=[(16, 64, 512), (4, 256, 512)], gen=2, host="b",
+                out=pb,
+            ),
+            ndev=1,
+        )
+        return load_bundle(pa), load_bundle(pb)
+
+    @pytest.mark.parametrize("policy", CONFLICT_POLICIES)
+    def test_two_host_bundles_merge_deterministically(self, tmp_path, policy):
+        a, b = self._record(tmp_path)
+        assert len(a.decisions) == 2 and len(b.decisions) == 2
+        m1 = merge_bundles([a, b], policy=policy)
+        m2 = merge_bundles([b, a], policy=policy)
+        assert m1.to_json() == m2.to_json()
+        # overlap dedupes: 2 + 2 with one shared key -> 3 rows
+        assert len(m1.decisions) == 3
+        # the shared vector type produced the same fingerprint on both
+        # hosts — exactly one key overlaps
+        shared = {d.key for d in a.decisions.log} & {
+            d.key for d in b.decisions.log
+        }
+        assert len(shared) == 1
+
+    def test_diff_of_host_bundles_round_trips(self, tmp_path):
+        a, b = self._record(tmp_path)
+        d = diff_bundles(a, b)
+        s1 = json.dumps(d, sort_keys=True, indent=2)
+        s2 = json.dumps(json.loads(s1), sort_keys=True, indent=2)
+        assert s1 == s2
+        assert len(d["added"]) == 1 and len(d["removed"]) == 1

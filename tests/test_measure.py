@@ -436,6 +436,41 @@ class TestDecisions:
     def test_missing_file_loads_empty(self, tmp_path):
         assert len(DecisionCache.load(tmp_path / "nope.json")) == 0
 
+    def test_rerecord_save_load_is_idempotent(self, tmp_path):
+        # regression: re-recording an existing key used to append a
+        # duplicate audit row, so every record -> save -> load -> record
+        # cycle compounded duplicates in the persisted log
+        reg = TypeRegistry()
+        ct = reg.commit(Vector(4096, 8, 4096, BYTE))
+        est = PerfModel(TPU_V5E).estimate(ct, 1, "rows")
+        path = tmp_path / "decisions.json"
+
+        dc = DecisionCache()
+        dc.record(ct.fingerprint, 1, 1, True, est, ct=ct)
+        dc.save(path)
+        first = path.read_text()
+        for _ in range(3):
+            dc = DecisionCache.load(path)
+            dc.record(ct.fingerprint, 1, 1, True, est, ct=ct)
+            dc.save(path)
+        assert path.read_text() == first
+        assert len(DecisionCache.load(path).log) == 1
+
+    def test_rerecord_is_last_wins_with_stable_order(self):
+        reg = TypeRegistry()
+        a = reg.commit(Vector(4096, 8, 4096, BYTE))
+        b = reg.commit(Vector(16, 64, 512, BYTE))
+        model = PerfModel(TPU_V5E)
+        dc = DecisionCache()
+        dc.record(a.fingerprint, 1, 1, True, model.estimate(a, 1, "rows"))
+        dc.record(b.fingerprint, 1, 1, True, model.estimate(b, 1, "rows"))
+        # re-record the FIRST key with a different strategy: the row is
+        # replaced in place, not appended after b's
+        dc.record(a.fingerprint, 1, 1, True, model.estimate(a, 1, "dma"))
+        assert [d.fingerprint for d in dc.log] == [a.fingerprint, b.fingerprint]
+        assert dc.log[0].strategy == "dma"
+        assert len(dc) == 2
+
     def test_format_mismatch_raises(self, tmp_path):
         p = tmp_path / "old.json"
         p.write_text(json.dumps({"format": 999, "decisions": []}))
