@@ -11,7 +11,9 @@ per-call price of the :class:`repro.fleet.ExchangeTelemetry` probe
 against a pinned-decision exchange loop (the smoother's compiled deep-
 halo step), so the observability layer is held to the same standard as
 everything else it observes.  ``--assert-telemetry-overhead`` gates it
-at <2%.
+at <2%.  ``--trace-overhead`` / ``--assert-trace-overhead`` do the same
+for the :mod:`repro.obs` tracer: the per-iteration cost of recording a
+compiled iteration's attributed span tree, held to the SAME budget.
 """
 
 from __future__ import annotations
@@ -102,6 +104,50 @@ def telemetry_overhead(iters: int = 30) -> float:
     return overhead
 
 
+def trace_overhead(iters: int = 30) -> float:
+    """The tracer's per-iteration cost relative to one pinned-decision
+    exchange loop iteration — the span-recording analog of
+    :func:`telemetry_overhead`, held to the same budget.
+
+    A compiled deep-halo iteration records its whole span tree through
+    ONE :func:`repro.obs.trace.attribute_program_iteration` call (the
+    launch layer's per-iteration tracer hook), so that call's host cost
+    *is* the probe price; it is measured directly against the loop's
+    observed iteration time, like the telemetry probe.
+    """
+    from repro.comm.api import Communicator
+    from repro.fleet import ExchangeTelemetry, predict_program_phases
+    from repro.launch.smoother import run_smoother
+    from repro.obs.trace import Tracer, attribute_program_iteration
+
+    tel = ExchangeTelemetry()
+    comm = Communicator(
+        axis_name="data", decisions=DecisionCache(), telemetry=tel
+    )
+    report = run_smoother(
+        comm, iters=iters, interior=(8, 8, 8), cycle="smooth", halo_steps=2
+    )
+    agg = tel.get(report.program.fingerprint)
+    assert agg is not None and agg.count == iters
+    t_iter = agg.mean
+    tracer = Tracer()
+    phases = predict_program_phases(report.program, comm.model)
+    t_probe = time_host_us(
+        lambda: attribute_program_iteration(
+            tracer, report.program, 0.0, t_iter, phases
+        ),
+        iters=500,
+    ) * 1e-6
+    overhead = t_probe / t_iter
+    emit("measure/trace/exchange-iter", t_iter * 1e6,
+         f"iters={iters};pinned={report.program.pinned}")
+    emit("measure/trace/probe-call", t_probe * 1e6,
+         "attribute_program_iteration()")
+    emit("measure/trace/overhead-pct", overhead * 100.0,
+         f"budget={TELEMETRY_OVERHEAD_BUDGET * 100:.0f}%")
+    return overhead
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(prog="benchmarks.bench_measure",
                                  description=__doc__)
@@ -113,8 +159,19 @@ def main() -> None:
                          f"{TELEMETRY_OVERHEAD_BUDGET:.0%} to a pinned-"
                          "decision exchange iteration (implies "
                          "--telemetry-overhead)")
+    ap.add_argument("--trace-overhead", action="store_true",
+                    help="measure only the span tracer's relative cost "
+                         "per compiled iteration (skips the calibration "
+                         "lifecycle rows)")
+    ap.add_argument("--assert-trace-overhead", action="store_true",
+                    help="exit 1 when the tracer adds >= "
+                         f"{TELEMETRY_OVERHEAD_BUDGET:.0%} to a pinned-"
+                         "decision exchange iteration (implies "
+                         "--trace-overhead)")
     args = ap.parse_args()
+    probes_only = False
     if args.telemetry_overhead or args.assert_telemetry_overhead:
+        probes_only = True
         overhead = telemetry_overhead()
         if (
             args.assert_telemetry_overhead
@@ -124,6 +181,18 @@ def main() -> None:
                 f"telemetry probe overhead {overhead:.2%} >= "
                 f"{TELEMETRY_OVERHEAD_BUDGET:.0%} budget"
             )
+    if args.trace_overhead or args.assert_trace_overhead:
+        probes_only = True
+        overhead = trace_overhead()
+        if (
+            args.assert_trace_overhead
+            and overhead >= TELEMETRY_OVERHEAD_BUDGET
+        ):
+            raise SystemExit(
+                f"trace probe overhead {overhead:.2%} >= "
+                f"{TELEMETRY_OVERHEAD_BUDGET:.0%} budget"
+            )
+    if probes_only:
         return
     run()
 

@@ -1,0 +1,141 @@
+"""Machine-readable perf snapshot: ``BENCH_7.json``.
+
+The CSV suites report human-scannable tables; this suite records the
+numbers a perf *trajectory* needs — one JSON file per run, stable keys,
+diffable run over run.  Times are CPU-container proxies (see
+``benchmarks/common.py``): the values that transfer to TPU are the
+byte counts, the relative orderings, and the probe overhead ratios.
+
+Schema (``"format": 1``)::
+
+    {
+      "format": 1,                      # bump on incompatible change
+      "suite": "snapshot",
+      "halo": {                         # the smoother's fused program
+        "fingerprint": str,             # program decision key
+        "strategy": "program/s=N",      # pinned decision row strategy
+        "schedule": str,                # wire schedule the plan chose
+        "wire_bytes": int,              # issued bytes per exchange
+        "steps": int,                   # fused halo depth s
+        "cycle_len": int,
+        "pinned": bool                  # True: depth came from the
+      },                                #   decisions file, not the model
+      "program_iteration": {            # compiled-iteration wall time
+        "mean_s": float,                # telemetry window mean
+        "p95_s": float,
+        "samples": int,
+        "predicted_s": float            # model's per-iteration price
+      },
+      "probes": {                       # observability self-cost
+        "telemetry_overhead": float,    # probe cost / iteration cost
+        "trace_overhead": float,
+        "budget": float                 # the <2% gate both live under
+      }
+    }
+
+Run via ``python -m benchmarks.run snapshot`` (writes ``BENCH_7.json``
+in the CWD) or ``python -m benchmarks.bench_snapshot --out PATH``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.bench_measure import (
+    TELEMETRY_OVERHEAD_BUDGET,
+    telemetry_overhead,
+    trace_overhead,
+)
+from benchmarks.common import emit
+
+SNAPSHOT_FORMAT = 1
+SNAPSHOT_FILENAME = "BENCH_7.json"
+
+
+def snapshot(iters: int = 10) -> dict:
+    """Collect the snapshot dict (schema in the module docstring)."""
+    from repro.comm.api import Communicator
+    from repro.fleet import ExchangeTelemetry
+    from repro.launch.smoother import run_smoother
+    from repro.measure import DecisionCache
+
+    # two runs over one DecisionCache: the first records the program
+    # decision, the second pins it — the snapshot reports the *pinned*
+    # path, the steady state a production job lives in
+    decisions = DecisionCache()
+    tel = ExchangeTelemetry()
+    comm = Communicator(
+        axis_name="data", decisions=decisions, telemetry=tel
+    )
+    run_smoother(comm, iters=1, interior=(8, 8, 8), cycle="smooth",
+                 halo_steps="auto")
+    tel2 = ExchangeTelemetry()
+    comm2 = Communicator(
+        axis_name="data", decisions=decisions, telemetry=tel2
+    )
+    report = run_smoother(comm2, iters=iters, interior=(8, 8, 8),
+                          cycle="smooth", halo_steps="auto")
+    program = report.program
+    agg = tel2.get(program.fingerprint)
+    return {
+        "format": SNAPSHOT_FORMAT,
+        "suite": "snapshot",
+        "halo": {
+            "fingerprint": program.fingerprint,
+            "strategy": f"program/s={program.steps}",
+            "schedule": program.plan.wire.schedule,
+            "wire_bytes": int(program.plan.wire.issued_bytes),
+            "steps": int(program.steps),
+            "cycle_len": int(program.cycle_len),
+            "pinned": bool(program.pinned),
+        },
+        "program_iteration": {
+            "mean_s": agg.mean if agg else 0.0,
+            "p95_s": agg.p95 if agg else 0.0,
+            "samples": agg.count if agg else 0,
+            "predicted_s": agg.predicted if agg else 0.0,
+        },
+        "probes": {
+            "telemetry_overhead": telemetry_overhead(iters=iters),
+            "trace_overhead": trace_overhead(iters=iters),
+            "budget": TELEMETRY_OVERHEAD_BUDGET,
+        },
+    }
+
+
+def run(out: str = SNAPSHOT_FILENAME) -> Path:
+    """The ``benchmarks.run snapshot`` entry: write the JSON, echo the
+    headline numbers as CSV rows like every other suite."""
+    snap = snapshot()
+    path = Path(out)
+    path.write_text(json.dumps(snap, indent=2, sort_keys=True) + "\n")
+    emit("snapshot/halo-wire-bytes", float(snap["halo"]["wire_bytes"]),
+         f"{snap['halo']['strategy']};{snap['halo']['schedule']}"
+         f";pinned={snap['halo']['pinned']}")
+    emit("snapshot/program-iter", snap["program_iteration"]["mean_s"] * 1e6,
+         f"samples={snap['program_iteration']['samples']}")
+    emit("snapshot/telemetry-overhead-pct",
+         snap["probes"]["telemetry_overhead"] * 100.0,
+         f"budget={snap['probes']['budget'] * 100:.0f}%")
+    emit("snapshot/trace-overhead-pct",
+         snap["probes"]["trace_overhead"] * 100.0,
+         f"budget={snap['probes']['budget'] * 100:.0f}%")
+    emit("snapshot/json", 0.0, str(path))
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_snapshot",
+                                 description=__doc__)
+    ap.add_argument("--out", default=SNAPSHOT_FILENAME, metavar="PATH",
+                    help=f"where to write the JSON "
+                         f"(default: ./{SNAPSHOT_FILENAME})")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.out)
+
+
+if __name__ == "__main__":
+    main()

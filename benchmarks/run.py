@@ -3,7 +3,11 @@
 One module per paper table/figure; every row is ``name,us_per_call,
 derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [fig6|fig7|fig9|fig12|measure]
+    PYTHONPATH=src python -m benchmarks.run \
+        [fig6|fig7|fig9|fig12|measure|snapshot]
+
+``snapshot`` additionally writes the machine-readable ``BENCH_7.json``
+perf snapshot (schema: ``benchmarks/bench_snapshot.py``).
 """
 
 from __future__ import annotations
@@ -20,6 +24,7 @@ def main() -> None:
         bench_measure,
         bench_pack,
         bench_send_model,
+        bench_snapshot,
     )
 
     suites = {
@@ -28,6 +33,7 @@ def main() -> None:
         "fig9": bench_send_model.run,  # + fig10/11
         "fig12": bench_halo.run,
         "measure": bench_measure.run,
+        "snapshot": bench_snapshot.run,
     }
     print("name,us_per_call,derived")
     failures = 0

@@ -753,6 +753,15 @@ class Communicator:
         ``jit``/``shard_map`` trace a timer would measure tracing, so
         tracer arguments skip the probe and jitted workloads time their
         compiled step from the launch layer instead.
+    tracer: optional :class:`repro.obs.Tracer` — structured per-phase
+        spans on the same paths the telemetry probe times, under the
+        same guard: eager blocking entry points record ``exchange`` →
+        ``pack``/``wire``/``unpack`` spans with ``block_until_ready``
+        at each phase boundary (the decision signature and the model's
+        per-phase predictions ride as span attributes); inside a jax
+        trace nothing records, and fused compiled iterations are
+        attributed from the launch layer instead
+        (:func:`repro.obs.trace.attribute_program_iteration`).
     """
 
     def __init__(
@@ -764,6 +773,7 @@ class Communicator:
         policy: Optional[Policy] = None,
         decisions=None,
         telemetry=None,
+        tracer=None,
     ):
         self.axis_name = axis_name
         self.registry = registry or TypeRegistry()
@@ -771,8 +781,19 @@ class Communicator:
         self.model = PerfModel(params, decisions=decisions, axis=axis_name)
         self.policy = policy or ModelPolicy()
         self.telemetry = telemetry
+        self.tracer = tracer
         self.wire_ops = 0  # collectives issued through this communicator
         self.wire_payload_bytes = 0  # exact bytes those collectives carried
+
+    def _tracing_spans(self, *operands) -> bool:
+        """Whether the blocking entry points should record spans for
+        this call: a tracer is attached, no operand is a jax tracer, and
+        execution is eager (the tracer guard — same rule as telemetry)."""
+        return (
+            self.tracer is not None
+            and self.tracer.active
+            and not any(isinstance(b, jax.core.Tracer) for b in operands)
+        )
 
     # ------------------------------------------------------------------
     def _axis(self, axis_name: Optional[str]) -> str:
@@ -867,7 +888,14 @@ class Communicator:
         ``dst_buf``.  With telemetry attached and eager arguments, the
         whole blocking exchange is timed against the send type's
         fingerprint (tracers skip the probe — a timer inside a trace
-        measures tracing, not transfer)."""
+        measures tracing, not transfer).  With a tracer attached the
+        same eager path additionally records an ``exchange`` span with
+        ``pack``/``wire``/``unpack`` children, blocking at each phase
+        boundary so the split is a real observation, not attribution."""
+        if self._tracing_spans(src_buf):
+            return self._sendrecv_traced(
+                src_buf, dst_buf, send_ct, perm, axis_name, recv_ct, incount
+            )
         if self.telemetry is None or isinstance(src_buf, jax.core.Tracer):
             req = self.isend(src_buf, send_ct, perm, axis_name, incount)
             return self.irecv(dst_buf, recv_ct or send_ct, req).wait()
@@ -876,6 +904,44 @@ class Communicator:
         out = self.irecv(dst_buf, recv_ct or send_ct, req).wait()
         jax.block_until_ready(out)  # async dispatch would under-report
         self.telemetry.observe(send_ct.fingerprint, time.perf_counter() - t0)
+        return out
+
+    def _sendrecv_traced(
+        self, src_buf, dst_buf, send_ct, perm, axis_name, recv_ct, incount
+    ) -> jax.Array:
+        """Eager :meth:`sendrecv` with per-phase spans.  Same work as
+        isend + irecv, laid out phase by phase so each span boundary can
+        block — the paper's pack/wire/unpack decomposition observed
+        directly."""
+        axis = self._axis(axis_name)
+        s = self.select(send_ct, incount, wire=True)
+        seg = s.wire_segment(send_ct, incount)
+        est = s.plan(self.model, send_ct, incount)
+        if self.telemetry is not None:
+            self.telemetry.register(send_ct.fingerprint, est.total, s.name)
+        t0 = time.perf_counter()
+        with self.tracer.span(
+            "exchange", fingerprint=send_ct.fingerprint, strategy=s.name,
+            wire_bytes=seg.nbytes, incount=incount, pred=est.total,
+        ):
+            with self.tracer.span("pack", pred=est.t_pack):
+                payload = s.pack(src_buf, send_ct, incount)
+                jax.block_until_ready(payload)
+            with self.tracer.span("wire", pred=est.t_link,
+                                  wire_bytes=seg.nbytes):
+                wire = lax.ppermute(payload, axis, list(perm))
+                jax.block_until_ready(wire)
+            self.wire_ops += 1
+            self.wire_payload_bytes += seg.nbytes
+            with self.tracer.span("unpack", pred=est.t_unpack):
+                out = s.unpack_wire(
+                    self, dst_buf, wire, recv_ct or send_ct, send_ct, incount
+                )
+                jax.block_until_ready(out)
+        if self.telemetry is not None:
+            self.telemetry.observe(
+                send_ct.fingerprint, time.perf_counter() - t0
+            )
         return out
 
     # ------------------------------------------------------------------
@@ -920,6 +986,10 @@ class Communicator:
                 f"unknown schedule_policy {schedule_policy!r}; "
                 "expected 'exact' or 'model'"
             )
+        t_plan0 = (
+            time.perf_counter()
+            if self.tracer is not None and self.tracer.active else None
+        )
         strats = (
             tuple(strategies)
             if strategies is not None
@@ -943,6 +1013,13 @@ class Communicator:
             # trace-time half of the probe: the prediction is on file
             # before the first observation arrives
             self.telemetry.register(plan.fingerprint, est.total, est.strategy)
+        if t_plan0 is not None:
+            self.tracer.add_manual(
+                "plan", t_plan0, time.perf_counter() - t_plan0,
+                fingerprint=plan.fingerprint, strategy=est.strategy,
+                schedule=plan.schedule, wire_bytes=plan.issued_bytes,
+                nsegments=len(plan.segments), pred=est.total,
+            )
         return strats, plan
 
     def _issue_wire(
@@ -1018,6 +1095,25 @@ class Communicator:
             for goff, grp in zip(plan.group_offsets, plan.groups)
         ]
 
+    def _phase_predictions(
+        self, send_cts, strategies, plan
+    ) -> Tuple[float, float, float]:
+        """Model-predicted (pack, wire, unpack) seconds for one fused
+        exchange — the ``pred`` attributes the per-phase spans carry, so
+        an exported trace joins observed against predicted without the
+        model in hand.  Host-side, computed only on traced eager calls."""
+        t_pack = t_unpack = 0.0
+        for ct, strat in zip(send_cts, strategies):
+            est = strat.plan(self.model, ct, 1)
+            t_pack += est.t_pack
+            t_unpack += est.t_unpack
+        try:
+            costs = self.model.price_wire_schedules(plan)
+            t_wire = float(costs.get(plan.schedule, 0.0))
+        except Exception:
+            t_wire = self.model.t_link(plan.issued_bytes, 1)
+        return t_pack, t_wire, t_unpack
+
     def ineighbor_alltoallv(
         self,
         buf: jax.Array,
@@ -1056,15 +1152,30 @@ class Communicator:
         def leaf_packer(strat: Strategy, ct: CommittedType):
             return lambda b: strat.pack(b, ct)
 
-        wire = pack_ragged(
-            buf,
-            [
-                (plan.segments[i].offset, leaf_packer(strategies[i], send_cts[i]))
-                for i in range(n)
-            ],
-            plan.wire_bytes,
-        )
-        group_rows = self._issue_wire(wire, plan, axis)
+        entries = [
+            (plan.segments[i].offset, leaf_packer(strategies[i], send_cts[i]))
+            for i in range(n)
+        ]
+        if self._tracing_spans(buf):
+            # eager + traced: the pack and wire phases block at their
+            # span boundaries so each is observed separately (the
+            # predicted terms come from the member estimates and the
+            # model's wire-schedule pricing)
+            t_pack, t_wire, _ = self._phase_predictions(
+                send_cts, strategies, plan
+            )
+            with self.tracer.span("pack", pred=t_pack,
+                                  nbytes=plan.wire_bytes):
+                wire = pack_ragged(buf, entries, plan.wire_bytes)
+                jax.block_until_ready(wire)
+            with self.tracer.span("wire", pred=t_wire,
+                                  wire_bytes=plan.issued_bytes,
+                                  schedule=plan.schedule):
+                group_rows = self._issue_wire(wire, plan, axis)
+                jax.block_until_ready(group_rows)
+        else:
+            wire = pack_ragged(buf, entries, plan.wire_bytes)
+            group_rows = self._issue_wire(wire, plan, axis)
         self.wire_ops += plan.wire_ops
         self.wire_payload_bytes += plan.issued_bytes
 
@@ -1105,7 +1216,15 @@ class Communicator:
         """Blocking :meth:`ineighbor_alltoallv`.  With telemetry
         attached and eager arguments the fused exchange is timed against
         the wire plan's fingerprint (the same key the decision cache
-        records the schedule choice under)."""
+        records the schedule choice under).  With a tracer attached the
+        eager call records the full span hierarchy: ``exchange`` (the
+        decision signature in its attributes) hosting ``plan`` (when
+        planned here), ``pack``/``wire`` (inside
+        :meth:`ineighbor_alltoallv`) and ``unpack``."""
+        if len(send_cts) > 0 and self._tracing_spans(buf):
+            return self._neighbor_alltoallv_traced(
+                buf, send_cts, recv_cts, perms, axis_name, plan, strategies
+            )
         if (
             self.telemetry is None
             or isinstance(buf, jax.core.Tracer)
@@ -1124,6 +1243,45 @@ class Communicator:
         ).wait()
         jax.block_until_ready(out)
         self.telemetry.observe(plan.fingerprint, time.perf_counter() - t0)
+        return out
+
+    def _neighbor_alltoallv_traced(
+        self, buf, send_cts, recv_cts, perms, axis_name, plan, strategies
+    ) -> jax.Array:
+        """Eager blocking fused exchange under the tracer: one
+        ``exchange`` span whose children decompose the call."""
+        t0 = time.perf_counter()
+        with self.tracer.span("exchange") as sp:
+            if strategies is None:
+                strategies = tuple(
+                    self.select(ct, 1, wire=True) for ct in send_cts
+                )
+            if plan is None:
+                strategies, plan = self.plan_neighbor(
+                    send_cts, perms, strategies=strategies
+                )
+            t_pack, t_wire, t_unpack = self._phase_predictions(
+                send_cts, strategies, plan
+            )
+            if sp is not None:
+                sp.attrs.update(
+                    fingerprint=plan.fingerprint,
+                    strategy=f"wire/{plan.schedule}",
+                    schedule=plan.schedule,
+                    wire_bytes=plan.issued_bytes,
+                    ngroups=len(plan.groups),
+                    pred=t_pack + t_wire + t_unpack,
+                )
+            req = self.ineighbor_alltoallv(
+                buf, send_cts, recv_cts, perms, axis_name, plan, strategies
+            )
+            with self.tracer.span("unpack", pred=t_unpack):
+                out = req.wait()
+                jax.block_until_ready(out)
+        if self.telemetry is not None:
+            self.telemetry.observe(
+                plan.fingerprint, time.perf_counter() - t0
+            )
         return out
 
     # ------------------------------------------------------------------
@@ -1164,7 +1322,13 @@ class Communicator:
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, int]:
-        return {
+        """Cumulative counters for this communicator.  Every call also
+        publishes them into the process metrics registry
+        (:func:`repro.obs.metrics.publish_comm_stats`), so
+        ``default_metrics().snapshot()`` — and the ``metrics.json`` the
+        production ``save()`` persists — always reflects the latest
+        totals."""
+        out = {
             "committed_types": len(self.registry),
             "commit_hits": self.registry.hits,
             "model_lookups": self.model.lookups,
@@ -1176,6 +1340,10 @@ class Communicator:
                 len(self.telemetry) if self.telemetry is not None else 0
             ),
         }
+        from repro.obs.metrics import publish_comm_stats
+
+        publish_comm_stats(out, self.telemetry)
+        return out
 
 
 def as_communicator(obj) -> Communicator:

@@ -43,6 +43,7 @@ from repro.fleet.telemetry import (
     ExchangeTelemetry,
     RingAggregate,
     predict_program_iteration,
+    predict_program_phases,
 )
 
 __all__ = [
@@ -64,6 +65,7 @@ __all__ = [
     "load_bundle",
     "merge_bundles",
     "predict_program_iteration",
+    "predict_program_phases",
     "promote",
     "remeasure_term",
     "rollback",

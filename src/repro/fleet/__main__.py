@@ -3,6 +3,7 @@
 ::
 
     python -m repro.fleet report  --store STORE [--reference ENV] ...
+    python -m repro.fleet stats   --store STORE
     python -m repro.fleet diff    A B [--out FILE]
     python -m repro.fleet merge   IN [IN ...] --out FILE [--policy P]
     python -m repro.fleet promote BUNDLE --live PATH
@@ -10,7 +11,10 @@
 
 ``report`` renders a smoother/train run's observed-vs-predicted table
 (and, given a reference calibration, the drift audit — exit 1 with
-``--assert-no-drift`` when anything drifted).  ``merge`` unifies N host
+``--assert-no-drift`` when anything drifted).  ``stats`` renders the
+``metrics.json`` counter snapshot a production run persisted on
+``save()`` (exchange/wire-byte/decision-cache counters, telemetry ring
+occupancy — :mod:`repro.obs.metrics`).  ``merge`` unifies N host
 bundles (raw ``decisions.json`` files are auto-wrapped) under an
 explicit conflict policy.  ``diff`` emits canonical JSON that
 round-trips byte-identically.  ``promote`` stages a bundle as the live
@@ -108,6 +112,33 @@ def _cmd_report(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_stats(args: argparse.Namespace) -> int:
+    from repro.measure.production import DECISIONS_FILENAME
+    from repro.obs.metrics import METRICS_FILENAME, MetricsRegistry
+
+    store = Path(args.store)
+    metrics_path = Path(args.metrics) if args.metrics else (
+        store / METRICS_FILENAME
+    )
+    registry = MetricsRegistry.load(metrics_path)
+    print(f"metrics: {metrics_path} ({len(registry)} series)")
+    print(registry.report())
+
+    dec_path = store / DECISIONS_FILENAME
+    if dec_path.exists():
+        try:
+            bundle = load_bundle(dec_path)
+        except Exception:
+            bundle = None
+        if bundle is not None:
+            print()
+            print(f"decisions: {bundle.summary()}")
+    if args.json:
+        print()
+        print(json.dumps(registry.snapshot(), indent=2, sort_keys=True))
+    return 0
+
+
 def _cmd_diff(args: argparse.Namespace) -> int:
     d = diff_bundles(load_bundle(args.a), load_bundle(args.b))
     s = json.dumps(d, sort_keys=True, indent=2)
@@ -180,6 +211,20 @@ def main(argv=None) -> int:
     rp.add_argument("--min-samples", type=int, default=DEFAULT_MIN_SAMPLES)
     rp.add_argument("--system", default="", help="system label for the report")
     rp.set_defaults(fn=_cmd_report)
+
+    sp = sub.add_parser(
+        "stats", help="render a run's metrics.json counter snapshot"
+    )
+    sp.add_argument(
+        "--store", default=".",
+        help="run store dir holding metrics.json (and decisions.json)",
+    )
+    sp.add_argument("--metrics", help="explicit metrics file")
+    sp.add_argument(
+        "--json", action="store_true",
+        help="also print the raw snapshot as JSON (machine-readable)",
+    )
+    sp.set_defaults(fn=_cmd_stats)
 
     dp = sub.add_parser("diff", help="canonical JSON diff of two bundles")
     dp.add_argument("a")

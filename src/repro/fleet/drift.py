@@ -63,8 +63,24 @@ __all__ = [
     "remeasure_term",
 ]
 
-#: bump when the persisted DriftReport schema changes incompatibly
-DRIFT_FORMAT = 1
+#: bump when the persisted DriftReport schema changes incompatibly.
+#: Format 2 (PR 7): finding ``source`` distinguishes ``"trace"`` (direct
+#: per-phase span observation), ``"telemetry"`` (whole-exchange runtime
+#: ratio) and ``"interpolated"`` (table-interpolation inference, the
+#: format-1 ``"params"``); findings gain ``phase_ratios``.  Format-1
+#: files still load (``from_json`` normalizes old source labels).
+DRIFT_FORMAT = 2
+
+#: older report formats ``from_json`` accepts (normalized on load)
+_COMPAT_FORMATS = (1, DRIFT_FORMAT)
+
+#: which model term each trace phase span is evidence for
+_PHASE_TERM = {
+    "wire": "wire",
+    "pack": "pack_unpack",
+    "unpack": "pack_unpack",
+    "stencil": "stencil",
+}
 
 #: the model terms a drift can be attributed to, each owning exactly one
 #: calibration sweep (see module docstring table)
@@ -82,20 +98,33 @@ DEFAULT_MIN_SAMPLES = 8
 
 @dataclass(frozen=True)
 class DriftFinding:
-    """One decision row's drift verdict."""
+    """One decision row's drift verdict.
+
+    ``source`` says where the term attribution came from, strongest
+    evidence first: ``"trace"`` — direct per-phase span observations
+    (``DriftDetector.audit(trace=...)``); ``"telemetry"`` — the
+    whole-exchange runtime ratio flagged it; ``"interpolated"`` — the
+    term was *inferred* by interpolating stored vs reference calibration
+    tables (no runtime observation involved).  Consumers gating on
+    ``--assert-no-drift`` can weigh a ``"trace"`` finding above an
+    inferred one.
+    """
 
     fingerprint: str
     strategy: str
     term: str            # attributed term ("" when nothing diverges)
-    ratio: float         # stored/reference price ratio for that term
+    ratio: float         # observed/predicted (trace) or stored/reference
     drifted: bool
-    source: str          # "params" (table audit) or "telemetry" (runtime)
+    source: str          # "trace" | "telemetry" | "interpolated"
     recorded_total: float = 0.0   # the Decision's recorded price (sec)
     repriced_total: float = 0.0   # same decision priced on the reference
     observed_mean: float = 0.0    # runtime mean (telemetry joins only)
     observed_ratio: float = 0.0   # observed/predicted (0 = no telemetry)
     samples: int = 0
     signature: str = ""
+    #: per-term observed/predicted ratios from trace aggregates (empty
+    #: without a trace join) — the direct attribution evidence
+    phase_ratios: Dict[str, float] = field(default_factory=dict)
 
 
 @dataclass
@@ -139,18 +168,24 @@ class DriftReport:
     @staticmethod
     def from_json(s: str) -> "DriftReport":
         d = json.loads(s)
-        if d.get("format") != DRIFT_FORMAT:
+        if d.get("format") not in _COMPAT_FORMATS:
             raise ValueError(
-                f"drift report format {d.get('format')!r} != {DRIFT_FORMAT}"
+                f"drift report format {d.get('format')!r} not in "
+                f"{_COMPAT_FORMATS}"
             )
+        findings = []
+        for row in d.get("findings", ()):
+            row = dict(row)
+            # format 1 called table-interpolation findings "params"
+            if row.get("source") == "params":
+                row["source"] = "interpolated"
+            findings.append(DriftFinding(**row))
         return DriftReport(
             system=d.get("system", ""),
             threshold=float(d["threshold"]),
             min_samples=int(d["min_samples"]),
             term_ratios=dict(d.get("term_ratios", {})),
-            findings=tuple(
-                DriftFinding(**row) for row in d.get("findings", ())
-            ),
+            findings=tuple(findings),
         )
 
     def save(self, path: Union[str, Path]) -> Path:
@@ -231,6 +266,31 @@ def _strategy_tables_ratio(stored, reference) -> Optional[float]:
     return _geomean_ratio(ratios)
 
 
+def _trace_term_ratios(
+    rec: Dict[str, dict],
+) -> Tuple[Dict[str, float], int]:
+    """Observed/predicted ratio per model term from one decision key's
+    trace phase aggregates (``{phase: {count, observed, predicted}}``,
+    see :func:`repro.obs.export.aggregate_spans`).  The pack and unpack
+    phases pool into the one ``pack_unpack`` term (they share a
+    calibration sweep).  Returns ``(ratios, samples)`` where samples is
+    the per-iteration observation count behind the ratios."""
+    by_term: Dict[str, List[float]] = {}
+    counts: List[int] = []
+    for phase, r in rec.items():
+        term = _PHASE_TERM.get(phase)
+        if term is None:
+            continue
+        agg = by_term.setdefault(term, [0.0, 0.0])
+        agg[0] += float(r.get("observed", 0.0))
+        agg[1] += float(r.get("predicted", 0.0))
+        counts.append(int(r.get("count", 0)))
+    ratios = {
+        t: o / p for t, (o, p) in by_term.items() if o > 0.0 and p > 0.0
+    }
+    return ratios, (max(counts) if counts else 0)
+
+
 def _terms_of(strategy: str) -> Tuple[str, ...]:
     """Which model terms a decision row's price is built from, in
     attribution priority order."""
@@ -295,19 +355,31 @@ class DriftDetector:
         reference: Optional[SystemParams] = None,
         telemetry: Optional[ExchangeTelemetry] = None,
         system: str = "",
+        trace: Optional[Dict[str, Dict[str, dict]]] = None,
     ) -> DriftReport:
         """One finding per decision row.
 
+        With ``trace`` (per-decision phase aggregates from
+        :meth:`repro.obs.Tracer.phase_aggregates` or
+        :func:`repro.obs.export.aggregate_events`): a row whose
+        fingerprint has trace coverage gets **direct** term attribution
+        — each phase's observed/predicted ratio maps onto the term that
+        phase is evidence for (pack+unpack pool into ``pack_unpack``),
+        the worst out-of-band term wins, and the finding's ``source`` is
+        ``"trace"``.  Rows without trace coverage fall back to the
+        interpolated path below.
+
         With ``reference``: each row's terms are checked against the
         reference tables; a row drifts when a term it prices is out of
-        band, attributed to the *worst* such term.  The ``wire`` term is
-        additionally re-priced point-wise at the row's exact
-        ``wire_bytes`` (more honest than the table-mean for a row living
-        at one message size).  With ``telemetry``: rows whose
-        observed/predicted ratio is out of band over ``min_samples``
-        drift too — attributed through the reference when one is given,
-        else left unattributed (``term=""``; re-measure everything or
-        bring a reference).
+        band, attributed to the *worst* such term (``source``
+        ``"interpolated"`` — the attribution is inferred, not
+        observed).  The ``wire`` term is additionally re-priced
+        point-wise at the row's exact ``wire_bytes`` (more honest than
+        the table-mean for a row living at one message size).  With
+        ``telemetry``: rows whose observed/predicted ratio is out of
+        band over ``min_samples`` drift too — attributed through the
+        reference when one is given, else left unattributed
+        (``term=""``; re-measure everything or bring a reference).
         """
         ratios = (
             self.term_ratios(params, reference) if reference is not None
@@ -333,6 +405,20 @@ class DriftDetector:
                 ref_link = ref_model.t_link(d.wire_bytes, hops)
                 if stored_link > 0 and ref_link > 0:
                     row_ratios["wire"] = stored_link / ref_link
+            source = "interpolated"
+            phase_ratios: Dict[str, float] = {}
+            trace_samples = 0
+            rec = (trace or {}).get(d.fingerprint)
+            if rec:
+                t_ratios, trace_samples = _trace_term_ratios(rec)
+                phase_ratios = {
+                    t: r for t, r in t_ratios.items() if t in terms
+                }
+                if phase_ratios:
+                    # direct observation beats inference: the trace's
+                    # per-phase ratios replace the interpolated ones
+                    row_ratios = phase_ratios
+                    source = "trace"
             # re-price the recorded total term by term: each recorded
             # slot divided by its stored/reference ratio (strategy class
             # determines which slot belongs to which term — program rows
@@ -353,10 +439,13 @@ class DriftDetector:
                 if abs(math.log(r)) > abs(math.log(worst)):
                     worst_term, worst = t, r
             drifted = bool(worst_term) and self._out_of_band(worst)
-            source = "params"
+            if source == "trace":
+                # runtime evidence: one slow iteration is an outlier, a
+                # windowful is drift — same sample gate as telemetry
+                drifted = drifted and trace_samples >= self.min_samples
 
             obs_mean = obs_ratio = 0.0
-            samples = 0
+            samples = trace_samples if source == "trace" else 0
             agg = telemetry.get(d.fingerprint) if telemetry is not None else None
             if agg is not None:
                 obs_mean = agg.mean
@@ -365,7 +454,7 @@ class DriftDetector:
                 if r is not None:
                     obs_ratio = r
                     if samples >= self.min_samples and self._out_of_band(r):
-                        if not drifted:
+                        if not drifted and source != "trace":
                             source = "telemetry"
                         drifted = True
             findings.append(
@@ -382,15 +471,21 @@ class DriftDetector:
                     observed_ratio=obs_ratio,
                     samples=samples,
                     signature=d.signature,
+                    phase_ratios=dict(sorted(phase_ratios.items())),
                 )
             )
-        return DriftReport(
+        report = DriftReport(
             system=system,
             threshold=self.threshold,
             min_samples=self.min_samples,
             term_ratios=ratios,
             findings=tuple(findings),
         )
+        from repro.obs.metrics import default_metrics
+
+        default_metrics().inc("drift.findings", len(report.findings))
+        default_metrics().inc("drift.drifted", report.drifted_count)
+        return report
 
 
 def remeasure_term(

@@ -52,6 +52,7 @@ __all__ = [
     "RingAggregate",
     "ExchangeTelemetry",
     "predict_program_iteration",
+    "predict_program_phases",
 ]
 
 #: bump when the persisted telemetry schema changes incompatibly
@@ -289,17 +290,30 @@ class ExchangeTelemetry:
         return ExchangeTelemetry.from_json(p.read_text())
 
 
-def predict_program_iteration(program, model) -> float:
-    """Predicted wall seconds of ONE deep-halo program iteration as the
-    launch layer observes it: the model's exchange + redundant-shell
-    estimate plus the interior stencil compute the estimate deliberately
-    excludes (every candidate depth pays the interior equally, so
-    ``price_program`` never prices it — but the step timer sees it).
-    Priced from the measured stencil sweep when calibrated, else the
-    same contiguous-copy proxy ``PerfModel._redundant_time`` falls back
-    to."""
+def predict_program_phases(program, model) -> Dict[str, float]:
+    """The model's per-phase prediction of ONE deep-halo iteration:
+    ``{"pack", "wire", "unpack", "stencil"}`` seconds, summing to
+    :func:`predict_program_iteration`.
+
+    The member pack/unpack terms are re-priced per committed type
+    through the plan's strategies; the wire phase is what remains of the
+    estimate's exchange half (so the decomposition is exactly
+    consistent with the recorded decision price).  The stencil phase is
+    the redundant ghost-shell compute the estimate prices *plus* the
+    interior compute it deliberately excludes (every candidate depth
+    pays the interior equally — but a wall-clock observer sees it).
+    Feeds the per-phase ``pred`` attributes on
+    :func:`repro.obs.trace.attribute_program_iteration` span trees and,
+    through them, trace-sourced drift attribution.
+    """
     est = program.estimate
-    t = est.total
+    t_pack = t_unpack = 0.0
+    for ct, strat in zip(program.plan.send_cts, program.plan.strategies):
+        e = model.estimate(ct, 1, strat)
+        t_pack += e.t_pack
+        t_unpack += e.t_unpack
+    t_wire = max(est.t_exchange - t_pack - t_unpack, 0.0)
+    t_stencil = est.t_redundant
     interior_bytes = (
         math.prod(program.spec.interior) * program.spec.element.size
     )
@@ -309,5 +323,20 @@ def predict_program_iteration(program, model) -> float:
             t_app = (op.nneighbors + 2) * (
                 interior_bytes / model.params.hbm_bw
             )
-        t += t_app * program.steps
-    return t
+        t_stencil += t_app * program.steps
+    return {
+        "pack": t_pack, "wire": t_wire, "unpack": t_unpack,
+        "stencil": t_stencil,
+    }
+
+
+def predict_program_iteration(program, model) -> float:
+    """Predicted wall seconds of ONE deep-halo program iteration as the
+    launch layer observes it: the model's exchange + redundant-shell
+    estimate plus the interior stencil compute the estimate deliberately
+    excludes (every candidate depth pays the interior equally, so
+    ``price_program`` never prices it — but the step timer sees it).
+    Priced from the measured stencil sweep when calibrated, else the
+    same contiguous-copy proxy ``PerfModel._redundant_time`` falls back
+    to.  The per-phase split is :func:`predict_program_phases`."""
+    return sum(predict_program_phases(program, model).values())

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass
+from functools import cached_property
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -207,8 +208,10 @@ class HaloProgram:
         the cycle-mode CI gate asserts this is ``<= 1``."""
         return 1.0 / self.steps
 
-    @property
+    @cached_property
     def fingerprint(self) -> str:
+        # content hash over frozen fields; cached because the tracer's
+        # per-iteration hook reads it on the launch hot loop
         return program_fingerprint(
             self.spec.grid, self.spec.interior, self.ops, self.spec.element
         )
@@ -223,14 +226,72 @@ class HaloProgram:
     ) -> jax.Array:
         """One program iteration: ONE fused exchange + ``steps`` repeats
         of the shrinking-region op cycle.  With ``overlap`` the wire op
-        hides behind the steps-deep interior chain."""
+        hides behind the steps-deep interior chain.
+
+        When the communicator carries a :class:`repro.obs.Tracer` and
+        the call is eager (no jax trace, no tracer operands), the
+        iteration records the full span hierarchy: ``program_iteration``
+        hosting the fused ``exchange`` (with its pack/wire/unpack
+        phases, via :meth:`Communicator.neighbor_alltoallv`) and one
+        ``stencil`` span per application — each phase blocked at its
+        boundary.  Jitted runs skip this entirely (the launch layer
+        attributes compiled iterations instead)."""
         if overlap:
             return overlapped_stencil_iteration(
                 local, self.spec, comm, axis_name,
                 steps=self.steps, probe=probe, plan=self.plan, op=self.ops,
             )
+        comm = as_communicator(comm)
+        tracer = getattr(comm, "tracer", None)
+        if (
+            tracer is not None
+            and tracer.active
+            and not isinstance(local, jax.core.Tracer)
+        ):
+            return self._traced_iteration(local, comm, axis_name, tracer)
         local = halo_exchange(local, self.spec, comm, axis_name, plan=self.plan)
         return stencil_cycle(local, self.spec, self.ops, self.steps)
+
+    def _traced_iteration(
+        self, local: jax.Array, comm, axis_name: str, tracer
+    ) -> jax.Array:
+        """Eager iteration under the tracer: spans per phase, blocking
+        at each boundary (a debug/observation path — the hot path is the
+        jitted ``make_program_step``)."""
+        from repro.fleet.telemetry import predict_program_phases
+        from repro.halo.stencil import op_sequence, stencil_apply
+
+        try:
+            phases = predict_program_phases(self, comm.model)
+        except Exception:
+            phases = {}
+        napp = max(self.applications, 1)
+        with tracer.span(
+            "program_iteration",
+            fingerprint=self.fingerprint,
+            strategy=f"program/s={self.steps}",
+            steps=self.steps, cycle_len=self.cycle_len,
+            pinned=bool(self.pinned),
+            pred=sum(phases.values()),
+        ):
+            # the fused exchange span (and its pack/wire/unpack
+            # children) is recorded by the blocking Communicator path
+            local = comm.neighbor_alltoallv(
+                local, self.plan.send_cts, self.plan.recv_cts,
+                self.plan.perms, axis_name, plan=self.plan.wire,
+                strategies=self.plan.strategies,
+            )
+            valid = self.spec.radii
+            pred_app = phases.get("stencil", 0.0) / napp
+            for i, o in enumerate(op_sequence(self.ops, self.steps)):
+                with tracer.span(
+                    "stencil", application=i, op=i % self.cycle_len,
+                    pred=pred_app,
+                ):
+                    local = stencil_apply(local, self.spec, valid, o)
+                    jax.block_until_ready(local)
+                valid = tuple(v - r for v, r in zip(valid, o.radii))
+        return local
 
 
 def _feasible_steps(

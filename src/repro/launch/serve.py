@@ -150,6 +150,10 @@ def main() -> None:
     ap.add_argument("--drift-report", default=None, metavar="FILE",
                     help="write a repro.fleet DriftReport JSON after the "
                          "run (implies --telemetry)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record hierarchical exchange spans (repro.obs) "
+                         "and export a Chrome-trace JSON here (render "
+                         "with `python -m repro.obs summary`)")
     args = ap.parse_args()
 
     from repro.halo.program import parse_halo_steps, set_default_halo_steps
@@ -165,6 +169,7 @@ def main() -> None:
         comm, save_decisions = production_communicator(
             args.comm_cache, halo_steps=halo_steps,
             telemetry=want_telemetry or None,
+            tracer=bool(args.trace) or None,
         )
         dc = comm.model.decisions
         print(f"comm: params={comm.model.params.name} "
@@ -204,6 +209,11 @@ def main() -> None:
     if save_decisions is not None:
         path = save_decisions()
         print(f"comm: decisions -> {path}")
+    if args.trace and comm is not None and comm.tracer is not None:
+        from repro.obs.export import save_chrome_trace
+
+        tpath = save_chrome_trace(comm.tracer, args.trace)
+        print(f"trace ({len(comm.tracer)} spans) -> {tpath}")
     if comm is not None and want_telemetry:
         print(comm.telemetry.report())
         if args.drift_report:

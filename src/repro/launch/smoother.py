@@ -127,32 +127,48 @@ def run_smoother(
     ).astype(np.float32)
     x = jnp.asarray(state.reshape(R * az, ay, ax))
     telemetry = getattr(comm, "telemetry", None)
-    if telemetry is None:
+    tracer = getattr(comm, "tracer", None)
+    if tracer is not None and not getattr(tracer, "enabled", False):
+        tracer = None
+    if telemetry is None and tracer is None:
         for _ in range(iters):
             x = step(x)
     else:
-        # telemetry: the program runs jitted, so the Communicator's
-        # eager probe never fires — time the compiled step here instead.
-        # AOT-compile first so compile time never pollutes the samples,
-        # and block each iteration (async dispatch would under-report).
+        # telemetry/tracing: the program runs jitted, so the
+        # Communicator's eager probes never fire — time the compiled
+        # step here instead.  AOT-compile first so compile time never
+        # pollutes the samples, and block each iteration (async dispatch
+        # would under-report).  The tracer gets the same observation as
+        # an attributed span tree: the measured iteration wall time
+        # split across phases in the model's predicted proportions.
         import time
 
-        from repro.fleet.telemetry import predict_program_iteration
+        from repro.fleet.telemetry import predict_program_phases
 
-        predicted = predict_program_iteration(program, comm.model)
-        telemetry.register(
-            program.fingerprint, predicted, f"program/s={program.steps}"
-        )
+        phases = predict_program_phases(program, comm.model)
+        predicted = sum(phases.values())
+        if telemetry is not None:
+            telemetry.register(
+                program.fingerprint, predicted, f"program/s={program.steps}"
+            )
         try:
             run = step.lower(x).compile()
         except AttributeError:  # not a jit-wrapped callable
             run = step
         jax.block_until_ready(x)
-        for _ in range(iters):
+        for i in range(iters):
             t0 = time.perf_counter()
             x = run(x)
             jax.block_until_ready(x)
-            telemetry.observe(program.fingerprint, time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            if telemetry is not None:
+                telemetry.observe(program.fingerprint, dt)
+            if tracer is not None:
+                from repro.obs.trace import attribute_program_iteration
+
+                attribute_program_iteration(
+                    tracer, program, t0, dt, phases, iteration=i
+                )
     out = np.asarray(x).reshape(R, az, ay, ax)
     checksum = float(
         out[:, rz:rz + nz, ry:ry + ny, rx:rx + nx].sum()
@@ -194,6 +210,12 @@ def main() -> None:
                          "iteration wall time vs the model's prediction, "
                          "persisted to telemetry.json in the store "
                          "(render with `python -m repro.fleet report`)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record hierarchical spans (repro.obs) and "
+                         "export a Chrome-trace JSON here — loadable in "
+                         "Perfetto/chrome://tracing, rendered by "
+                         "`python -m repro.obs summary`, validated by "
+                         "`python -m repro.obs validate`")
     ap.add_argument("--drift-report", default=None, metavar="FILE",
                     help="write a DriftReport JSON after the run "
                          "(implies --telemetry)")
@@ -215,11 +237,17 @@ def main() -> None:
     comm, save_decisions = production_communicator(
         args.comm_cache, axis_name="data", halo_steps=halo_steps,
         telemetry=want_telemetry or None,
+        tracer=bool(args.trace) or None,
     )
     n = args.interior
     report = run_smoother(comm, iters=args.iters, interior=(n, n, n),
                           cycle=args.cycle)
     print(report.summary)
+    if args.trace:
+        from repro.obs.export import save_chrome_trace
+
+        path = save_chrome_trace(comm.tracer, args.trace)
+        print(f"trace ({len(comm.tracer)} spans) -> {path}")
     rows = comm.model.decisions.program_rows()
     for d in rows:
         print(f"decision: {d.strategy} fp={d.fingerprint} {d.signature}")
@@ -239,10 +267,15 @@ def main() -> None:
             raise SystemExit(
                 f"unreadable reference envelope {args.drift_reference}"
             )
+        trace_agg = (
+            comm.tracer.phase_aggregates()
+            if args.trace and getattr(comm, "tracer", None) is not None
+            else None
+        )
         drift = DriftDetector().audit(
             comm.model.decisions, comm.model.params,
             reference=reference, telemetry=comm.telemetry,
-            system="smoother",
+            system="smoother", trace=trace_agg,
         )
         print(drift.summary())
         if args.drift_report:

@@ -45,6 +45,7 @@ def production_communicator(
     params: Optional[SystemParams] = None,
     halo_steps: Optional[Union[int, str]] = None,
     telemetry: Union[bool, "object", None] = None,
+    tracer: Union[bool, "object", None] = None,
 ) -> Tuple[Communicator, Callable[[], Path]]:
     """A :class:`Communicator` wired for production reuse.
 
@@ -74,9 +75,18 @@ def production_communicator(
         :class:`~repro.fleet.telemetry.ExchangeTelemetry` instance is
         attached as-is (the caller owns persistence); ``None``/``False``
         attaches no probe.
+    tracer: ``True`` attaches a fresh :class:`repro.obs.Tracer`
+        (hierarchical exchange spans — export with
+        :func:`repro.obs.export.save_chrome_trace`, the launch drivers'
+        ``--trace PATH``); an explicit Tracer instance is attached
+        as-is; ``None``/``False`` attaches none.
 
     Returns ``(comm, save)``: call ``save()`` after the job to persist
-    the decision cache — the file that lets the next run skip the model.
+    the decision cache — the file that lets the next run skip the model
+    — plus the telemetry (when store-owned) and a ``metrics.json``
+    snapshot of the communicator's counters
+    (:func:`repro.obs.metrics.publish_comm_stats`; inspect with
+    ``python -m repro.fleet stats``).
     """
     if halo_steps is not None:
         from repro.halo.program import set_default_halo_steps
@@ -103,13 +113,25 @@ def production_communicator(
         tel = ExchangeTelemetry.load(tel_path)
     elif telemetry:  # an ExchangeTelemetry (or compatible) instance
         tel = telemetry
+    tr = None
+    if tracer is True:
+        from repro.obs.trace import Tracer
+
+        tr = Tracer()
+    elif tracer:  # a Tracer (or compatible) instance
+        tr = tracer
     comm = Communicator(
-        axis_name=axis_name, params=params, decisions=decisions, telemetry=tel
+        axis_name=axis_name, params=params, decisions=decisions,
+        telemetry=tel, tracer=tr,
     )
 
     def save() -> Path:
         if tel_path is not None:
             tel.save(tel_path)
+        from repro.obs.metrics import METRICS_FILENAME, default_metrics
+
+        comm.stats()  # publish the latest counters into the registry
+        default_metrics().save(store.root / METRICS_FILENAME)
         return decisions.save(decisions_path)
 
     return comm, save
