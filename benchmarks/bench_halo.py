@@ -31,6 +31,13 @@ exceeds ``s=1``.  It also runs the heterogeneous-cycle gate: a fused
 issue <= 1 exchange per cycle repeat, stay bit-exact against the
 exchange-per-application reference, and price its auto depth no worse
 per application than ``s=1``.
+
+``--assert-overlap`` runs the region-split overlap gate (CI): region
+mode must be bit-exact against the plain reference AND the monolithic
+overlap path on the 2x2x2 grid, and ``choose_overlap_mode`` on the
+checked-in ``ci_params.json`` tables must pick a mode priced no worse
+than monolithic, record it as an ``overlap/mode=...`` decision, and pin
+it on the rerun.
 """
 
 from __future__ import annotations
@@ -330,15 +337,96 @@ print("CYCLE_OK")
 """
 
 
+#: the region-split overlap gate (CI): region mode must be bit-exact
+#: against BOTH the plain exchange-then-cycle reference and the
+#: monolithic overlap path, and the overlap/mode decision priced on the
+#: checked-in ci_params.json must never choose a mode the model predicts
+#: to be worse than monolithic (ties go to monolithic by construction)
+_OVERLAP_ASSERT_CODE = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.comm import Communicator
+from repro.halo import (HaloSpec, STENCIL26, halo_exchange, make_halo_plan,
+                        make_halo_types, overlap_region_descriptors,
+                        overlapped_stencil_iteration, stencil_steps)
+from repro.measure import DecisionCache, load_ci_params
+
+spec = HaloSpec(grid=(2, 2, 2), interior=(6, 5, 4), radius=2)
+R = spec.nranks
+az, ay, ax = spec.alloc
+mesh = Mesh(np.array(jax.devices()[:R]), ("ranks",))
+comm = Communicator(axis_name="ranks")
+types = make_halo_types(spec, comm)
+plan = make_halo_plan(spec, comm, types, schedule_policy="exact")
+probe = {}
+
+def plain(local):
+    local = halo_exchange(local, spec, comm, "ranks", types, plan=plan)
+    return stencil_steps(local, spec, steps=2)
+
+def region(local):
+    return overlapped_stencil_iteration(
+        local, spec, comm, "ranks", types, steps=2, probe=probe,
+        plan=plan, mode="region")
+
+def mono(local):
+    return overlapped_stencil_iteration(
+        local, spec, comm, "ranks", types, steps=2, plan=plan,
+        mode="monolithic")
+
+kw = dict(mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"),
+          check_vma=False)
+jp = jax.jit(shard_map(plain, **kw))
+jr = jax.jit(shard_map(region, **kw))
+jm = jax.jit(shard_map(mono, **kw))
+x = jnp.asarray(np.random.default_rng(0).normal(
+    size=(R * az, ay, ax)).astype(np.float32))
+ref = np.asarray(jp(x))
+np.testing.assert_array_equal(ref, np.asarray(jr(x)))
+np.testing.assert_array_equal(ref, np.asarray(jm(x)))
+assert probe["overlap_mode"] == "region"
+assert probe["rim_regions"] == 26, probe
+assert sorted(probe["class_drain_order"]) == list(range(plan.wire.ngroups))
+print(f"overlap-exact-check: rims={probe['rim_regions']} "
+      f"classes={plan.wire.ngroups} bit-exact vs plain and monolithic")
+
+# the decision gate on the pinned CI tables: whatever mode the model
+# chooses must be priced no worse than monolithic, and the choice must
+# land in (and pin from) the decisions cache
+dc = DecisionCache()
+comm_ci = Communicator(axis_name="ranks", params=load_ci_params(),
+                       decisions=dc)
+types_ci = make_halo_types(spec, comm_ci)
+plan_ci = make_halo_plan(spec, comm_ci, types_ci)
+core_bytes, rims = overlap_region_descriptors(spec, STENCIL26, plan_ci.wire)
+mode, ests, pinned = comm_ci.model.choose_overlap_mode(
+    plan_ci.wire, rims, core_bytes, STENCIL26.nneighbors)
+assert not pinned
+assert ests[mode].t_total <= ests["monolithic"].t_total, (mode, ests)
+rows = [d for d in dc.log if d.strategy == f"overlap/mode={mode}"]
+assert rows and "regions=" in rows[0].signature, rows
+mode2, _, pinned2 = comm_ci.model.choose_overlap_mode(
+    plan_ci.wire, rims, core_bytes, STENCIL26.nneighbors)
+assert (mode2, pinned2) == (mode, True)
+print(f"overlap-mode-check: schedule={plan_ci.wire.schedule} "
+      f"classes={plan_ci.wire.ngroups} chose={mode} "
+      + " ".join(f"{m}={e.t_total:.3e}s" for m, e in sorted(ests.items())))
+print("OVERLAP_MODE_OK")
+"""
+
+
 def run(assert_ragged: bool = False, assert_program: bool = False,
-        padded_allowance: float = None) -> None:
+        assert_overlap: bool = False, padded_allowance: float = None) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
     if padded_allowance is not None:
         env["REPRO_PADDED_ALLOWANCE"] = str(padded_allowance)
-    gate = assert_ragged or assert_program
+    gate = assert_ragged or assert_program or assert_overlap
     # both gates run when both flags are given — combining flags must
     # never silently drop a regression check
     jobs = []
@@ -347,6 +435,8 @@ def run(assert_ragged: bool = False, assert_program: bool = False,
     if assert_program:
         jobs.append((_PROGRAM_ASSERT_CODE, "PROGRAM_OK"))
         jobs.append((_CYCLE_ASSERT_CODE, "CYCLE_OK"))
+    if assert_overlap:
+        jobs.append((_OVERLAP_ASSERT_CODE, "OVERLAP_MODE_OK"))
     if not jobs:
         jobs.append((_CODE, None))
     for code, ok_token in jobs:
@@ -373,5 +463,6 @@ if __name__ == "__main__":
     run(
         assert_ragged="--assert-ragged" in argv,
         assert_program="--assert-program" in argv,
+        assert_overlap="--assert-overlap" in argv,
         padded_allowance=allowance,
     )

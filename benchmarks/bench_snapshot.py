@@ -1,4 +1,4 @@
-"""Machine-readable perf snapshot: ``BENCH_7.json``.
+"""Machine-readable perf snapshot: ``BENCH_8.json``.
 
 The CSV suites report human-scannable tables; this suite records the
 numbers a perf *trajectory* needs — one JSON file per run, stable keys,
@@ -26,6 +26,18 @@ Schema (``"format": 1``)::
         "samples": int,
         "predicted_s": float            # model's per-iteration price
       },
+      "overlap": {                      # region-split overlap (PR 8)
+        "chosen_mode": str,             # what mode="auto" resolved to
+        "predicted_s": {                # price_overlap, both modes
+          "monolithic": float,
+          "region": float
+        },
+        "iteration_mean_s": {           # wall time per compiled
+          "off": float,                 #   iteration, per overlap mode
+          "monolithic": float,          #   (all bit-identical; the
+          "region": float               #   checksum gate asserts it)
+        }
+      },
       "probes": {                       # observability self-cost
         "telemetry_overhead": float,    # probe cost / iteration cost
         "trace_overhead": float,
@@ -33,7 +45,7 @@ Schema (``"format": 1``)::
       }
     }
 
-Run via ``python -m benchmarks.run snapshot`` (writes ``BENCH_7.json``
+Run via ``python -m benchmarks.run snapshot`` (writes ``BENCH_8.json``
 in the CWD) or ``python -m benchmarks.bench_snapshot --out PATH``.
 """
 
@@ -51,7 +63,7 @@ from benchmarks.bench_measure import (
 from benchmarks.common import emit
 
 SNAPSHOT_FORMAT = 1
-SNAPSHOT_FILENAME = "BENCH_7.json"
+SNAPSHOT_FILENAME = "BENCH_8.json"
 
 
 def snapshot(iters: int = 10) -> dict:
@@ -79,6 +91,34 @@ def snapshot(iters: int = 10) -> dict:
                           cycle="smooth", halo_steps="auto")
     program = report.program
     agg = tel2.get(program.fingerprint)
+
+    # region-split overlap rows: the model's pricing of both modes on
+    # this program's exchange, what "auto" resolves to, and per-mode
+    # compiled-iteration wall time on the SAME pinned program — the
+    # modes are bit-identical, so any spread is pure scheduling
+    from repro.halo import overlap_region_descriptors
+
+    core_bytes, rims = overlap_region_descriptors(
+        program.spec, program.ops, program.plan.wire
+    )
+    chosen, ests, _ = comm2.model.choose_overlap_mode(
+        program.plan.wire, rims, core_bytes, program.ops[0].nneighbors
+    )
+    overlap_iter = {}
+    checksums = set()
+    for m in ("off", "monolithic", "region"):
+        telm = ExchangeTelemetry()
+        commm = Communicator(
+            axis_name="data", decisions=decisions, telemetry=telm
+        )
+        rep = run_smoother(commm, iters=iters, interior=(8, 8, 8),
+                           cycle="smooth", halo_steps="auto", overlap=m)
+        aggm = telm.get(rep.program.fingerprint)
+        overlap_iter[m] = aggm.mean if aggm else 0.0
+        checksums.add(rep.checksum)
+    assert len(checksums) == 1, (
+        f"overlap modes disagree on the checksum: {checksums}"
+    )
     return {
         "format": SNAPSHOT_FORMAT,
         "suite": "snapshot",
@@ -96,6 +136,13 @@ def snapshot(iters: int = 10) -> dict:
             "p95_s": agg.p95 if agg else 0.0,
             "samples": agg.count if agg else 0,
             "predicted_s": agg.predicted if agg else 0.0,
+        },
+        "overlap": {
+            "chosen_mode": chosen,
+            "predicted_s": {
+                m: e.t_total for m, e in sorted(ests.items())
+            },
+            "iteration_mean_s": overlap_iter,
         },
         "probes": {
             "telemetry_overhead": telemetry_overhead(iters=iters),
@@ -116,6 +163,9 @@ def run(out: str = SNAPSHOT_FILENAME) -> Path:
          f";pinned={snap['halo']['pinned']}")
     emit("snapshot/program-iter", snap["program_iteration"]["mean_s"] * 1e6,
          f"samples={snap['program_iteration']['samples']}")
+    for m, v in snap["overlap"]["iteration_mean_s"].items():
+        emit(f"snapshot/overlap-iter-{m}", v * 1e6,
+             f"chosen={snap['overlap']['chosen_mode']}")
     emit("snapshot/telemetry-overhead-pct",
          snap["probes"]["telemetry_overhead"] * 100.0,
          f"budget={snap['probes']['budget'] * 100:.0f}%")

@@ -9,11 +9,13 @@ the on-disk SystemParams store, and the persistent selection cache);
 
 from repro.comm.api import (
     BaselinePolicy,
+    ClassRequest,
     Communicator,
     DEFAULT_SCHEDULE_POLICY,
     FixedPolicy,
     ModelPolicy,
     MODES,
+    NeighborRequest,
     Policy,
     Request,
     SendRequest,
@@ -30,6 +32,7 @@ from repro.comm.api import (
 from repro.comm.compress import INT8_WIRE, Int8Wire, RLE_WIRE, RleWire
 from repro.comm.interposer import Interposer
 from repro.comm.perfmodel import (
+    OverlapEstimate,
     PerfModel,
     ProgramEstimate,
     StrategyEstimate,
@@ -53,6 +56,7 @@ if RleWire.name not in default_registry():
 
 __all__ = [
     "BaselinePolicy",
+    "ClassRequest",
     "Communicator",
     "DEFAULT_SCHEDULE_POLICY",
     "FixedPolicy",
@@ -63,6 +67,8 @@ __all__ = [
     "Interposer",
     "MODES",
     "ModelPolicy",
+    "NeighborRequest",
+    "OverlapEstimate",
     "PerfModel",
     "Policy",
     "ProgramEstimate",

@@ -85,6 +85,8 @@ __all__ = [
     "MODES",
     "Request",
     "SendRequest",
+    "ClassRequest",
+    "NeighborRequest",
     "Communicator",
     "as_communicator",
     "WirePlan",
@@ -697,6 +699,110 @@ class SendRequest(Request):
         self.segment = segment
 
 
+class ClassRequest(Request):
+    """One delta class of a fused neighborhood exchange: the class's
+    received wire payload plus exactly the unpacks that consume it.
+    Completable independently of its siblings — the recv regions of
+    distinct transfers never overlap, so classes may be unpacked in any
+    completion order and the buffer is bit-identical.
+
+    ``transfers`` names the plan-level transfer indices riding in this
+    class (for halo exchanges these map 1:1 onto ``DIRECTIONS``), which
+    is what lets a region scheduler translate "this class landed" into
+    "these rim regions are computable"."""
+
+    def __init__(self, index: int, payload: jax.Array,
+                 transfers: Sequence[int], nbytes: int,
+                 unpack: Callable[[jax.Array, jax.Array], jax.Array]):
+        super().__init__(value=payload)
+        self.index = int(index)
+        self.transfers = tuple(transfers)
+        self.nbytes = int(nbytes)
+        self._unpack = unpack
+        #: set by :meth:`NeighborRequest.wait_any` once the class's
+        #: unpacks have been applied to the exchange buffer
+        self.applied = False
+
+    def ready(self) -> bool:
+        """Best-effort completion probe: True when the payload is known
+        to be resident (``jax.Array.is_ready``).  Traced payloads have
+        no runtime notion of readiness and report True, so a traced
+        drain loop proceeds in deterministic plan order."""
+        probe = getattr(self._value, "is_ready", None)
+        if callable(probe):
+            try:
+                return bool(probe())
+            except Exception:
+                return True
+        return True
+
+    def unpack_into(self, buf: jax.Array) -> jax.Array:
+        """Apply this class's unpacks to ``buf`` (returns the updated
+        buffer).  Normally driven by :meth:`NeighborRequest.wait_any`."""
+        self.applied = True
+        return self._unpack(buf, self._value)
+
+
+class NeighborRequest(Request):
+    """The request :meth:`Communicator.ineighbor_alltoallv` returns:
+    a fused exchange split into independently-completable per-class
+    :class:`ClassRequest` handles.
+
+    ``wait()`` keeps the historical monolithic contract — drain every
+    class, return the fully-unpacked buffer.  Overlap-aware callers
+    (the region-split stencil path) instead drive :meth:`wait_any` in a
+    drain loop, reading :attr:`buffer` between drains: each drained
+    class has written its recv regions, every other region of the
+    buffer is untouched, so any consumer whose inputs are covered by
+    the drained classes may run immediately."""
+
+    def __init__(self, buf: jax.Array, classes: Sequence[ClassRequest],
+                 plan: Optional[WirePlan] = None,
+                 on_drain: Optional[Callable[["NeighborRequest",
+                                              ClassRequest], None]] = None):
+        super().__init__()
+        self._buf = buf
+        self.classes = tuple(classes)
+        self.plan = plan
+        #: class indices in the order they were drained
+        self.drained: List[int] = []
+        self._on_drain = on_drain
+        if not self.classes:
+            self._value = buf
+
+    @property
+    def buffer(self) -> jax.Array:
+        """The exchange buffer with every *drained* class unpacked (and
+        the send-side contents everywhere else)."""
+        return self._buf
+
+    @property
+    def pending(self) -> Tuple[ClassRequest, ...]:
+        return tuple(c for c in self.classes if not c.applied)
+
+    def wait_any(self) -> ClassRequest:
+        """Drain one class: prefer the first whose payload is already
+        resident (out-of-order completion), fall back to plan order, and
+        apply its unpacks to :attr:`buffer`.  Returns the drained class;
+        raises ``ValueError`` once all classes are drained."""
+        pend = [c for c in self.classes if not c.applied]
+        if not pend:
+            raise ValueError("wait_any() on a fully drained request")
+        pick = next((c for c in pend if c.ready()), pend[0])
+        self._buf = pick.unpack_into(self._buf)
+        self.drained.append(pick.index)
+        if self._on_drain is not None:
+            self._on_drain(self, pick)
+        if len(self.drained) == len(self.classes):
+            self._value = self._buf
+        return pick
+
+    def wait(self) -> jax.Array:
+        while self._value is _PENDING:
+            self.wait_any()
+        return self._value
+
+
 # ===========================================================================
 # fused neighborhood alltoallv planning (host-side, cached)
 # ===========================================================================
@@ -784,6 +890,13 @@ class Communicator:
         self.tracer = tracer
         self.wire_ops = 0  # collectives issued through this communicator
         self.wire_payload_bytes = 0  # exact bytes those collectives carried
+        # per-delta-class wire accounting, keyed "<plan fp>/c<class>":
+        # issue counts and exact bytes per class, plus the 1-based drain
+        # position wait_any() last observed for the class — the counters
+        # `python -m repro.fleet stats` renders region completion from
+        self.wire_class_ops: Dict[str, int] = {}
+        self.wire_class_bytes: Dict[str, int] = {}
+        self.wire_class_drains: Dict[str, int] = {}
 
     def _tracing_spans(self, *operands) -> bool:
         """Whether the blocking entry points should record spans for
@@ -1013,6 +1126,16 @@ class Communicator:
             # trace-time half of the probe: the prediction is on file
             # before the first observation arrives
             self.telemetry.register(plan.fingerprint, est.total, est.strategy)
+            # per-delta-class completion predictions ride next to the
+            # whole-exchange key so drift attribution can name the slow
+            # direction, not just the slow exchange
+            if plan.ngroups > 1:
+                completions = self.model.price_class_completions(plan)
+                for g, t_c in enumerate(completions):
+                    self.telemetry.register(
+                        f"{plan.fingerprint}/c{g}", t_c,
+                        f"class/{plan.schedule}",
+                    )
         if t_plan0 is not None:
             self.tracer.add_manual(
                 "plan", t_plan0, time.perf_counter() - t_plan0,
@@ -1132,7 +1255,13 @@ class Communicator:
         :class:`WirePlan`, and the plan's schedule puts exactly those
         bytes on the wire — no class padding; ``wait()`` materializes
         the unpacks.  Pass a prebuilt ``plan``/``strategies`` pair (from
-        :meth:`plan_neighbor`) to skip per-call planning."""
+        :meth:`plan_neighbor`) to skip per-call planning.
+
+        Returns a :class:`NeighborRequest`: one :class:`ClassRequest`
+        per delta class, independently completable via ``wait_any()``
+        (region-split overlap drains them in completion order), with
+        ``wait()`` preserving the monolithic drain-everything
+        contract."""
         if not (len(send_cts) == len(recv_cts) == len(perms)):
             raise ValueError("send_cts, recv_cts, perms must align")
         axis = self._axis(axis_name)
@@ -1178,30 +1307,62 @@ class Communicator:
             group_rows = self._issue_wire(wire, plan, axis)
         self.wire_ops += plan.wire_ops
         self.wire_payload_bytes += plan.issued_bytes
+        fp = plan.fingerprint
+        for g, grp in enumerate(plan.groups):
+            key = f"{fp}/c{g}"
+            self.wire_class_ops[key] = self.wire_class_ops.get(key, 0) + 1
+            self.wire_class_bytes[key] = (
+                self.wire_class_bytes.get(key, 0) + grp.nbytes
+            )
 
         def leaf_unpacker(strat, recv_ct, send_ct):
             return lambda dst, part: strat.unpack_wire(
                 self, dst, part, recv_ct, send_ct, 1
             )
 
-        def materialize() -> jax.Array:
-            out = buf
-            for g, grp in enumerate(plan.groups):
-                out = unpack_ragged(
-                    out,
-                    group_rows[g],
-                    [
-                        (
-                            off,
-                            plan.segments[i].nbytes,
-                            leaf_unpacker(strategies[i], recv_cts[i], send_cts[i]),
-                        )
-                        for i, off in zip(grp.transfers, grp.offsets)
-                    ],
+        def class_unpacker(grp: WireGroup):
+            leaves = [
+                (
+                    off,
+                    plan.segments[i].nbytes,
+                    leaf_unpacker(strategies[i], recv_cts[i], send_cts[i]),
                 )
-            return out
+                for i, off in zip(grp.transfers, grp.offsets)
+            ]
+            return lambda dst, payload: unpack_ragged(dst, payload, leaves)
 
-        return Request(thunk=materialize)
+        classes = [
+            ClassRequest(g, group_rows[g], grp.transfers, grp.nbytes,
+                         class_unpacker(grp))
+            for g, grp in enumerate(plan.groups)
+        ]
+        # drain-side probe: gauge the completion order unconditionally
+        # (host-side dict write), and on eager drains observe per-class
+        # completion latency against the registered per-class prediction
+        # and record a per-class wire span — the same guard discipline
+        # as the whole-exchange probes
+        eager = not isinstance(buf, jax.core.Tracer)
+        observe = eager and self.telemetry is not None
+        tracing = eager and self._tracing_spans(buf)
+        issued_at = time.perf_counter()
+
+        def on_drain(req: NeighborRequest, cls: ClassRequest) -> None:
+            key = f"{fp}/c{cls.index}"
+            self.wire_class_drains[key] = len(req.drained)
+            if not (observe or tracing):
+                return
+            jax.block_until_ready(req.buffer)
+            dt = time.perf_counter() - issued_at
+            if observe:
+                self.telemetry.observe(key, dt)
+            if tracing:
+                self.tracer.add_manual(
+                    "wire_class", issued_at, dt, fingerprint=fp,
+                    nbytes=cls.nbytes, transfers=len(cls.transfers),
+                    drain_order=len(req.drained), **{"class": cls.index},
+                )
+
+        return NeighborRequest(buf, classes, plan=plan, on_drain=on_drain)
 
     def neighbor_alltoallv(
         self,
@@ -1336,6 +1497,10 @@ class Communicator:
             "strategies": len(self.strategies),
             "wire_ops": self.wire_ops,
             "wire_payload_bytes": self.wire_payload_bytes,
+            "wire_classes": len(self.wire_class_bytes),
+            "wire_class_ops": dict(self.wire_class_ops),
+            "wire_class_bytes": dict(self.wire_class_bytes),
+            "wire_class_drains": dict(self.wire_class_drains),
             "telemetry_keys": (
                 len(self.telemetry) if self.telemetry is not None else 0
             ),

@@ -31,10 +31,11 @@ performance parameters"); see ``docs/measure.md``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.commit import CommittedType
 
@@ -42,6 +43,7 @@ __all__ = [
     "SystemParams",
     "StrategyEstimate",
     "ProgramEstimate",
+    "OverlapEstimate",
     "PerfModel",
     "TPU_V5E",
 ]
@@ -208,6 +210,28 @@ class ProgramEstimate:
     def per_cycle(self) -> float:
         """Seconds per cycle repeat."""
         return self.total / max(self.steps, 1)
+
+
+@dataclass(frozen=True)
+class OverlapEstimate:
+    """Predicted cost of hiding one halo exchange behind compute, for
+    one overlap mode.
+
+    ``monolithic`` waits for the fused collective then applies every
+    rim region: ``max(wire, core) + sum(rims)``.  ``region`` drains
+    delta classes as they complete and computes each rim region as soon
+    as its dependency classes have landed, on a single compute
+    resource: the core runs first, then rims in ready order, each
+    starting at ``max(busy, ready)``.  ``class_completions`` is the
+    per-class wire completion profile the region simulation consumed
+    (:meth:`PerfModel.price_class_completions`)."""
+
+    mode: str
+    t_total: float
+    t_core: float
+    t_wire: float
+    t_rims: Tuple[float, ...] = ()
+    class_completions: Tuple[float, ...] = ()
 
 
 class _Interp2D:
@@ -502,6 +526,153 @@ class PerfModel:
         costs = self.price_wire_schedules(plan, axis, native)
         best = min(costs, key=costs.get)
         return reschedule(plan, best), costs
+
+    # -- region-split overlap pricing -----------------------------------
+    def _stencil_seconds(self, n_neighbors: int, nbytes: int) -> float:
+        """Seconds of one ``n_neighbors``-point stencil application over
+        a window of ``nbytes`` — the measured stencil sweep when
+        calibrated, else the same contiguous-copy / HBM proxy the
+        redundant-compute term falls back to."""
+        if nbytes <= 0:
+            return 0.0
+        t_app = self.measured_stencil(n_neighbors, nbytes)
+        if t_app is not None:
+            return t_app
+        touches = n_neighbors + 2
+        copy = self.measured_copy(nbytes)
+        per_touch = (
+            copy / 2.0 if copy is not None else nbytes / self.params.hbm_bw
+        )
+        return touches * per_touch
+
+    def price_class_completions(
+        self, plan, axis: Optional[str] = None
+    ) -> Tuple[float, ...]:
+        """Predicted completion time of each delta class of ``plan``,
+        measured from issue.  Under the grouped schedule class ``k``
+        rides the ``k``-th per-class collective: it cannot complete
+        before every earlier class's bytes are on the link
+        (``class_cum_bytes``) plus one launch latency per earlier
+        collective — the profile that makes region-split overlap
+        worthwhile.  The fused schedules (uniform/ragged) complete every
+        class together at the whole-collective time."""
+        lat = self._hop_latency(axis)
+        if plan.schedule == "grouped":
+            return tuple(
+                self.t_link(cum, 1, axis) + k * lat
+                for k, cum in enumerate(plan.class_cum_bytes)
+            )
+        t = self.t_link(plan.issued_bytes, 1, axis)
+        t += (plan.wire_ops - 1) * lat
+        return (t,) * plan.ngroups
+
+    def price_overlap(
+        self,
+        plan,
+        regions: Sequence[Tuple[int, Sequence[int]]],
+        core_bytes: int,
+        n_neighbors: int,
+        axis: Optional[str] = None,
+    ) -> Dict[str, OverlapEstimate]:
+        """Price both overlap modes for one exchange-hiding stencil
+        application.  ``regions`` describes the rim regions as
+        ``(window_bytes, dep_class_ids)`` pairs — geometry stays in the
+        halo layer; the model only sees bytes and dependencies.
+        ``core_bytes`` is the core window (computable with no halo) and
+        ``n_neighbors`` the stencil's neighbor count.
+
+        Both modes run compute on a single resource.  ``monolithic``
+        blocks on the fused wire: ``max(wire, core) + sum(rims)``.
+        ``region`` starts the core at issue and each rim at
+        ``max(resource free, its classes' completion)`` — the win is
+        bounded by the spread of the per-class completion profile.
+        """
+        completions = self.price_class_completions(plan, axis)
+        t_wire = max(completions) if completions else 0.0
+        t_core = self._stencil_seconds(n_neighbors, core_bytes)
+        rims = tuple(
+            self._stencil_seconds(n_neighbors, rb) for rb, _ in regions
+        )
+
+        def ready(i: int) -> float:
+            deps = regions[i][1]
+            return max((completions[c] for c in deps), default=0.0)
+
+        mono = max(t_wire, t_core) + sum(rims)
+        busy = t_core
+        for i in sorted(range(len(regions)), key=ready):
+            busy = max(busy, ready(i)) + rims[i]
+        return {
+            "monolithic": OverlapEstimate(
+                "monolithic", mono, t_core, t_wire, rims, completions
+            ),
+            "region": OverlapEstimate(
+                "region", max(busy, t_wire), t_core, t_wire, rims,
+                completions
+            ),
+        }
+
+    def choose_overlap_mode(
+        self,
+        plan,
+        regions: Sequence[Tuple[int, Sequence[int]]],
+        core_bytes: int,
+        n_neighbors: int,
+        axis: Optional[str] = None,
+    ) -> Tuple[str, Dict[str, OverlapEstimate], bool]:
+        """Pick monolithic vs region-split overlap for one exchange,
+        pinned as an ``overlap/mode=...`` decision exactly like the
+        ``program/s=N`` depth choice: a cache hit with that strategy
+        prefix short-circuits pricing (returns ``pinned=True``); a miss
+        prices both modes on the system tables, records the choice with
+        the rejected price in the signature, and returns it.  Ties go to
+        ``monolithic`` — region-split must *win*, not draw, to buy its
+        extra scheduling machinery."""
+        regions = tuple(
+            (int(rb), tuple(sorted(int(c) for c in deps)))
+            for rb, deps in regions
+        )
+        key_src = (
+            "overlap.v1", plan.fingerprint, int(core_bytes),
+            int(n_neighbors), regions,
+        )
+        fp = hashlib.sha256(repr(key_src).encode()).hexdigest()[:16]
+        ests = self.price_overlap(
+            plan, regions, core_bytes, n_neighbors, axis
+        )
+        if self.decisions is not None:
+            pin = self.decisions.lookup(fp, 0, 1, True)
+            if pin is not None and pin.strategy.startswith("overlap/mode="):
+                mode = pin.strategy.split("=", 1)[1]
+                if mode in ests:
+                    return mode, ests, True
+        mode = (
+            "region"
+            if ests["region"].t_total < ests["monolithic"].t_total
+            else "monolithic"
+        )
+        if self.decisions is not None:
+            best = ests[mode]
+            self.decisions.record(
+                fp, 0, 1, True,
+                StrategyEstimate(
+                    f"overlap/mode={mode}",
+                    t_pack=best.t_core + sum(best.t_rims),
+                    t_link=best.t_wire,
+                    t_unpack=0.0,
+                    wire_bytes=plan.issued_bytes,
+                ),
+                signature=(
+                    f"overlap plan={plan.fingerprint}"
+                    f" classes={plan.ngroups} regions={len(regions)}"
+                    f" core_B={int(core_bytes)} "
+                    + " ".join(
+                        f"{m}:{e.t_total:.3e}"
+                        for m, e in sorted(ests.items())
+                    )
+                ),
+            )
+        return mode, ests, False
 
     # -- deep-halo program pricing (exchange vs redundant compute) ------
     def _redundant_time(

@@ -123,6 +123,21 @@ class WirePlan:
         return self.issued_bytes - self.wire_bytes
 
     @property
+    def class_cum_bytes(self) -> Tuple[int, ...]:
+        """Cumulative wire bytes through each delta class, in issue
+        order.  Under the grouped schedule the k-th per-class collective
+        cannot complete before every earlier class's bytes have been on
+        the wire, so ``class_cum_bytes[k]`` is the byte term of class
+        ``k``'s completion time (``PerfModel.price_class_completions``);
+        fused schedules complete all classes together at
+        ``issued_bytes``."""
+        out, cum = [], 0
+        for grp in self.groups:
+            cum += grp.nbytes
+            out.append(cum)
+        return tuple(out)
+
+    @property
     def fingerprint(self) -> str:
         """Stable content hash of the layout (keys DecisionCache rows
         for exchange pricing, as ``CommittedType.fingerprint`` keys

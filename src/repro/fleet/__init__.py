@@ -42,6 +42,7 @@ from repro.fleet.telemetry import (
     TELEMETRY_FORMAT,
     ExchangeTelemetry,
     RingAggregate,
+    predict_class_completions,
     predict_program_iteration,
     predict_program_phases,
 )
@@ -64,6 +65,7 @@ __all__ = [
     "diff_bundles",
     "load_bundle",
     "merge_bundles",
+    "predict_class_completions",
     "predict_program_iteration",
     "predict_program_phases",
     "promote",

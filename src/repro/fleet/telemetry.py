@@ -51,6 +51,7 @@ __all__ = [
     "DEFAULT_WINDOW",
     "RingAggregate",
     "ExchangeTelemetry",
+    "predict_class_completions",
     "predict_program_iteration",
     "predict_program_phases",
 ]
@@ -327,6 +328,23 @@ def predict_program_phases(program, model) -> Dict[str, float]:
     return {
         "pack": t_pack, "wire": t_wire, "unpack": t_unpack,
         "stencil": t_stencil,
+    }
+
+
+def predict_class_completions(program, model) -> Dict[str, float]:
+    """The model's per-delta-class wire-completion predictions for a
+    deep-halo program, keyed exactly like the Communicator's per-class
+    telemetry rows (``{wire_fingerprint}/c{g}``, the keys
+    :meth:`repro.comm.api.Communicator.plan_neighbor` registers when
+    the plan has more than one class).  Joining these against the
+    observed per-class drain latencies attributes drift to the slow
+    *direction* rather than the whole exchange — the region-split
+    overlap scheduler's feedback loop."""
+    wire = program.plan.wire
+    completions = model.price_class_completions(wire)
+    return {
+        f"{wire.fingerprint}/c{g}": float(t)
+        for g, t in enumerate(completions)
     }
 
 

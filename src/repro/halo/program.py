@@ -221,12 +221,17 @@ class HaloProgram:
         local: jax.Array,
         comm,
         axis_name: str = "ranks",
-        overlap: bool = False,
+        overlap=False,
         probe: Optional[dict] = None,
     ) -> jax.Array:
         """One program iteration: ONE fused exchange + ``steps`` repeats
         of the shrinking-region op cycle.  With ``overlap`` the wire op
-        hides behind the steps-deep interior chain.
+        hides behind the steps-deep interior chain: ``True`` (or
+        ``"monolithic"``) waits for the whole fused collective,
+        ``"region"`` drains per-delta-class requests and computes each
+        core/face/edge/corner region as its classes land, ``"auto"``
+        lets the model pick (pinned as ``overlap/mode=...`` — see
+        :func:`repro.halo.stencil.overlapped_stencil_iteration`).
 
         When the communicator carries a :class:`repro.obs.Tracer` and
         the call is eager (no jax trace, no tracer operands), the
@@ -237,9 +242,11 @@ class HaloProgram:
         boundary.  Jitted runs skip this entirely (the launch layer
         attributes compiled iterations instead)."""
         if overlap:
+            mode = "monolithic" if overlap is True else str(overlap)
             return overlapped_stencil_iteration(
                 local, self.spec, comm, axis_name,
                 steps=self.steps, probe=probe, plan=self.plan, op=self.ops,
+                mode=mode,
             )
         comm = as_communicator(comm)
         tracer = getattr(comm, "tracer", None)
@@ -459,11 +466,13 @@ def make_program_step(
     comm,
     mesh: Mesh,
     axis_name: str = "ranks",
-    overlap: bool = False,
+    overlap=False,
 ):
     """jit-compiled shard_map wrapper over one program iteration:
     (nranks*az, ay, ax) global array, sharded on the leading axis ->
-    one exchange + ``program.steps`` stencil applications."""
+    one exchange + ``program.steps`` stencil applications.  ``overlap``
+    is a bool or an overlap-mode string (``"monolithic"``/``"region"``/
+    ``"auto"``), forwarded to :meth:`HaloProgram.iteration`."""
     comm = as_communicator(comm)
 
     def step(local):

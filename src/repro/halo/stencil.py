@@ -48,7 +48,13 @@ from typing import List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.halo.exchange import HaloPlan, HaloSpec, ihalo_exchange
+from repro.halo.exchange import (
+    DIRECTIONS,
+    HaloPlan,
+    HaloSpec,
+    ihalo_exchange,
+    make_halo_plan,
+)
 from repro.kernels.ops import stencil_window_chain, stencil_window_update
 
 __all__ = [
@@ -66,6 +72,11 @@ __all__ = [
     "stencil26",
     "stencil26_interior",
     "stencil_iterations",
+    "OVERLAP_MODES",
+    "HaloRegion",
+    "halo_regions",
+    "overlap_region_descriptors",
+    "resolve_overlap_mode",
     "overlapped_stencil_iteration",
 ]
 
@@ -304,6 +315,204 @@ def stencil_iterations(local: jax.Array, spec: HaloSpec, steps: int) -> jax.Arra
 
 
 # ---------------------------------------------------------------------------
+# region decomposition: core + faces/edges/corners of the first application
+# ---------------------------------------------------------------------------
+
+#: how :func:`overlapped_stencil_iteration` hides the wire:
+#: ``monolithic`` waits for the fused collective then applies every rim
+#: at once; ``region`` drains delta classes and computes each rim region
+#: as its classes land; ``auto`` lets the model pick (pinned as an
+#: ``overlap/mode=...`` decision)
+OVERLAP_MODES = ("monolithic", "region", "auto")
+
+
+@dataclass(frozen=True)
+class HaloRegion:
+    """One region of the FIRST fused application's output window.
+
+    ``sig`` places it in the 3^3 core/face/edge/corner decomposition:
+    ``sig[a] == 0`` means the region's axis-``a`` span reads no halo in
+    that axis; ``-1``/``+1`` mean it reads the low/high halo shell.  The
+    core is ``(0, 0, 0)``; the 6 faces have one nonzero component, the
+    12 edges two, the 8 corners three (regions that come out empty for
+    the given geometry are dropped).
+
+    ``origin``/``shape`` locate the region in the local allocation (the
+    same coordinates :func:`stencil_apply` writes).  ``bands`` lists the
+    halo-shell bands the region's cells may read; ``transfers`` the
+    ``DIRECTIONS`` indices of the recv transfers that fill those bands —
+    the region may be computed as soon as exactly those transfers have
+    been unpacked.
+    """
+
+    sig: Tuple[int, int, int]
+    origin: Tuple[int, int, int]
+    shape: Tuple[int, int, int]
+    bands: Tuple[Tuple[int, int, int], ...]
+    transfers: Tuple[int, ...]
+
+    @property
+    def cells(self) -> int:
+        return self.shape[0] * self.shape[1] * self.shape[2]
+
+
+def halo_regions(spec: HaloSpec, op: Ops) -> Tuple[HaloRegion, ...]:
+    """Decompose the first application's output window into core +
+    faces/edges/corners.
+
+    Per axis the window ``[0, w)`` (``w = n + 2 * (hr - r)``, origin
+    ``r`` in the allocation) splits at ``m1 = min(hr, w)`` and
+    ``m2 = max(w - hr, m1)``: cells below ``m1`` read the low halo
+    shell, cells at ``m2`` and above read the high shell, the middle
+    reads neither.  The three intervals partition ``[0, w)`` by
+    construction — also when the interior is shallower than ``2r`` and
+    the low/high read-sets overlap; the cut then lands so each cell
+    stays in exactly one interval and the boundary intervals' dependency
+    sets widen to *both* sides.  A region is the product of one interval
+    per axis, so the nonempty regions exactly partition the window (the
+    property test asserts no overlap, no gap).
+
+    The dependency set is the per-axis product of ``{0} | sides`` minus
+    the all-zero band — a superset of the bands actually read (exact for
+    ``hr <= 2r``; for deeper halos a rim cell may skip the interior in
+    an axis, and the superset only ever delays that region's compute,
+    never corrupts it).
+    """
+    ops = as_ops(op)
+    first = ops[0]
+    axes = []
+    for n, hr, r in zip(spec.interior, spec.radii, first.radii):
+        shell = hr - r
+        o = r
+        w = n + 2 * shell
+        m1 = min(hr, w)
+        m2 = max(w - hr, m1)
+        low_sides = {-1} | ({+1} if m1 > w - hr else set())
+        high_sides = {+1} | ({-1} if m2 < hr else set())
+        axes.append({
+            -1: (o, m1, low_sides),
+            0: (o + m1, m2 - m1, set()),
+            +1: (o + m2, w - m2, high_sides),
+        })
+    regions = []
+    for sig in itertools.product((-1, 0, 1), repeat=3):
+        origin, shape, sides = [], [], []
+        for a, s in enumerate(sig):
+            start, length, sd = axes[a][s]
+            origin.append(start)
+            shape.append(length)
+            sides.append(sorted({0} | sd))
+        if any(length <= 0 for length in shape):
+            continue
+        bands = tuple(
+            b for b in itertools.product(*sides) if b != (0, 0, 0)
+        )
+        transfers = tuple(sorted(
+            DIRECTIONS.index((-b[0], -b[1], -b[2])) for b in bands
+        ))
+        regions.append(HaloRegion(
+            sig, tuple(origin), tuple(shape), bands, transfers
+        ))
+    return tuple(regions)
+
+
+def _transfer_classes(wire) -> dict:
+    """Transfer index -> delta-class index of the exchange's WirePlan."""
+    out = {}
+    for g, grp in enumerate(wire.groups):
+        for i in grp.transfers:
+            out[i] = g
+    return out
+
+
+def overlap_region_descriptors(
+    spec: HaloSpec, op: Ops, wire
+) -> Tuple[int, List[Tuple[int, Tuple[int, ...]]]]:
+    """Reduce the geometry to what the model prices: the core window
+    bytes plus one ``(window_bytes, dep_class_ids)`` pair per rim region
+    (:meth:`repro.comm.perfmodel.PerfModel.price_overlap` — the model
+    never sees halo coordinates, only bytes and dependencies)."""
+    eb = spec.element.size
+    cls_of = _transfer_classes(wire)
+    core_bytes = 0
+    rims: List[Tuple[int, Tuple[int, ...]]] = []
+    for reg in halo_regions(spec, op):
+        nb = reg.cells * eb
+        if reg.sig == (0, 0, 0):
+            core_bytes += nb
+        else:
+            deps = tuple(sorted({cls_of[i] for i in reg.transfers}))
+            rims.append((nb, deps))
+    return core_bytes, rims
+
+
+def resolve_overlap_mode(
+    spec: HaloSpec, comm, plan: HaloPlan, op: Ops = STENCIL26
+) -> str:
+    """Model-priced monolithic-vs-region choice for this exchange,
+    pinned as an ``overlap/mode=...`` decision
+    (:meth:`~repro.comm.perfmodel.PerfModel.choose_overlap_mode`)."""
+    ops = as_ops(op)
+    core_bytes, rims = overlap_region_descriptors(spec, ops, plan.wire)
+    mode, _, _ = comm.model.choose_overlap_mode(
+        plan.wire, rims, core_bytes, ops[0].nneighbors
+    )
+    return mode
+
+
+def _apply_region_split(req, spec: HaloSpec, ops: Tuple[StencilOp, ...],
+                        wire, chain_core, probe: Optional[dict]):
+    """The first fused application, region-split: drain delta classes in
+    completion order (``NeighborRequest.wait_any``) and compute each rim
+    region the moment its dependency classes have been unpacked.
+
+    Rim windows *read* overlapping cells (a face's neighborhood reaches
+    into the adjacent edges), so the computed windows are collected as
+    deferred patches and spliced only after every class has drained —
+    each region thus reads pre-application values exactly like the
+    monolithic full-window update, and the result is bit-identical.  The
+    core, when nonempty, is the interior chain's first block, computed
+    while the wire was in flight.
+    """
+    first = ops[0]
+    cls_of = _transfer_classes(wire)
+    rims = [r for r in halo_regions(spec, ops) if r.sig != (0, 0, 0)]
+    deps = [frozenset(cls_of[i] for i in r.transfers) for r in rims]
+    landed: set = set()
+    done = [False] * len(rims)
+    patches = []
+    order: List[Tuple[int, int, int]] = []
+
+    def sweep() -> None:
+        for i, reg in enumerate(rims):
+            if not done[i] and deps[i] <= landed:
+                win = stencil_window_update(
+                    req.buffer, first.offsets, first.weight,
+                    reg.origin, reg.shape,
+                )
+                patches.append((reg.origin, win))
+                done[i] = True
+                order.append(reg.sig)
+
+    while req.pending:
+        landed.add(req.wait_any().index)
+        sweep()
+    full = req.wait()
+    for origin, win in patches:
+        full = jax.lax.dynamic_update_slice(full, win, origin)
+    if chain_core is not None:
+        core_origin = tuple(
+            hr + r for hr, r in zip(spec.radii, first.radii)
+        )
+        full = jax.lax.dynamic_update_slice(full, chain_core, core_origin)
+    if probe is not None:
+        probe["rim_regions"] = len(rims)
+        probe["region_order"] = tuple(order)
+        probe["class_drain_order"] = tuple(req.drained)
+    return full
+
+
+# ---------------------------------------------------------------------------
 # overlap: the exchange hidden behind the interior chain
 # ---------------------------------------------------------------------------
 
@@ -317,6 +526,7 @@ def overlapped_stencil_iteration(
     probe: Optional[dict] = None,
     plan: Optional[HaloPlan] = None,
     op: Ops = STENCIL26,
+    mode: str = "monolithic",
 ) -> jax.Array:
     """One exchange + ``steps`` cycle repeats with the wire hidden behind
     steps-deep interior pipelining.
@@ -327,34 +537,69 @@ def overlapped_stencil_iteration(
     is in flight the :func:`stencil_interior_chain` precomputes every
     fused application's deep interior — not just the first one — so XLA
     sees ``depth + 1`` independent dataflows (collective ∥ chain) it is
-    free to overlap.  After ``wait()`` the real shrinking-region
-    applications run and each chain block is spliced over its (bit-
-    identical) region, keeping the early compute live in the graph
-    without changing the result.  Bit-identical to ``halo_exchange`` +
-    ``stencil_cycle``.
+    free to overlap.
+
+    ``mode`` picks how the first application consumes the wire
+    (:data:`OVERLAP_MODES`):
+
+    ``monolithic``  ``wait()`` for the whole fused exchange, then the
+                    shrinking-region applications run and each chain
+                    block is spliced over its (bit-identical) region.
+    ``region``      drain per-delta-class requests in completion order
+                    and compute each core/face/edge/corner region of the
+                    first application as *its* classes land
+                    (:func:`halo_regions`); applications ``2..`` follow
+                    the monolithic path.  Bit-identical to it.
+    ``auto``        the model prices both on the system tables and the
+                    choice is pinned as an ``overlap/mode=...`` decision
+                    (:func:`resolve_overlap_mode`).
+
+    All modes are bit-identical to ``halo_exchange`` + ``stencil_cycle``.
 
     ``probe``, when given, records ``pending_during_interior`` (the wire
     op was still pending when the chain was built — the overlap
-    invariant) and ``pipeline_depth`` (how many applications had a
-    nonempty deep interior to precompute).
+    invariant), ``pipeline_depth`` (how many applications had a nonempty
+    deep interior to precompute) and ``overlap_mode`` (the resolved
+    mode; region mode adds ``rim_regions``, ``region_order`` and
+    ``class_drain_order``).
     """
     ops = as_ops(op)
+    if mode not in OVERLAP_MODES:
+        raise ValueError(
+            f"unknown overlap mode {mode!r}; expected one of {OVERLAP_MODES}"
+        )
     if any(n > v for n, v in zip(cycle_halo_radii(ops, steps), spec.radii)):
         raise ValueError(
             f"halo radii {spec.radii} cannot host {steps} repeats of "
             f"cycle radii {cycle_radii(ops)}"
         )
+    if mode != "monolithic" and plan is None:
+        plan = make_halo_plan(spec, comm, types)
+    if mode == "auto":
+        mode = resolve_overlap_mode(spec, comm, plan, ops)
     depth = max_pipeline_depth(spec, ops, steps)
     req = ihalo_exchange(local, spec, comm, axis_name, types, plan)  # wire NOW
     chain = stencil_interior_chain(local, spec, depth, ops)  # overlaps the wire
     if probe is not None:
         probe["pending_during_interior"] = not req.completed
         probe["pipeline_depth"] = depth
-    full = req.wait()
+        probe["overlap_mode"] = mode
     valid = spec.radii
     seq = op_sequence(ops, steps)
     shrink = _cum_shrink(ops, len(seq))
+    if mode == "region":
+        full = _apply_region_split(
+            req, spec, ops, plan.wire,
+            chain[0] if depth >= 1 else None, probe,
+        )
+        valid = tuple(v - r for v, r in zip(valid, ops[0].radii))
+        first_k = 2
+    else:
+        full = req.wait()
+        first_k = 1
     for k, o in enumerate(seq, 1):
+        if k < first_k:
+            continue
         full = stencil_apply(full, spec, valid, o)
         valid = tuple(v - r for v, r in zip(valid, o.radii))
         if k <= depth:

@@ -94,6 +94,7 @@ def run_smoother(
     axis_name: str = "data",
     seed: int = 0,
     devices=None,
+    overlap: str = "off",
 ) -> SmootherReport:
     """Smooth a sharded 3D field with one fused deep-halo program.
 
@@ -105,8 +106,20 @@ def run_smoother(
     this is the end-to-end path for the fusion-depth seam: with
     ``"auto"`` the depth is priced on the communicator's calibrated
     tables and recorded/pinned in its decisions cache.
+
+    ``overlap`` selects exchange/compute overlap for the compiled step:
+    ``"off"`` (the plain exchange-then-cycle iteration) or an overlap
+    mode — ``"monolithic"``, ``"region"`` (per-delta-class drains feed
+    the core/face/edge/corner region scheduler), or ``"auto"`` (the
+    model picks and pins an ``overlap/mode=...`` decision).  All modes
+    are bit-identical; the checksum must not move.
     """
     comm = as_communicator(comm)
+    if overlap not in ("off", "monolithic", "region", "auto"):
+        raise ValueError(
+            f"unknown overlap {overlap!r}; expected off, monolithic, "
+            "region or auto"
+        )
     devs = list(devices if devices is not None else jax.devices())
     R = len(devs)
     grid = (R, 1, 1)
@@ -115,7 +128,10 @@ def run_smoother(
         grid, interior, comm, ops=ops, steps=halo_steps
     )
     mesh = Mesh(np.array(devs), (axis_name,))
-    step = make_program_step(program, comm, mesh, axis_name)
+    step = make_program_step(
+        program, comm, mesh, axis_name,
+        overlap=False if overlap == "off" else overlap,
+    )
 
     nz, ny, nx = interior
     rz, ry, rx = program.spec.radii
@@ -151,6 +167,18 @@ def run_smoother(
             telemetry.register(
                 program.fingerprint, predicted, f"program/s={program.steps}"
             )
+        # overlap runs care about per-direction completion: attribute
+        # the wire span across the delta classes in the model's
+        # predicted completion profile so a slow link is visible per
+        # class, not just per exchange
+        class_pred: Tuple[float, ...] = ()
+        if overlap != "off" and tracer is not None:
+            try:
+                class_pred = tuple(
+                    comm.model.price_class_completions(program.plan.wire)
+                )
+            except Exception:
+                class_pred = ()
         try:
             run = step.lower(x).compile()
         except AttributeError:  # not a jit-wrapped callable
@@ -167,7 +195,8 @@ def run_smoother(
                 from repro.obs.trace import attribute_program_iteration
 
                 attribute_program_iteration(
-                    tracer, program, t0, dt, phases, iteration=i
+                    tracer, program, t0, dt, phases, iteration=i,
+                    class_pred=class_pred,
                 )
     out = np.asarray(x).reshape(R, az, ay, ax)
     checksum = float(
@@ -197,6 +226,13 @@ def main() -> None:
                     help="interior cube side per rank")
     ap.add_argument("--cycle", default="predictor-corrector", choices=CYCLES)
     ap.add_argument("--halo-steps", default="auto", metavar="auto|N")
+    ap.add_argument("--overlap", default="off",
+                    choices=("off", "monolithic", "region", "auto"),
+                    help="exchange/compute overlap for the compiled "
+                         "step: off, monolithic (one wait), region "
+                         "(per-delta-class drains feed the core/rim "
+                         "scheduler), or auto (model-priced, pinned "
+                         "as an overlap/mode=... decision)")
     ap.add_argument("--comm-cache", default=None, metavar="DIR",
                     help="measure-store root for the production "
                          "communicator (calibrated params + decisions "
@@ -241,7 +277,7 @@ def main() -> None:
     )
     n = args.interior
     report = run_smoother(comm, iters=args.iters, interior=(n, n, n),
-                          cycle=args.cycle)
+                          cycle=args.cycle, overlap=args.overlap)
     print(report.summary)
     if args.trace:
         from repro.obs.export import save_chrome_trace

@@ -14,6 +14,9 @@ per phase, per exchange, without the model in hand.
 * well-formed Chrome-trace JSON (``traceEvents`` list of timed events);
 * every ``exchange`` span carries a decision signature (``fingerprint``
   + ``strategy``);
+* every ``wire_class`` span (per-delta-class completion, region-split
+  overlap) identifies its class: a ``class`` index plus the wire-plan
+  key (``fingerprint`` on eager drains, ``key`` on attributed ones);
 * communication avoidance holds: a ``program_iteration`` span with
   fusion depth ``s`` contains at most ONE exchange and at least
   ``s`` stencil applications — exchanges per application <= 1/s.
@@ -44,6 +47,7 @@ _CATEGORIES = {
     "plan": "comm",
     "pack": "comm",
     "wire": "comm",
+    "wire_class": "comm",
     "unpack": "comm",
     "stencil": "compute",
 }
@@ -292,6 +296,16 @@ def validate(trace: dict) -> List[str]:
                         f"exchange span {s.span_id}: no decision "
                         f"signature ({k} missing)"
                     )
+        if s.name == "wire_class":
+            if s.attrs.get("class") is None:
+                errors.append(
+                    f"wire_class span {s.span_id}: no class index"
+                )
+            if not (s.attrs.get("fingerprint") or s.attrs.get("key")):
+                errors.append(
+                    f"wire_class span {s.span_id}: no wire-plan key "
+                    "(fingerprint/key missing)"
+                )
         if s.name == "program_iteration":
             steps = int(s.attrs.get("steps", 1) or 1)
             ex = [c for c in kids.get(s.span_id, ())

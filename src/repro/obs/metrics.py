@@ -6,10 +6,13 @@ named scalars a host can snapshot at any point:
 
 counters (cumulative)
     exchanges issued (``comm.wire_ops``), exact payload bytes moved
-    (``comm.wire_payload_bytes``), decision-cache hits/misses, drift
-    findings.
+    (``comm.wire_payload_bytes``), per-delta-class issue tallies
+    (``comm.wire_class.<plan>/c<g>.ops`` / ``.bytes``), decision-cache
+    hits/misses, drift findings.
 gauges (instantaneous)
-    telemetry ring occupancy (how full the observation windows are).
+    telemetry ring occupancy (how full the observation windows are),
+    per-delta-class drain position from the last region-split drain
+    (``comm.wire_class.<plan>/c<g>.drain_order``).
 
 :meth:`repro.comm.api.Communicator.stats` publishes its counters here
 on every call (see :func:`publish_comm_stats`), and
@@ -150,6 +153,13 @@ def publish_comm_stats(
     m.set_counter("comm.exchanges", stats.get("wire_ops", 0))
     m.set_counter("comm.wire_payload_bytes",
                   stats.get("wire_payload_bytes", 0))
+    m.set_counter("comm.wire_classes", stats.get("wire_classes", 0))
+    for key, v in (stats.get("wire_class_ops") or {}).items():
+        m.set_counter(f"comm.wire_class.{key}.ops", v)
+    for key, v in (stats.get("wire_class_bytes") or {}).items():
+        m.set_counter(f"comm.wire_class.{key}.bytes", v)
+    for key, v in (stats.get("wire_class_drains") or {}).items():
+        m.set_gauge(f"comm.wire_class.{key}.drain_order", v)
     m.set_counter("comm.committed_types", stats.get("committed_types", 0))
     m.set_counter("comm.commit_hits", stats.get("commit_hits", 0))
     hits = stats.get("model_hits", 0)

@@ -14,6 +14,8 @@ independently.  This module records that decomposition as it happens:
         exchange                   (the fused collective, decision-keyed)
           plan                     (host-side WirePlan construction)
           pack / wire / unpack     (the paper's three phases)
+            wire_class × classes   (per-delta-class completion, under
+                                    wire/unpack — region-split overlap)
         stencil × applications     (per-application compute)
 
   Every ``exchange`` span carries the decision signature: the
@@ -44,7 +46,7 @@ from __future__ import annotations
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Sequence
 
 import jax
 
@@ -201,6 +203,7 @@ def attribute_program_iteration(
     seconds: float,
     phases: Dict[str, float],
     iteration: Optional[int] = None,
+    class_pred: Sequence[float] = (),
 ) -> Optional[Span]:
     """Record one *compiled* deep-halo iteration as an attributed span
     tree.
@@ -214,6 +217,14 @@ def attribute_program_iteration(
     span ``attributed=True`` so consumers know the split is model-shaped
     while the totals are measured.  The ``exchange`` child carries the
     program's full decision signature.
+
+    ``class_pred`` (the model's per-delta-class completion times, from
+    :meth:`~repro.comm.perfmodel.PerfModel.price_class_completions`)
+    additionally attributes the wire span across its delta classes:
+    one ``wire_class`` child per class, each spanning wire-start to its
+    predicted completion fraction of the wire span — the per-direction
+    view drift attribution uses to see which link is slow when the
+    iteration runs region-split overlap.
     """
     total = sum(phases.values())
     if total <= 0.0 or not tracer.enabled:
@@ -251,7 +262,17 @@ def attribute_program_iteration(
     for ph in ("pack", "wire", "unpack"):
         p = phases.get(ph, 0.0)
         d = p * scale
-        alloc(ph, cursor, d, ex_id, {"pred": p, "attributed": True})
+        sp = alloc(ph, cursor, d, ex_id, {"pred": p, "attributed": True})
+        if ph == "wire" and sp is not None and class_pred:
+            # per-delta-class completion profile: each class's span runs
+            # wire-start -> its predicted completion fraction
+            last = max(class_pred) or 1.0
+            for g, tc in enumerate(class_pred):
+                alloc("wire_class", cursor, d * (float(tc) / last),
+                      sp.span_id,
+                      {"pred": float(tc), "attributed": True,
+                       "class": g,
+                       "key": f"{wire.fingerprint}/c{g}"})
         cursor += d
     napp = max(program.applications, 1)
     pred_st = phases.get("stencil", 0.0)
