@@ -38,6 +38,17 @@ overlap path on the 2x2x2 grid, and ``choose_overlap_mode`` on the
 checked-in ``ci_params.json`` tables must pick a mode priced no worse
 than monolithic, record it as an ``overlap/mode=...`` decision, and pin
 it on the rerun.
+
+``--assert-scale`` runs the simulated-scale gate (CI): sweep the
+predicted schedule ladder (``PerfModel.at_scale``) over rank counts up
+to the paper's 3072-process regime on the checked-in ``ci_params.json``
+under a synthetic two-tier topology, and FAIL unless the model flips to
+the ``tiered`` (inter-node coalesced) schedule at the large-rank end
+with strictly fewer slow-tier messages than per-class grouped at equal
+payload bytes, the best predicted cost is non-decreasing in rank count,
+the flip is pinned as a topology-keyed decision that replays, and an
+elastic remesh (``replan_on_remesh``) provably demotes the pin instead
+of replaying it.
 """
 
 from __future__ import annotations
@@ -418,17 +429,90 @@ print("OVERLAP_MODE_OK")
 """
 
 
+#: the simulated-scale gate (CI): the measured tables + a synthetic
+#: two-tier topology must predict the paper-regime behavior — the wire
+#: schedule flips to tier-coalesced as ranks grow, with strictly fewer
+#: slow-tier messages than per-class grouped at equal payload, pinned
+#: as a topology-keyed decision an elastic remesh provably demotes
+_SCALE_ASSERT_CODE = r"""
+from types import SimpleNamespace
+
+from repro.comm import PerfModel, Topology, scale_ladder, synthetic_two_tier
+from repro.measure import DecisionCache, load_ci_params
+from repro.train.elastic import replan_on_remesh
+
+RPN = 8
+RANKS = (8, 16, 64, 256, 1024, 3072)
+params = synthetic_two_tier(load_ci_params())
+dc = DecisionCache()
+model = PerfModel(params, decisions=dc)
+ladder = scale_ladder(model, RANKS, RPN)
+for e in ladder:
+    print(f"scale/{e.ranks}: nodes={e.nodes} grid={e.grid} "
+          f"best={e.schedule} wire_bytes={e.wire_bytes} "
+          f"corr={e.correction_bytes} inter={e.inter_messages} "
+          + " ".join(f"{s}={c:.3e}" for s, c in sorted(e.costs.items())))
+
+# the ladder flips: single-node scales plan flat, the 3072-rank end is
+# tier-coalesced and stays tier-coalesced above the flip point
+top = ladder[-1]
+assert top.ranks == 3072 and top.schedule == "tiered", top
+assert ladder[0].schedule != "tiered", ladder[0]
+flip = next(e.ranks for e in ladder if e.schedule == "tiered")
+assert all(e.schedule == "tiered" for e in ladder if e.ranks >= flip)
+print(f"scale/flip: tiered from {flip} ranks")
+
+# above the flip: tiered never worse than per-class grouped, and it
+# sends strictly fewer slow-tier messages at the same payload bytes
+# (the costs dict prices every schedule on the same ScalePlan, so
+# wire_bytes is equal by construction; the correction bytes tiered
+# buys ride the fast tier and are accounted separately)
+for e in ladder:
+    if e.ranks < flip:
+        continue
+    assert e.costs["tiered"] <= e.costs["grouped"], (e.ranks, e.costs)
+    assert e.inter_messages["tiered"] < e.inter_messages["grouped"], e
+    assert e.correction_bytes > 0, e
+
+# the predicted best exchange cost is non-decreasing in rank count
+best = [min(e.costs.values()) for e in ladder]
+assert all(b >= a - 1e-15 for a, b in zip(best, best[1:])), best
+
+# the flip is pinned as a topology-keyed decision and replays
+rows = [d for d in dc.log
+        if d.strategy == "wire/tiered" and "topo=" in d.signature]
+assert rows, dc.report()
+again = model.at_scale(3072, ranks_per_node=RPN)
+assert again.pinned and again.schedule == "tiered", again
+print(f"scale/pin: {rows[0].strategy}@{rows[0].fingerprint} replayed")
+
+# elastic remesh: rebinding to a reshaped topology demotes every
+# topology-sensitive pin recorded under the old shapes — the next
+# at_scale re-prices from scratch instead of replaying a stale pin
+npins = len(dc)
+rep = replan_on_remesh(SimpleNamespace(model=model),
+                       Topology.blocked(2048, RPN))
+assert rep.npruned == npins, (rep.npruned, npins)
+assert len(dc) == 0, dc.report()
+redo = model.at_scale(3072, ranks_per_node=RPN)
+assert not redo.pinned and redo.schedule == "tiered", redo
+print(f"scale/replan: pruned {rep.npruned} pins, re-priced fresh")
+print("SCALE_OK")
+"""
+
+
 def run(assert_ragged: bool = False, assert_program: bool = False,
-        assert_overlap: bool = False, padded_allowance: float = None) -> None:
+        assert_overlap: bool = False, assert_scale: bool = False,
+        padded_allowance: float = None) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
     if padded_allowance is not None:
         env["REPRO_PADDED_ALLOWANCE"] = str(padded_allowance)
-    gate = assert_ragged or assert_program or assert_overlap
-    # both gates run when both flags are given — combining flags must
-    # never silently drop a regression check
+    gate = assert_ragged or assert_program or assert_overlap or assert_scale
+    # all requested gates run when several flags are given — combining
+    # flags must never silently drop a regression check
     jobs = []
     if assert_ragged:
         jobs.append((_ASSERT_CODE, "WIRE_BYTES_OK"))
@@ -437,6 +521,8 @@ def run(assert_ragged: bool = False, assert_program: bool = False,
         jobs.append((_CYCLE_ASSERT_CODE, "CYCLE_OK"))
     if assert_overlap:
         jobs.append((_OVERLAP_ASSERT_CODE, "OVERLAP_MODE_OK"))
+    if assert_scale:
+        jobs.append((_SCALE_ASSERT_CODE, "SCALE_OK"))
     if not jobs:
         jobs.append((_CODE, None))
     for code, ok_token in jobs:
@@ -464,5 +550,6 @@ if __name__ == "__main__":
         assert_ragged="--assert-ragged" in argv,
         assert_program="--assert-program" in argv,
         assert_overlap="--assert-overlap" in argv,
+        assert_scale="--assert-scale" in argv,
         padded_allowance=allowance,
     )

@@ -1,4 +1,4 @@
-"""Machine-readable perf snapshot: ``BENCH_8.json``.
+"""Machine-readable perf snapshot: ``BENCH_9.json``.
 
 The CSV suites report human-scannable tables; this suite records the
 numbers a perf *trajectory* needs — one JSON file per run, stable keys,
@@ -6,10 +6,10 @@ diffable run over run.  Times are CPU-container proxies (see
 ``benchmarks/common.py``): the values that transfer to TPU are the
 byte counts, the relative orderings, and the probe overhead ratios.
 
-Schema (``"format": 1``)::
+Schema (``"format": 2``)::
 
     {
-      "format": 1,                      # bump on incompatible change
+      "format": 2,                      # bump on incompatible change
       "suite": "snapshot",
       "halo": {                         # the smoother's fused program
         "fingerprint": str,             # program decision key
@@ -36,7 +36,25 @@ Schema (``"format": 1``)::
           "off": float,                 #   iteration, per overlap mode
           "monolithic": float,          #   (all bit-identical; the
           "region": float               #   checksum gate asserts it)
+        },
+        "drift": {                      # measured-vs-pinned audit (PR 9):
+          "observed_ratio": float,      #   chosen / best alternative mode
+          "margin": float,              #   DEFAULT_OVERLAP_MARGIN
+          "drifted": bool,              #   ratio > margin
+          "demoted": [str]              #   pins demote_stale_modes pruned
         }
+      },
+      "scale": {                        # simulated-scale ladder (PR 9):
+        "ranks_per_node": int,          #   ci_params + synthetic two-tier
+        "flip_ranks": int,              # first rung planning tiered
+        "ladder": [{                    # one row per simulated rank count
+          "ranks": int, "nodes": int,
+          "schedule": str,              # model-cheapest wire schedule
+          "costs": {str: float},        # schedule -> predicted seconds
+          "wire_bytes": int,
+          "correction_bytes": int,      # tiered's extra fast-tier bytes
+          "inter_messages": {str: int}  # slow-tier messages per rank
+        }]
       },
       "probes": {                       # observability self-cost
         "telemetry_overhead": float,    # probe cost / iteration cost
@@ -45,7 +63,7 @@ Schema (``"format": 1``)::
       }
     }
 
-Run via ``python -m benchmarks.run snapshot`` (writes ``BENCH_8.json``
+Run via ``python -m benchmarks.run snapshot`` (writes ``BENCH_9.json``
 in the CWD) or ``python -m benchmarks.bench_snapshot --out PATH``.
 """
 
@@ -62,8 +80,13 @@ from benchmarks.bench_measure import (
 )
 from benchmarks.common import emit
 
-SNAPSHOT_FORMAT = 1
-SNAPSHOT_FILENAME = "BENCH_8.json"
+SNAPSHOT_FORMAT = 2
+SNAPSHOT_FILENAME = "BENCH_9.json"
+
+#: the simulated-scale sweep: fixed ranks-per-node, rank counts up to
+#: the paper's 3072-process regime (same sweep --assert-scale gates on)
+SCALE_RANKS = (8, 16, 64, 256, 1024, 3072)
+SCALE_RANKS_PER_NODE = 8
 
 
 def snapshot(iters: int = 10) -> dict:
@@ -119,6 +142,66 @@ def snapshot(iters: int = 10) -> dict:
     assert len(checksums) == 1, (
         f"overlap modes disagree on the checksum: {checksums}"
     )
+
+    # measured-vs-pinned overlap audit: the per-mode wall times just
+    # collected are the ground truth the pinned overlap/mode= decision
+    # claims to have won — feed them to the drift detector; an
+    # out-of-band pin is demoted so the next run re-prices
+    from repro.fleet.drift import (
+        DEFAULT_OVERLAP_MARGIN,
+        DriftDetector,
+        demote_stale_modes,
+    )
+
+    overlap_rows = [
+        d for d in decisions.log if d.strategy.startswith("overlap/mode=")
+    ]
+    audit = DriftDetector().audit(
+        decisions, comm2.model.params, system="snapshot",
+        overlap_timings={d.fingerprint: overlap_iter for d in overlap_rows},
+    )
+    overlap_findings = [
+        f for f in audit.findings if f.strategy.startswith("overlap/mode=")
+    ]
+    demoted = demote_stale_modes(decisions, audit)
+    overlap_drift = {
+        "observed_ratio": (
+            overlap_findings[0].observed_ratio if overlap_findings else 0.0
+        ),
+        "margin": DEFAULT_OVERLAP_MARGIN,
+        "drifted": any(f.drifted for f in overlap_findings),
+        "demoted": demoted,
+    }
+
+    # the simulated-scale ladder on the checked-in CI tables under a
+    # synthetic two-tier topology — the trajectory record of where the
+    # schedule flips to tier-coalesced (--assert-scale gates the shape)
+    from repro.comm import PerfModel, scale_ladder, synthetic_two_tier
+    from repro.measure import load_ci_params
+
+    smodel = PerfModel(synthetic_two_tier(load_ci_params()))
+    ladder = scale_ladder(
+        smodel, SCALE_RANKS, SCALE_RANKS_PER_NODE, pin=False
+    )
+    flip = next(
+        (e.ranks for e in ladder if e.schedule == "tiered"), 0
+    )
+    scale = {
+        "ranks_per_node": SCALE_RANKS_PER_NODE,
+        "flip_ranks": int(flip),
+        "ladder": [
+            {
+                "ranks": e.ranks,
+                "nodes": e.nodes,
+                "schedule": e.schedule,
+                "costs": {s: c for s, c in sorted(e.costs.items())},
+                "wire_bytes": int(e.wire_bytes),
+                "correction_bytes": int(e.correction_bytes),
+                "inter_messages": dict(e.inter_messages),
+            }
+            for e in ladder
+        ],
+    }
     return {
         "format": SNAPSHOT_FORMAT,
         "suite": "snapshot",
@@ -143,7 +226,9 @@ def snapshot(iters: int = 10) -> dict:
                 m: e.t_total for m, e in sorted(ests.items())
             },
             "iteration_mean_s": overlap_iter,
+            "drift": overlap_drift,
         },
+        "scale": scale,
         "probes": {
             "telemetry_overhead": telemetry_overhead(iters=iters),
             "trace_overhead": trace_overhead(iters=iters),
@@ -166,6 +251,17 @@ def run(out: str = SNAPSHOT_FILENAME) -> Path:
     for m, v in snap["overlap"]["iteration_mean_s"].items():
         emit(f"snapshot/overlap-iter-{m}", v * 1e6,
              f"chosen={snap['overlap']['chosen_mode']}")
+    od = snap["overlap"]["drift"]
+    emit("snapshot/overlap-drift-ratio", od["observed_ratio"],
+         f"margin={od['margin']};drifted={od['drifted']}"
+         f";demoted={len(od['demoted'])}")
+    emit("snapshot/scale-flip-ranks", float(snap["scale"]["flip_ranks"]),
+         f"ranks_per_node={snap['scale']['ranks_per_node']}")
+    for row in snap["scale"]["ladder"]:
+        emit(f"snapshot/scale-{row['ranks']}",
+             row["costs"][row["schedule"]] * 1e6,
+             f"schedule={row['schedule']};nodes={row['nodes']}"
+             f";inter={row['inter_messages'].get('tiered', 0)}")
     emit("snapshot/telemetry-overhead-pct",
          snap["probes"]["telemetry_overhead"] * 100.0,
          f"budget={snap['probes']['budget'] * 100:.0f}%")

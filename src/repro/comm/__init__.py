@@ -38,8 +38,21 @@ from repro.comm.perfmodel import (
     StrategyEstimate,
     SystemParams,
     TPU_V5E,
+    synthetic_two_tier,
+)
+from repro.comm.scale import (
+    ScaleEstimate,
+    ScalePlan,
+    build_scale_plan,
+    scale_ladder,
+)
+from repro.comm.topology import (
+    LINK_CLASSES,
+    Topology,
+    classify_and_coalesce,
 )
 from repro.comm.wireplan import (
+    WIRE_SCHEDULES,
     WireGroup,
     collective_payload_bytes,
     plan_wire,
@@ -65,6 +78,7 @@ __all__ = [
     "RLE_WIRE",
     "RleWire",
     "Interposer",
+    "LINK_CLASSES",
     "MODES",
     "ModelPolicy",
     "NeighborRequest",
@@ -73,15 +87,21 @@ __all__ = [
     "Policy",
     "ProgramEstimate",
     "Request",
+    "ScaleEstimate",
+    "ScalePlan",
     "SendRequest",
     "Strategy",
     "StrategyEstimate",
     "StrategyRegistry",
     "SystemParams",
     "TPU_V5E",
+    "Topology",
+    "WIRE_SCHEDULES",
     "WireGroup",
     "WirePlan",
     "as_communicator",
+    "build_scale_plan",
+    "classify_and_coalesce",
     "collective_payload_bytes",
     "default_registry",
     "plan_neighbor_alltoallv",
@@ -90,4 +110,6 @@ __all__ = [
     "register_strategy",
     "reschedule",
     "resolve_strategy",
+    "scale_ladder",
+    "synthetic_two_tier",
 ]

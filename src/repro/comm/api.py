@@ -868,6 +868,13 @@ class Communicator:
         trace nothing records, and fused compiled iterations are
         attributed from the launch layer instead
         (:func:`repro.obs.trace.attribute_program_iteration`).
+    topology: optional :class:`repro.comm.topology.Topology` — the
+        rank -> node map of a two-level machine.  Wire plans pick up
+        link-class annotations, pricing charges the slow tier per
+        crossing class, the ``tiered`` coalesced schedule joins the
+        candidate set, and every wire/program decision signature gains
+        the topology fingerprint (``train.elastic.replan_on_remesh``
+        re-prices when it changes).
     """
 
     def __init__(
@@ -880,11 +887,18 @@ class Communicator:
         decisions=None,
         telemetry=None,
         tracer=None,
+        topology=None,
     ):
         self.axis_name = axis_name
         self.registry = registry or TypeRegistry()
         self.strategies = strategies or default_registry()
-        self.model = PerfModel(params, decisions=decisions, axis=axis_name)
+        #: optional repro.comm.topology.Topology (rank -> node): wire
+        #: plans get link-class annotations, the model prices each delta
+        #: class by the slowest tier it crosses, and the ``tiered``
+        #: (per-peer-node coalesced) schedule becomes a candidate
+        self.model = PerfModel(
+            params, decisions=decisions, axis=axis_name, topology=topology
+        )
         self.policy = policy or ModelPolicy()
         self.telemetry = telemetry
         self.tracer = tracer
@@ -1114,6 +1128,7 @@ class Communicator:
             tuple(tuple(map(tuple, p)) for p in perms),
             fingerprints=tuple(s.fingerprint for s in segs),
             uniform_waste_tolerance=uniform_waste_tolerance,
+            topology=self.model.topology,
         )
         note = ""
         if schedule_policy == "model":
@@ -1158,6 +1173,60 @@ class Communicator:
                 payload = lax.dynamic_slice(wire, (goff,), (grp.nbytes,))
                 rows.append(lax.ppermute(payload, axis, list(grp.perm)))
             return rows
+
+        if plan.schedule == "tiered":
+            # two-level transport: fast-tier classes go per-class like
+            # grouped; every inter-tier bundle travels as ONE coalesced
+            # collective along its representative's permutation (the
+            # concatenated payload lands on the right peer NODE), then
+            # each non-representative member is forwarded to its true
+            # destination rank by an intra-node correction hop — the
+            # edge (dst_g0(r), dst_g(r)) stays on-node by the bundle-key
+            # invariant and composes two bijections, so it is itself a
+            # valid permutation
+            if plan.link_classes is None:
+                raise ValueError("tiered schedule on an unannotated plan")
+            out: List[Optional[jax.Array]] = [None] * len(plan.groups)
+            bundled = {g for b in plan.tier_bundles for g in b}
+            for g, (goff, grp) in enumerate(
+                zip(plan.group_offsets, plan.groups)
+            ):
+                if g in bundled:
+                    continue
+                payload = lax.dynamic_slice(wire, (goff,), (grp.nbytes,))
+                out[g] = lax.ppermute(payload, axis, list(grp.perm))
+            for b in plan.tier_bundles:
+                g0 = b[0]
+                parts = [
+                    lax.dynamic_slice(
+                        wire,
+                        (plan.group_offsets[g],),
+                        (plan.groups[g].nbytes,),
+                    )
+                    for g in b
+                ]
+                payload = (
+                    jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+                )
+                got = lax.ppermute(
+                    payload, axis, list(plan.groups[g0].perm)
+                )
+                d0 = dict(plan.groups[g0].perm)
+                off = 0
+                for g in b:
+                    part = lax.dynamic_slice(
+                        got, (off,), (plan.groups[g].nbytes,)
+                    )
+                    off += plan.groups[g].nbytes
+                    if g == g0:
+                        out[g] = part
+                    else:
+                        dg = dict(plan.groups[g].perm)
+                        corr = [
+                            (d0[r], dg[r]) for r in range(plan.nranks)
+                        ]
+                        out[g] = lax.ppermute(part, axis, corr)
+            return out
 
         if plan.schedule == "uniform":
             parts = []

@@ -38,6 +38,7 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.commit import CommittedType
+from repro.comm.topology import Topology
 
 __all__ = [
     "SystemParams",
@@ -46,6 +47,7 @@ __all__ = [
     "OverlapEstimate",
     "PerfModel",
     "TPU_V5E",
+    "synthetic_two_tier",
 ]
 
 
@@ -113,6 +115,15 @@ class SystemParams:
     # wire_table remains the axis-agnostic fallback
     wire_tables: Optional[Dict[str, Table1D]] = None
     wire_fits: Optional[Dict[str, Tuple]] = None  # axis -> (latency, bw)
+    # per-LINK-CLASS wire measurements (STORE_FORMAT 5): a two-level
+    # machine has a fast intra-node tier and a slow inter-node tier, and
+    # t_link(link_class=...) consults these before the per-axis/flat
+    # tables.  Keys are "<class>" or "<axis>/<class>" for
+    # class in repro.comm.topology.LINK_CLASSES; pre-format-5 envelopes
+    # load with these None — the flat table then prices every class,
+    # i.e. everything is treated as ``intra``
+    link_tables: Optional[Dict[str, Table1D]] = None
+    link_fits: Optional[Dict[str, Tuple]] = None  # key -> (latency, bw)
     # measured stencil-application sweep: rows (log2_neighbors,
     # log2_window_bytes, sec) — prices the deep-halo redundant-compute
     # term from a real sweep instead of the contiguous-copy proxy
@@ -128,6 +139,10 @@ class SystemParams:
             self, "wire_tables", _freeze_axis_tables(self.wire_tables)
         )
         object.__setattr__(self, "wire_fits", _freeze_axis_fits(self.wire_fits))
+        object.__setattr__(
+            self, "link_tables", _freeze_axis_tables(self.link_tables)
+        )
+        object.__setattr__(self, "link_fits", _freeze_axis_fits(self.link_fits))
         object.__setattr__(self, "stencil_table", _freeze1d(self.stencil_table))
 
     def to_json(self) -> str:
@@ -145,6 +160,52 @@ class SystemParams:
 #: Analytic TPU v5e table (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
 #: ICI) — shipped for dry-run containers with no TPU to calibrate on.
 TPU_V5E = SystemParams(name="tpu_v5e_analytic")
+
+
+def synthetic_two_tier(
+    params: SystemParams,
+    latency_factor: float = 20.0,
+    bandwidth_factor: float = 4.0,
+) -> SystemParams:
+    """Derive a two-tier parameter set from single-tier measurements.
+
+    CI has no multi-node hardware, but the simulated-scale gate still
+    needs an ``inter`` tier to price.  This takes the params' flat (or
+    axis-default) wire sweep as the ``intra`` table and synthesizes the
+    ``inter`` table by degrading it — each row's time becomes
+    ``t * bandwidth_factor + (latency_factor - 1) * lat0`` with ``lat0``
+    the fitted (or analytic) one-hop latency, i.e. a link that is
+    ``bandwidth_factor`` x thinner and ``latency_factor`` x laggier, the
+    usual DCN-vs-ICI shape.  ``latency_factor = bandwidth_factor = 1``
+    gives ``inter == intra`` exactly — the oracle configuration under
+    which tier-aware pricing must reproduce flat pricing bit-for-bit.
+    """
+    table = params.wire_table
+    lat0 = params.wire_latency
+    bw0 = params.wire_bw
+    if not table:
+        # no sweep calibrated: build a two-point analytic table so the
+        # tiers are still priceable (dry-run containers)
+        lat0 = params.ici_latency
+        bw0 = params.ici_bw
+        table = tuple(
+            (float(x), lat0 + (2.0 ** x) / bw0) for x in (10.0, 22.0)
+        )
+    if lat0 is None:
+        lat0 = params.ici_latency
+    extra_lat = (latency_factor - 1.0) * lat0
+    inter = tuple(
+        (x, t * bandwidth_factor + extra_lat) for x, t in table
+    )
+    link_fits = {}
+    if lat0 is not None and bw0 is not None:
+        link_fits["intra"] = (lat0, bw0)
+        link_fits["inter"] = (lat0 * latency_factor, bw0 / bandwidth_factor)
+    return dataclasses.replace(
+        params,
+        link_tables={"intra": table, "inter": inter},
+        link_fits=link_fits or None,
+    )
 
 
 @dataclass(frozen=True)
@@ -324,7 +385,8 @@ class PerfModel:
     """
 
     def __init__(self, params: SystemParams = TPU_V5E, decisions=None,
-                 axis: Optional[str] = None):
+                 axis: Optional[str] = None,
+                 topology: Optional[Topology] = None):
         self.params = params
         #: optional repro.measure.decisions.DecisionCache — pins choices
         #: across processes and records the audit log
@@ -333,6 +395,11 @@ class PerfModel:
         #: bound to a multi-axis mesh's DCN axis must not price its
         #: links with the ICI sweep); per-call override on t_link
         self.axis = axis
+        #: optional rank->node map: annotated plans price each delta
+        #: class by the slowest link tier it crosses and the planner may
+        #: coalesce inter-tier classes (``tiered``); rebound by
+        #: ``train.elastic.replan_on_remesh`` when the machine reshapes
+        self.topology = topology
         self._cache: Dict[Tuple, StrategyEstimate] = {}
         # interpolators precomputed once per measured table, keyed by the
         # (frozen, hashable) table itself so their lifetime is tied to
@@ -418,14 +485,32 @@ class PerfModel:
             return p.wire_tables[axis], fit[0], fit[1]
         return p.wire_table, p.wire_latency, p.wire_bw
 
+    def _class_wire(self, axis: Optional[str], link_class: Optional[str]):
+        """(table, fitted latency, fitted bw) for one link CLASS of the
+        two-level hierarchy: the ``"<axis>/<class>"`` sweep when one
+        covers it, else the class-wide ``"<class>"`` sweep, else the
+        per-axis/flat fallback — so a flat calibration prices every
+        class as ``intra`` and ``link_class=None`` is bit-identical to
+        the pre-hierarchy model."""
+        p = self.params
+        if link_class is not None and p.link_tables:
+            a = axis if axis is not None else self.axis
+            keys = ((f"{a}/{link_class}",) if a is not None else ())
+            for key in keys + (link_class,):
+                if p.link_tables.get(key):
+                    fit = (p.link_fits or {}).get(key) or (None, None)
+                    return p.link_tables[key], fit[0], fit[1]
+        return self._axis_wire(axis)
+
     def _hop_latency(self, axis: Optional[str] = None) -> float:
         _, lat, _ = self._axis_wire(axis)
         return lat if lat is not None else self.params.ici_latency
 
     def t_link(self, nbytes: int, hops: int = 1,
-               axis: Optional[str] = None) -> float:
+               axis: Optional[str] = None,
+               link_class: Optional[str] = None) -> float:
         p = self.params
-        table, wire_lat, wire_bw = self._axis_wire(axis)
+        table, wire_lat, wire_bw = self._class_wire(axis, link_class)
         if table:
             # measured one-hop collective time; extra hops add the fitted
             # (or analytic) latency floor, not another bandwidth term
@@ -445,31 +530,110 @@ class PerfModel:
         return hops * p.ici_latency + nbytes / p.ici_bw
 
     # -- exchange pricing (exact-byte wire plans) -----------------------
+    def _tier_surcharge(self, nbytes: int, axis: Optional[str]) -> float:
+        """Extra seconds ``nbytes`` cost for crossing the slow tier
+        instead of the fast one — exactly 0.0 when the tiers price
+        equally (the inter == intra oracle), clamped at 0 so a noisy
+        calibration never pays agents to cross nodes."""
+        return max(
+            0.0,
+            self.t_link(nbytes, 1, axis, link_class="inter")
+            - self.t_link(nbytes, 1, axis, link_class="intra"),
+        )
+
+    def _price_schedule(self, plan, schedule: str,
+                        axis: Optional[str] = None) -> float:
+        """Predicted seconds of ``plan``'s layout under ``schedule``.
+
+        Flat plans (no ``link_classes`` annotation) price exactly as the
+        pre-hierarchy model: the link term on the bytes the schedule
+        issues plus one launch latency per extra collective.  Annotated
+        plans price each delta class by the slowest tier it crosses —
+        the base stays on the fast (``intra``) tier and every
+        inter-crossing class (grouped), coalesced bundle (tiered), or
+        whole fused collective touching any inter edge (uniform/ragged)
+        adds the tier *surcharge* for its bytes.  The formulation makes
+        the oracle exact: with ``inter == intra`` tables every surcharge
+        is 0.0 and the annotated prices equal the flat ones bit-for-bit.
+        """
+        lat = self._hop_latency(axis)
+        lc = getattr(plan, "link_classes", None)
+        base_class = "intra" if lc else None
+        if schedule == "grouped":
+            t = self.t_link(plan.wire_bytes, 1, axis, link_class=base_class)
+            t += (plan.ngroups - 1) * lat
+            if lc:
+                for g, c in enumerate(lc):
+                    if c == "inter":
+                        t += self._tier_surcharge(plan.groups[g].nbytes, axis)
+            return t
+        if schedule == "tiered":
+            if not lc:
+                raise ValueError(
+                    "schedule 'tiered' needs a topology-annotated plan"
+                )
+            # grouped-relative: swap the per-class slow-tier surcharges
+            # for per-BUNDLE ones (one slow message per peer node — the
+            # coalescing win is one slow latency per merged class), and
+            # pay the fast tier for the correction bytes every
+            # non-representative bundle member re-transmits on-node
+            t = self._price_schedule(plan, "grouped", axis)
+            for g, c in enumerate(lc):
+                if c == "inter":
+                    t -= self._tier_surcharge(plan.groups[g].nbytes, axis)
+            for b in plan.tier_bundles:
+                t += self._tier_surcharge(
+                    sum(plan.groups[g].nbytes for g in b), axis
+                )
+            t += max(
+                0.0,
+                self.t_link(plan.wire_bytes + plan.correction_bytes, 1,
+                            axis, link_class="intra")
+                - self.t_link(plan.wire_bytes, 1, axis, link_class="intra"),
+            )
+            return t
+        if schedule == "uniform":
+            issued = plan.nranks * plan.seg_bytes
+        elif schedule == "ragged":
+            issued = plan.wire_bytes
+        else:
+            raise ValueError(f"unknown wire schedule {schedule!r}")
+        t = self.t_link(issued, 1, axis, link_class=base_class)
+        if lc and any(c == "inter" for c in lc):
+            # one fused collective: its slowest edge crosses nodes, so
+            # the whole issued payload pays the slow tier
+            t += self._tier_surcharge(issued, axis)
+        return t
+
     def price_exchange(self, plan, axis: Optional[str] = None,
                        note: str = "") -> StrategyEstimate:
         """Price a :class:`~repro.comm.wireplan.WirePlan`: the link term
         for the bytes its schedule actually issues, plus the per-extra-
-        collective latency of the grouped schedule.  The estimate (byte
-        count included) is recorded once per plan fingerprint in the
-        attached decision cache, so audits show the true transfer size
-        of every fused exchange; ``note`` is appended to the audit
-        signature (the schedule chooser records the prices of the
-        alternatives it rejected)."""
-        t = self.t_link(plan.issued_bytes, 1, axis)
-        t += (plan.wire_ops - 1) * self._hop_latency(axis)
+        collective latency of the grouped schedule (plus the slow-tier
+        surcharges when the plan carries a topology annotation).  The
+        estimate (byte count included) is recorded once per plan
+        fingerprint in the attached decision cache, so audits show the
+        true transfer size of every fused exchange; ``note`` is appended
+        to the audit signature (the schedule chooser records the prices
+        of the alternatives it rejected)."""
+        t = self._price_schedule(plan, plan.schedule, axis)
         est = StrategyEstimate(
             f"wire/{plan.schedule}", 0.0, t, 0.0, wire_bytes=plan.issued_bytes
         )
         if self.decisions is not None:
             key = (plan.fingerprint, plan.ngroups, plan.wire_ops, True)
             if self.decisions.lookup(*key) is None:
+                topo = getattr(plan, "topology", None)
+                topo_tag = (
+                    f" topo={topo.fingerprint}" if topo is not None else ""
+                )
                 self.decisions.record(
                     *key,
                     est,
                     signature=(
                         f"exchange schedule={plan.schedule}"
                         f" groups={plan.ngroups} ranks={plan.nranks}"
-                        f" ragged_bytes={plan.wire_bytes}{note}"
+                        f" ragged_bytes={plan.wire_bytes}{topo_tag}{note}"
                     ),
                 )
         return est
@@ -491,8 +655,16 @@ class PerfModel:
         The large-grid threshold still applies: past
         ``GROUPED_FALLBACK_RANK_FACTOR x ngroups`` ranks the fused
         layouts are mostly zero rows / dead per-peer metadata — a cost
-        the per-byte link model cannot see — so only ``grouped`` is a
-        candidate there, exactly as in the exact ladder.
+        the per-byte link model cannot see — so only ``grouped`` (and,
+        on a topology-annotated plan, ``tiered``) is a candidate there,
+        exactly as in the exact ladder.
+
+        Topology-annotated plans with at least one inter-crossing class
+        additionally price ``tiered`` — the per-peer-node coalesced
+        schedule.  Candidate order puts ``grouped`` first so exact price
+        ties resolve to it (coalescing must *win*, not draw, to buy its
+        correction hops), which is also what keeps the inter == intra
+        oracle bit-for-bit.
         """
         if native is None:
             from repro.compat import has_ragged_all_to_all
@@ -500,19 +672,18 @@ class PerfModel:
             native = has_ragged_all_to_all()
         from repro.comm.wireplan import GROUPED_FALLBACK_RANK_FACTOR
 
-        lat = self._hop_latency(axis)
-        costs = {
-            "grouped": self.t_link(plan.wire_bytes, 1, axis)
-            + (plan.ngroups - 1) * lat
-        }
+        costs = {"grouped": self._price_schedule(plan, "grouped", axis)}
+        lc = getattr(plan, "link_classes", None)
+        if lc and plan.tier_bundles:
+            costs["tiered"] = self._price_schedule(plan, "tiered", axis)
         oversize = (
             plan.ngroups
             and plan.nranks > GROUPED_FALLBACK_RANK_FACTOR * plan.ngroups
         )
         if plan.fused and not oversize:
-            costs["uniform"] = self.t_link(plan.nranks * plan.seg_bytes, 1, axis)
+            costs["uniform"] = self._price_schedule(plan, "uniform", axis)
             if native:
-                costs["ragged"] = self.t_link(plan.wire_bytes, 1, axis)
+                costs["ragged"] = self._price_schedule(plan, "ragged", axis)
         return costs
 
     def choose_wire_schedule(
@@ -526,6 +697,104 @@ class PerfModel:
         costs = self.price_wire_schedules(plan, axis, native)
         best = min(costs, key=costs.get)
         return reschedule(plan, best), costs
+
+    # -- simulated-scale pricing (the 3072-process regime, no hardware) -
+    def at_scale(
+        self,
+        ranks: int,
+        nodes: Optional[int] = None,
+        *,
+        ranks_per_node: Optional[int] = None,
+        interior: Tuple[int, int, int] = (8, 8, 8),
+        radius: int = 1,
+        element_bytes: int = 4,
+        axis: Optional[str] = None,
+        native: Optional[bool] = None,
+        pin: bool = True,
+    ):
+        """Price the halo exchange the paper's scaling study runs — a 3D
+        periodic stencil on a ``ranks``-process grid — *from the
+        measured tables alone*, no devices.  ``nodes`` (or
+        ``ranks_per_node``) shapes the two-level topology; the process
+        grid is the pencil decomposition ``(nodes, fy, fx)`` with one
+        leading-axis slab per node, so leading-axis classes cross the
+        slow tier and everything else stays on-node (see
+        ``repro.comm.scale``).  Sweeping ``ranks`` gives the predicted
+        schedule *ladder* per scale — the CI artifact that lets a
+        single-host container assert "at 3072 ranks the model flips to
+        tier-coalesced".
+
+        The winning schedule is pinned as a ``wire/<schedule>`` decision
+        keyed by a fingerprint that includes the topology fingerprint —
+        an existing pin short-circuits the choice (``pinned=True``), so
+        a reshape-then-replay is detectable and an elastic replan
+        (``train.elastic.replan_on_remesh``) provably re-prices.
+        Returns a :class:`repro.comm.scale.ScaleEstimate`.
+        """
+        from repro.comm.scale import ScaleEstimate, build_scale_plan
+
+        ranks = int(ranks)
+        if ranks_per_node is None:
+            nodes = int(nodes) if nodes else 1
+            if ranks % nodes:
+                raise ValueError(
+                    f"ranks={ranks} does not split over nodes={nodes}"
+                )
+            ranks_per_node = ranks // nodes
+        plan = build_scale_plan(
+            ranks,
+            ranks_per_node,
+            interior=interior,
+            radius=radius,
+            element_bytes=element_bytes,
+        )
+        costs = self.price_wire_schedules(plan, axis, native)
+        best = min(costs, key=costs.get)
+        key_src = (
+            "atscale.v1", ranks, plan.topology.nnodes, plan.grid,
+            tuple(interior), int(radius), int(element_bytes),
+            plan.topology.fingerprint,
+        )
+        fp = hashlib.sha256(repr(key_src).encode()).hexdigest()[:16]
+        pinned = False
+        if pin and self.decisions is not None:
+            row = self.decisions.lookup(fp, 0, 1, True)
+            if row is not None and row.strategy.startswith("wire/"):
+                sched = row.strategy.split("/", 1)[1]
+                if sched in costs:
+                    best, pinned = sched, True
+            if not pinned:
+                self.decisions.record(
+                    fp, 0, 1, True,
+                    StrategyEstimate(
+                        f"wire/{best}", 0.0, costs[best], 0.0,
+                        wire_bytes=plan.wire_bytes,
+                    ),
+                    signature=(
+                        f"atscale ranks={ranks} nodes={plan.topology.nnodes}"
+                        f" grid={plan.grid} classes={plan.ngroups}"
+                        f" topo={plan.topology.fingerprint} "
+                        + " ".join(
+                            f"{s}:{c:.3e}" for s, c in sorted(costs.items())
+                        )
+                    ),
+                )
+        n_inter = sum(1 for c in plan.link_classes if c == "inter")
+        return ScaleEstimate(
+            ranks=ranks,
+            nodes=plan.topology.nnodes,
+            grid=plan.grid,
+            schedule=best,
+            costs=dict(costs),
+            wire_bytes=plan.wire_bytes,
+            correction_bytes=plan.correction_bytes,
+            inter_messages={
+                "grouped": n_inter,
+                "tiered": len(plan.tier_bundles),
+            },
+            fingerprint=fp,
+            pinned=pinned,
+        )
 
     # -- region-split overlap pricing -----------------------------------
     def _stencil_seconds(self, n_neighbors: int, nbytes: int) -> float:
@@ -562,8 +831,7 @@ class PerfModel:
                 self.t_link(cum, 1, axis) + k * lat
                 for k, cum in enumerate(plan.class_cum_bytes)
             )
-        t = self.t_link(plan.issued_bytes, 1, axis)
-        t += (plan.wire_ops - 1) * lat
+        t = self._price_schedule(plan, plan.schedule, axis)
         return (t,) * plan.ngroups
 
     def price_overlap(
@@ -745,8 +1013,7 @@ class PerfModel:
                 f"n_neighbors ({len(neighbors)}) must match the cycle "
                 f"length ({len(cycle)})"
             )
-        wire = self.t_link(plan.issued_bytes, 1, axis)
-        wire += (plan.wire_ops - 1) * self._hop_latency(axis)
+        wire = self._price_schedule(plan, plan.schedule, axis)
         t_exchange = t_members + wire
         interior_cells = math.prod(interior)
         total = tuple(steps * sum(r[d] for r in cycle) for d in range(3))

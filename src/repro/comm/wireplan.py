@@ -26,6 +26,20 @@ cheapest wire **schedule** that can carry that ragged layout:
     ``grouped_fallback_rank_factor`` x the class count, most fused rows
     would be zero, so the plan degrades to per-class sends regardless of
     primitive availability.
+``tiered``
+    the hierarchy-aware grouped schedule.  With a
+    :class:`~repro.comm.topology.Topology` annotation, every delta class
+    whose edges stay on one node still rides its own ``ppermute``, but
+    classes crossing the inter-node tier are **coalesced per peer
+    node**: each tier bundle (classes sharing a destination-node vector
+    — see :func:`~repro.comm.topology.classify_and_coalesce`) travels as
+    ONE slow-tier collective carrying the concatenated member payloads
+    along the representative member's permutation, then each
+    non-representative member is forwarded to its true destination rank
+    by an *intra-node* correction ``ppermute``.  Fewer slow-tier
+    messages, bought with ``correction_bytes`` of extra fast-tier
+    traffic — the trade ``PerfModel.price_wire_schedules`` prices; the
+    exact ladder never picks it on its own.
 
 The schedule choice is host-side and cached; the payload accounting
 (:attr:`WirePlan.wire_bytes` = the sum of per-peer packed extents, and
@@ -44,6 +58,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.commit import WireSegment
+from repro.comm.topology import Topology, classify_and_coalesce
 
 __all__ = [
     "WireGroup",
@@ -53,6 +68,7 @@ __all__ = [
     "GROUPED_FALLBACK_RANK_FACTOR",
     "collective_payload_bytes",
     "WIRE_COLLECTIVES",
+    "WIRE_SCHEDULES",
 ]
 
 #: past ``factor * ngroups`` ranks the fused single-collective layout is
@@ -62,6 +78,10 @@ GROUPED_FALLBACK_RANK_FACTOR = 4.0
 
 #: primitive names that put payload on the wire in our schedules
 WIRE_COLLECTIVES = ("ppermute", "all_to_all", "ragged_all_to_all")
+
+#: every wire schedule a plan can carry ("tiered" needs a topology
+#: annotation; the exact ladder only ever picks the first three)
+WIRE_SCHEDULES = ("ragged", "uniform", "grouped", "tiered")
 
 
 @dataclass(frozen=True)
@@ -93,12 +113,18 @@ class WirePlan:
     groups: Tuple[WireGroup, ...]
     segments: Tuple[WireSegment, ...]
     group_offsets: Tuple[int, ...]
-    schedule: str                     # "ragged" | "uniform" | "grouped"
+    schedule: str                # "ragged" | "uniform" | "grouped" | "tiered"
     fused: bool                       # group -> peer injective per rank
     wire_bytes: int                   # sum of exact segment extents
     seg_bytes: int                    # uniform row size (largest group)
     send_rows: Tuple[Tuple[int, ...], ...]   # [rank][dest] -> group|G
     recv_rows: Tuple[Tuple[int, ...], ...]   # [rank][group] -> source
+    # two-level hierarchy annotation (None/() when planned flat): the
+    # per-class link class, the inter-tier coalescing bundles, and the
+    # topology that derived them (hashable; keys the plan fingerprint)
+    link_classes: Optional[Tuple[str, ...]] = None
+    tier_bundles: Tuple[Tuple[int, ...], ...] = ()
+    topology: Optional[Topology] = None
 
     @property
     def ngroups(self) -> int:
@@ -106,16 +132,46 @@ class WirePlan:
 
     @property
     def wire_ops(self) -> int:
-        """Collectives the schedule issues."""
+        """Collectives the schedule issues.  ``tiered`` issues one
+        ``ppermute`` per intra class, one per tier bundle, and one
+        correction hop per non-representative bundle member — which
+        totals ``ngroups`` exactly like ``grouped``; the win is *which
+        tier* the ops cross, not how many there are."""
         if self.schedule in ("ragged", "uniform"):
             return 1
         return len(self.groups)
+
+    @property
+    def correction_bytes(self) -> int:
+        """Extra fast-tier bytes the ``tiered`` schedule re-transmits:
+        every non-representative bundle member crosses the wire twice
+        (once inside the coalesced slow-tier message, once on the
+        intra-node correction hop)."""
+        return sum(
+            self.groups[g].nbytes for b in self.tier_bundles for g in b[1:]
+        )
+
+    @property
+    def inter_messages(self) -> int:
+        """Slow-tier messages per rank per exchange: what the 3072-rank
+        regime is bought down by.  Each inter-crossing class is its own
+        slow message under ``grouped`` (and still crosses to its own
+        peer inside the fused collectives); ``tiered`` sends one per
+        peer-node bundle.  0 when the plan was laid out flat."""
+        if not self.link_classes:
+            return 0
+        n_inter = sum(1 for c in self.link_classes if c == "inter")
+        if self.schedule == "tiered":
+            return len(self.tier_bundles)
+        return n_inter
 
     @property
     def issued_bytes(self) -> int:
         """Bytes the chosen schedule actually puts on the wire."""
         if self.schedule == "uniform":
             return self.nranks * self.seg_bytes
+        if self.schedule == "tiered":
+            return self.wire_bytes + self.correction_bytes
         return self.wire_bytes
 
     @property
@@ -151,6 +207,11 @@ class WirePlan:
                 tuple((s.fingerprint, s.offset, s.nbytes) for s in self.segments),
                 tuple(g.perm for g in self.groups),
             )
+            if self.topology is not None:
+                # appended only when a topology annotated the plan, so
+                # every pre-hierarchy fingerprint (and its pinned
+                # decision rows) survives unchanged
+                key = key + (self.topology.fingerprint,)
             fp = hashlib.sha256(repr(key).encode()).hexdigest()[:16]
             object.__setattr__(self, "_fingerprint", fp)
         return fp
@@ -189,12 +250,19 @@ def plan_wire(
     uniform_waste_tolerance: float = 0.0,
     native: Optional[bool] = None,
     rank_factor: float = GROUPED_FALLBACK_RANK_FACTOR,
+    topology: Optional[Topology] = None,
 ) -> WirePlan:
     """Lay ``len(sizes)`` transfers (one full permutation each) out as an
     exact-byte wire plan.  ``sizes[i]`` is transfer ``i``'s wire-segment
     extent (the selected strategy's exact wire bytes); ``fingerprints``
     optionally carries the committed types' content hashes into the
-    segment descriptors."""
+    segment descriptors.
+
+    ``topology`` (hashable, rides the plan cache) annotates the plan
+    with per-class link classes and inter-tier coalescing bundles; it is
+    ignored — the plan stays flat — when its rank count does not match
+    the permutations' (e.g. a single-host test mesh planned against a
+    production topology)."""
     if native is None:
         from repro.compat import has_ragged_all_to_all
 
@@ -274,6 +342,18 @@ def plan_wire(
         native,
         rank_factor,
     )
+    link_classes: Optional[Tuple[str, ...]] = None
+    tier_bundles: Tuple[Tuple[int, ...], ...] = ()
+    if topology is not None and topology.nranks == nranks:
+        link_classes, tier_bundles = classify_and_coalesce(
+            tuple(
+                tuple(dst[g.transfers[0]][r] for r in range(nranks))
+                for g in groups
+            ),
+            topology,
+        )
+    else:
+        topology = None
     return WirePlan(
         nranks=nranks,
         groups=tuple(groups),
@@ -285,6 +365,9 @@ def plan_wire(
         seg_bytes=seg_bytes,
         send_rows=tuple(send_rows),
         recv_rows=tuple(recv_rows),
+        link_classes=link_classes,
+        tier_bundles=tier_bundles,
+        topology=topology,
     )
 
 
@@ -300,12 +383,17 @@ def reschedule(plan: WirePlan, schedule: str) -> WirePlan:
     """
     if schedule == plan.schedule:
         return plan
-    if schedule not in ("ragged", "uniform", "grouped"):
+    if schedule not in WIRE_SCHEDULES:
         raise ValueError(f"unknown wire schedule {schedule!r}")
     if schedule in ("ragged", "uniform") and not plan.fused:
         raise ValueError(
             f"schedule {schedule!r} needs a fused plan (group->peer "
             "injective per rank)"
+        )
+    if schedule == "tiered" and plan.link_classes is None:
+        raise ValueError(
+            "schedule 'tiered' needs a topology-annotated plan "
+            "(plan_wire(..., topology=...))"
         )
     return dataclasses.replace(plan, schedule=schedule)
 

@@ -29,11 +29,13 @@ from repro.fleet.bundle import (
 )
 from repro.fleet.drift import (
     DEFAULT_MIN_SAMPLES,
+    DEFAULT_OVERLAP_MARGIN,
     DEFAULT_THRESHOLD,
     TERMS,
     DriftDetector,
     DriftFinding,
     DriftReport,
+    demote_stale_modes,
     remeasure_term,
 )
 from repro.fleet.telemetry import (
@@ -51,6 +53,7 @@ __all__ = [
     "BUNDLE_FORMAT",
     "CONFLICT_POLICIES",
     "DEFAULT_MIN_SAMPLES",
+    "DEFAULT_OVERLAP_MARGIN",
     "DEFAULT_THRESHOLD",
     "DEFAULT_WINDOW",
     "TELEMETRY_FILENAME",
@@ -62,6 +65,7 @@ __all__ = [
     "DriftReport",
     "ExchangeTelemetry",
     "RingAggregate",
+    "demote_stale_modes",
     "diff_bundles",
     "load_bundle",
     "merge_bundles",

@@ -83,6 +83,12 @@ class DecisionBundle:
     system: str = ""         # system fingerprint that recorded the rows
     params_format: int = STORE_FORMAT
     host: str = ""           # free-form origin label (hostname, CI run id)
+    #: topology fingerprint the rows were planned under ("" = flat /
+    #: unknown) — wire-schedule and fusion-depth rows recorded on a
+    #: 2-level machine must not be promoted onto a different shape, so
+    #: bundles carry the rank->node map's identity alongside the
+    #: system's (optional envelope key; format stays 1)
+    topology: str = ""
 
     # -- persistence -----------------------------------------------------
     def to_json(self) -> str:
@@ -97,6 +103,7 @@ class DecisionBundle:
                 "host": self.host,
                 "params_format": self.params_format,
                 "system": self.system,
+                "topology": self.topology,
                 "rows": [
                     dataclasses.asdict(d)
                     for d in sorted(self.decisions.log, key=_row_sort_key)
@@ -126,6 +133,7 @@ class DecisionBundle:
             system=d.get("system", ""),
             params_format=int(d.get("params_format", STORE_FORMAT)),
             host=d.get("host", ""),
+            topology=d.get("topology", ""),
         )
 
     def save(self, path: Union[str, Path]) -> Path:
@@ -140,7 +148,7 @@ class DecisionBundle:
         return (
             f"bundle gen={self.generation} system={self.system or '-'}"
             f" host={self.host or '-'} params_format={self.params_format}"
-            f" rows={len(self.decisions)}"
+            f" topo={self.topology or '-'} rows={len(self.decisions)}"
         )
 
 
@@ -214,6 +222,7 @@ def merge_bundles(
     rows = sorted((d for _, d in chosen.values()), key=_row_sort_key)
     systems = {b.system for b in bundles}
     formats = {b.params_format for b in bundles}
+    topologies = {b.topology for b in bundles}
     return DecisionBundle(
         decisions=DecisionCache(rows),
         generation=(
@@ -223,6 +232,9 @@ def merge_bundles(
         system=systems.pop() if len(systems) == 1 else "",
         params_format=formats.pop() if len(formats) == 1 else 0,
         host=host,
+        # same unanimity rule as system: a cross-topology merge stamps
+        # no fingerprint rather than claiming a shape it wasn't on
+        topology=topologies.pop() if len(topologies) == 1 else "",
     )
 
 

@@ -57,10 +57,12 @@ __all__ = [
     "TERMS",
     "DEFAULT_THRESHOLD",
     "DEFAULT_MIN_SAMPLES",
+    "DEFAULT_OVERLAP_MARGIN",
     "DriftFinding",
     "DriftReport",
     "DriftDetector",
     "remeasure_term",
+    "demote_stale_modes",
 ]
 
 #: bump when the persisted DriftReport schema changes incompatibly.
@@ -94,6 +96,13 @@ DEFAULT_THRESHOLD = 5.0
 #: runtime findings need at least this many window samples: one slow
 #: exchange is an outlier, a windowful is drift
 DEFAULT_MIN_SAMPLES = 8
+
+#: an ``overlap/mode=<m>`` pin is stale when the *measured* iteration
+#: time of the chosen mode exceeds the best measured alternative by
+#: this factor — much tighter than :data:`DEFAULT_THRESHOLD` because
+#: the comparison is same-machine same-moment (both modes timed in one
+#: smoother run), so table noise does not apply
+DEFAULT_OVERLAP_MARGIN = 1.25
 
 
 @dataclass(frozen=True)
@@ -300,6 +309,11 @@ def _terms_of(strategy: str) -> Tuple[str, ...]:
         # t_link slot holds the exchange, t_pack slot the redundant
         # stencil compute (see build_halo_program's record call)
         return ("wire", "stencil", "copy")
+    if strategy.startswith("overlap/mode="):
+        # an overlap-mode row prices stencil compute against wire time
+        # (the overlap trade); neither table alone re-measures it — the
+        # authoritative check is the smoother's per-mode timings
+        return ("stencil", "wire")
     return ("pack_unpack", "wire")
 
 
@@ -356,6 +370,8 @@ class DriftDetector:
         telemetry: Optional[ExchangeTelemetry] = None,
         system: str = "",
         trace: Optional[Dict[str, Dict[str, dict]]] = None,
+        overlap_timings: Optional[Dict[str, Dict[str, float]]] = None,
+        overlap_margin: float = DEFAULT_OVERLAP_MARGIN,
     ) -> DriftReport:
         """One finding per decision row.
 
@@ -380,6 +396,17 @@ class DriftDetector:
         band over ``min_samples`` drift too — attributed through the
         reference when one is given, else left unattributed
         (``term=""``; re-measure everything or bring a reference).
+
+        With ``overlap_timings`` (``{fingerprint: {mode: measured
+        iteration seconds}}``, the per-mode timings a smoother sweep
+        already collects): every ``overlap/mode=<m>`` row is checked
+        against what was *measured*, not modeled — the observed ratio
+        is the chosen mode's iteration time over the best measured
+        alternative mode (``"off"`` excluded: it is the no-overlap
+        baseline, not an alternative schedule).  A ratio above
+        ``overlap_margin`` flags the pin (``term="overlap"``, source
+        ``"telemetry"``); :func:`demote_stale_modes` then deletes it so
+        the next smoother pass re-prices.
         """
         ratios = (
             self.term_ratios(params, reference) if reference is not None
@@ -457,12 +484,35 @@ class DriftDetector:
                         if not drifted and source != "trace":
                             source = "telemetry"
                         drifted = True
+            term = worst_term if self._out_of_band(worst) else ""
+            ratio = worst
+            # measured per-mode timings trump everything for overlap
+            # pins: the chosen mode losing to a measured alternative by
+            # more than the margin is drift, no table inference needed
+            if overlap_timings is not None and d.strategy.startswith(
+                "overlap/mode="
+            ):
+                modes = overlap_timings.get(d.fingerprint) or {}
+                chosen = d.strategy.split("=", 1)[1]
+                t_chosen = modes.get(chosen, 0.0)
+                alternatives = [
+                    t for m, t in modes.items()
+                    if m not in (chosen, "off") and t > 0.0
+                ]
+                if t_chosen > 0.0 and alternatives:
+                    r = t_chosen / min(alternatives)
+                    obs_ratio = r
+                    obs_mean = t_chosen
+                    if r > overlap_margin:
+                        drifted = True
+                        source = "telemetry"
+                        term, ratio = "overlap", r
             findings.append(
                 DriftFinding(
                     fingerprint=d.fingerprint,
                     strategy=d.strategy,
-                    term=worst_term if self._out_of_band(worst) else "",
-                    ratio=worst,
+                    term=term,
+                    ratio=ratio,
                     drifted=drifted,
                     source=source,
                     recorded_total=d.total,
@@ -537,3 +587,25 @@ def remeasure_term(
         rows = bench.measure_copy_table(totals, iters=it)
         updates = {"copy_table": tuple(rows)}
     return dataclasses.replace(params, **updates)
+
+
+def demote_stale_modes(decisions, report: DriftReport) -> List[str]:
+    """Delete every ``overlap/mode=`` decision row the ``report``
+    flagged as drifted, so the next smoother pass re-measures and
+    re-records instead of replaying a pin the measurements contradict.
+
+    Returns the ``"strategy@fingerprint"`` labels of the demoted rows.
+    The ``"overlap"`` term is *not* in :data:`TERMS` on purpose: no
+    calibration sweep re-measures an overlap trade — demotion followed
+    by a smoother re-run is the targeted response.
+    """
+    stale = {
+        f.fingerprint
+        for f in report.drifted
+        if f.strategy.startswith("overlap/mode=")
+    }
+    dropped = decisions.prune(
+        lambda d: d.strategy.startswith("overlap/mode=")
+        and d.fingerprint in stale
+    )
+    return [f"{d.strategy}@{d.fingerprint}" for d in dropped]

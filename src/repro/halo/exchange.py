@@ -25,6 +25,15 @@ Halos may be asymmetric: ``HaloSpec.radius`` accepts a per-dimension
 layout all follow the per-dimension radii (the ragged wire layout is
 what makes this free — unequal region sizes never padded each other).
 
+On a two-level machine (a communicator constructed with a
+:class:`repro.comm.topology.Topology`), the same planning pass annotates
+each delta class with the link tier it crosses: classes that stay on one
+node price at the fast tier, node-crossing classes at the slow tier, and
+the model may pick the ``tiered`` schedule — every class bound for the
+same peer node coalesced into ONE slow-tier collective, corrected to its
+true destination rank by cheap intra-node hops.  Nothing here changes:
+the topology rides ``Communicator.plan_neighbor`` into the wire plan.
+
 Switching the communicator policy between baseline and model selection
 reproduces the paper's comparison with zero changes here.
 """

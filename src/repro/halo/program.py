@@ -114,6 +114,7 @@ def program_fingerprint(
     interior: Tuple[int, int, int],
     op: Ops,
     element: Named,
+    topology_fingerprint: str = "",
 ) -> str:
     """Stable content hash of a program's geometry — the DecisionCache
     key that pins ``--halo-steps auto`` across processes (the analogue
@@ -124,6 +125,13 @@ def program_fingerprint(
     before cycles existed still pin; a cycle hashes every op in
     application order under a v2 key (``[a, b] != [b, a]`` — the
     shrinking-region schedule is order-sensitive).
+
+    ``topology_fingerprint`` (a :attr:`repro.comm.topology.Topology.
+    fingerprint`) is appended to the key only when non-empty, so pins
+    recorded without a topology keep their keys — but a ``program/s=N``
+    pinned on a 2x2x2 mesh can never be replayed on a reshaped mesh: a
+    different topology is a different fingerprint, which is a decision
+    cache *miss*.
     """
     ops = as_ops(op)
     if len(ops) == 1:
@@ -145,6 +153,8 @@ def program_fingerprint(
             element.name,
             element.size,
         )
+    if topology_fingerprint:
+        key = key + (topology_fingerprint,)
     return hashlib.sha256(repr(key).encode()).hexdigest()[:16]
 
 
@@ -176,6 +186,9 @@ class HaloProgram:
     estimate: ProgramEstimate   # model price that selected (or priced) steps
     candidates: Tuple[ProgramEstimate, ...] = ()  # every depth priced
     pinned: bool = False        # steps came from a pinned Decision
+    #: topology fingerprint the program was planned under ("" = flat);
+    #: part of the decision key so mesh reshapes never replay this pin
+    topology_fingerprint: str = ""
 
     @property
     def op(self) -> StencilOp:
@@ -213,7 +226,8 @@ class HaloProgram:
         # content hash over frozen fields; cached because the tracer's
         # per-iteration hook reads it on the launch hot loop
         return program_fingerprint(
-            self.spec.grid, self.spec.interior, self.ops, self.spec.element
+            self.spec.grid, self.spec.interior, self.ops, self.spec.element,
+            self.topology_fingerprint,
         )
 
     def iteration(
@@ -385,7 +399,9 @@ def build_halo_program(
     ops = as_ops(ops if ops is not None else op)
     if steps is None:
         steps = get_default_halo_steps()
-    fp = program_fingerprint(grid, interior, ops, element)
+    topo = getattr(comm.model, "topology", None)
+    topo_fp = topo.fingerprint if topo is not None else ""
+    fp = program_fingerprint(grid, interior, ops, element, topo_fp)
     decisions = comm.model.decisions
     candidates: Tuple[ProgramEstimate, ...] = ()
     pinned = False
@@ -436,6 +452,7 @@ def build_halo_program(
                         f"halo program grid={tuple(grid)} "
                         f"interior={tuple(interior)} "
                         f"cycle={_describe_cycle(ops)} "
+                        + (f"topo={topo_fp} " if topo_fp else "")
                         + " ".join(
                             f"s={e.steps}:{e.per_step:.3e}" for e in candidates
                         )
@@ -457,7 +474,7 @@ def build_halo_program(
     spec, plan, estimate = built
     return HaloProgram(
         spec=spec, ops=ops, steps=steps, plan=plan, estimate=estimate,
-        candidates=candidates, pinned=pinned,
+        candidates=candidates, pinned=pinned, topology_fingerprint=topo_fp,
     )
 
 

@@ -142,6 +142,13 @@ def main() -> None:
     ap.add_argument("--smoother-cycle", default="smooth",
                     help="op cycle the smoother fuses (see "
                          "repro.launch.smoother.CYCLES)")
+    ap.add_argument("--ranks-per-node", type=int, default=None,
+                    metavar="N",
+                    help="declare the two-level machine shape: ranks "
+                         "blocked N-per-node (repro.comm.topology); the "
+                         "model prices intra- vs inter-node links "
+                         "separately and keys wire/program pins by the "
+                         "topology fingerprint (default: flat)")
     ap.add_argument("--telemetry", action="store_true",
                     help="attach the runtime exchange probe "
                          "(repro.fleet): observed-vs-predicted wall time "
@@ -166,15 +173,27 @@ def main() -> None:
     if not args.no_comm_cache:
         from repro.measure.production import production_communicator
 
+        topology = None
+        if args.ranks_per_node:
+            from repro.comm.topology import Topology
+
+            topology = Topology.blocked(
+                jax.device_count(), args.ranks_per_node
+            )
         comm, save_decisions = production_communicator(
             args.comm_cache, halo_steps=halo_steps,
             telemetry=want_telemetry or None,
             tracer=bool(args.trace) or None,
+            topology=topology,
         )
         dc = comm.model.decisions
+        topo_note = (
+            f" topo={topology.fingerprint}({topology.nnodes} nodes)"
+            if topology is not None else ""
+        )
         print(f"comm: params={comm.model.params.name} "
               f"pinned_decisions={len(dc)} halo_steps={halo_steps} "
-              f"pinned_programs={len(dc.program_rows())}")
+              f"pinned_programs={len(dc.program_rows())}{topo_note}")
     else:
         set_default_halo_steps(halo_steps)
     if args.smoother_iters > 0 and comm is not None:

@@ -25,6 +25,7 @@ from repro.measure.bench import (
     calibrate_params,
     fit_latency_bandwidth,
     measure_copy_table,
+    measure_link_class_tables,
     measure_pack_table,
     measure_stencil_table,
     measure_unpack_table,
@@ -66,6 +67,7 @@ __all__ = [
     "load_ci_params",
     "load_or_calibrate",
     "measure_copy_table",
+    "measure_link_class_tables",
     "measure_pack_table",
     "measure_stencil_table",
     "measure_unpack_table",

@@ -60,6 +60,7 @@ __all__ = [
     "measure_unpack_table",
     "measure_wire_table",
     "measure_wire_tables",
+    "measure_link_class_tables",
     "measure_copy_table",
     "measure_stencil_table",
     "STENCIL_RADII",
@@ -324,6 +325,84 @@ def measure_wire_tables(
     return tables
 
 
+def measure_link_class_tables(
+    topology,
+    total_bytes: Sequence[int] = TOTAL_BYTES,
+    iters: int = 5,
+    axis_name: str = "wire",
+) -> Dict[str, List[Tuple[float, float]]]:
+    """Per-LINK-CLASS one-hop collective sweep (STORE_FORMAT 5).
+
+    ``topology`` is a :class:`repro.comm.topology.Topology` whose rank
+    count must not exceed the visible device count; rank ``r`` runs on
+    device ``r``.  Two permutations isolate the two tiers of the
+    hierarchy:
+
+    * ``intra`` — a ring within each node's rank block (every edge
+      stays on one node, so the timing is pure fast-tier);
+    * ``inter`` — rank ``j`` of node ``i`` sends to rank ``j`` of node
+      ``i + 1`` (mod nodes): every edge crosses nodes, and the
+      bulk-synchronous collective completes at the slow tier.
+
+    Rows are (log2_bytes, sec) per class; a single-node topology yields
+    ``intra`` only.  On a single-host container both permutations ride
+    the same physical links — the sweep is then a smoke-path (the two
+    tables come out nearly equal), while a real multi-node mesh prices
+    its DCN tier honestly.
+    """
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    devs = jax.devices()
+    n = topology.nranks
+    if n > len(devs):
+        raise ValueError(
+            f"topology has {n} ranks, only {len(devs)} devices visible"
+        )
+    nodes = topology.nodes
+    by_node: Dict[int, List[int]] = {}
+    for r, nd in enumerate(nodes):
+        by_node.setdefault(nd, []).append(r)
+
+    # intra: ring within each node block (self-permute for 1-rank nodes)
+    intra_perm: List[Tuple[int, int]] = []
+    for members in by_node.values():
+        k = len(members)
+        intra_perm.extend(
+            (members[i], members[(i + 1) % k]) for i in range(k)
+        )
+    perms = {"intra": intra_perm}
+    node_ids = sorted(by_node)
+    if len(node_ids) > 1:
+        # inter: j-th rank of node i -> j-th rank of node i+1; ragged
+        # node sizes wrap j modulo the destination block
+        inter_perm: List[Tuple[int, int]] = []
+        for i, nd in enumerate(node_ids):
+            nxt = by_node[node_ids[(i + 1) % len(node_ids)]]
+            for j, r in enumerate(by_node[nd]):
+                inter_perm.append((r, nxt[j % len(nxt)]))
+        if sorted(d for _, d in inter_perm) == list(range(n)):
+            perms["inter"] = inter_perm
+
+    mesh = Mesh(np.array(devs[:n]), (axis_name,))
+    tables: Dict[str, List[Tuple[float, float]]] = {}
+    for cls, perm in perms.items():
+        rows = []
+        for total in total_bytes:
+            def body(x, _perm=tuple(perm)):
+                return jax.lax.ppermute(x, axis_name, list(_perm))
+
+            fn = jax.jit(
+                shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False)
+            )
+            x = jnp.zeros((total,), jnp.uint8)
+            rows.append((math.log2(total), time_fn(fn, x, iters=iters)))
+        tables[cls] = rows
+    return tables
+
+
 def fit_latency_bandwidth(
     rows: Sequence[Tuple[float, float]]
 ) -> Tuple[Optional[float], Optional[float]]:
@@ -350,6 +429,7 @@ def calibrate_params(
     strategies=None,
     iters: Optional[int] = None,
     mesh_axes: Optional[Dict[str, int]] = None,
+    topology=None,
 ) -> SystemParams:
     """Full-term calibration: pack + unpack + wire + contiguous copy +
     stencil application.
@@ -359,6 +439,12 @@ def calibrate_params(
     per axis (``wire_tables`` / ``wire_fits``) so ``t_link`` can price
     multi-axis meshes honestly; the flat full-device ring remains the
     axis-agnostic ``wire_table`` fallback either way.
+
+    ``topology`` (a :class:`repro.comm.topology.Topology`) additionally
+    runs the per-link-class sweep (:func:`measure_link_class_tables`)
+    and stores its tables + fits (``link_tables`` / ``link_fits``,
+    STORE_FORMAT 5) so tier-aware pricing — and the simulated-scale mode
+    built on it — reads measured numbers for both tiers.
 
     Returns a :class:`SystemParams` whose measured tables drive every
     term of the model's T = T_pack + T_link + T_unpack; the analytic
@@ -380,6 +466,13 @@ def calibrate_params(
         wire_tables = measure_wire_tables(mesh_axes, totals, iters=it)
         wire_fits = {
             ax: fit_latency_bandwidth(rows) for ax, rows in wire_tables.items()
+        }
+    link_tables = link_fits = None
+    if topology is not None:
+        link_tables = measure_link_class_tables(topology, totals, iters=it)
+        link_fits = {
+            cls: fit_latency_bandwidth(rows)
+            for cls, rows in link_tables.items()
         }
 
     backend = jax.default_backend()
@@ -404,6 +497,10 @@ def calibrate_params(
             {k: tuple(v) for k, v in wire_tables.items()} if wire_tables else None
         ),
         wire_fits=wire_fits,
+        link_tables=(
+            {k: tuple(v) for k, v in link_tables.items()} if link_tables else None
+        ),
+        link_fits=link_fits,
         wire_latency=wire_lat,
         wire_bw=wire_bw,
         ici_bw=wire_bw if wire_bw else base.ici_bw,

@@ -46,6 +46,7 @@ def production_communicator(
     halo_steps: Optional[Union[int, str]] = None,
     telemetry: Union[bool, "object", None] = None,
     tracer: Union[bool, "object", None] = None,
+    topology: Optional["object"] = None,
 ) -> Tuple[Communicator, Callable[[], Path]]:
     """A :class:`Communicator` wired for production reuse.
 
@@ -80,6 +81,12 @@ def production_communicator(
         :func:`repro.obs.export.save_chrome_trace`, the launch drivers'
         ``--trace PATH``); an explicit Tracer instance is attached
         as-is; ``None``/``False`` attaches none.
+    topology: a :class:`repro.comm.topology.Topology` rank->node map
+        (the launch drivers build one from ``--ranks-per-node``).  The
+        model then prices per link class, may pick the tier-coalesced
+        wire schedule, and stamps every wire/program decision with the
+        topology fingerprint so pins never replay across a reshape.
+        ``None`` plans flat (every hop priced equal).
 
     Returns ``(comm, save)``: call ``save()`` after the job to persist
     the decision cache — the file that lets the next run skip the model
@@ -122,7 +129,7 @@ def production_communicator(
         tr = tracer
     comm = Communicator(
         axis_name=axis_name, params=params, decisions=decisions,
-        telemetry=tel, tracer=tr,
+        telemetry=tel, tracer=tr, topology=topology,
     )
 
     def save() -> Path:

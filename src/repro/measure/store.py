@@ -46,19 +46,19 @@ __all__ = [
 ]
 
 #: bump when the envelope or SystemParams schema changes incompatibly
-STORE_FORMAT = 4
+STORE_FORMAT = 5
 
 #: formats this reader still understands: format 2 predates the
 #: per-axis wire tables (``wire_tables`` / ``wire_fits``), format 3 the
-#: stencil-application sweep (``stencil_table``) — all optional fields,
-#: so older envelopes load unchanged with those fields absent (the
-#: model then falls back to the contiguous-copy proxy for the
-#: redundant-compute term).  The checked-in ``ci_params.json`` is
-#: recorded at the current format (stencil sweep included, so CI's
-#: ``price_program`` oracles pin through measured stencil times);
-#: format-2/3 loading stays covered by synthetic envelopes in
-#: ``tests/test_measure.py``
-COMPATIBLE_FORMATS = (2, 3, STORE_FORMAT)
+#: stencil-application sweep (``stencil_table``), format 4 the
+#: per-link-class sweeps (``link_tables`` / ``link_fits``) — all
+#: optional fields, so older envelopes load unchanged with those fields
+#: absent (the model then falls back: copy proxy for the redundant-
+#: compute term, and the flat wire table priced as ``intra`` for every
+#: link class).  The checked-in ``ci_params.json`` stays valid at any
+#: compatible format; format-2/3/4 loading is covered by synthetic
+#: envelopes in ``tests/test_measure.py`` / ``tests/test_hierarchy.py``
+COMPATIBLE_FORMATS = (2, 3, 4, STORE_FORMAT)
 
 _ENV_ROOT = "REPRO_MEASURE_DIR"
 

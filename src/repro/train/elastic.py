@@ -25,6 +25,18 @@ container and on a real cluster:
   runtime surfaces device loss as errors on collectives; the driver
   wraps steps in `try` and escalates to the elastic path.  Here the hook
   is a callable so tests can inject failures.
+
+* **Decision re-planning** (`replan_on_remesh`): a mesh reshape changes
+  the machine the performance model priced — wire-schedule, fusion-depth
+  and overlap-mode pins recorded under the old rank->node map are stale
+  opinions about a machine that no longer exists.  Rather than silently
+  replaying them, the replan rebinds the communicator's topology, clears
+  the model's selection cache, and *prunes* every topology-sensitive
+  decision row recorded under a different (or no) topology tag — the
+  next planning pass re-prices on the new shape and re-records.  The
+  topology fingerprint inside wire/program decision keys already makes
+  stale pins unreachable; pruning keeps the persisted audit log from
+  accumulating rows no lookup can ever hit again.
 """
 
 from __future__ import annotations
@@ -34,7 +46,18 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Tuple
 
-__all__ = ["plan_remesh", "StragglerMonitor", "ElasticPolicy"]
+__all__ = [
+    "plan_remesh",
+    "StragglerMonitor",
+    "ElasticPolicy",
+    "ReplanReport",
+    "replan_on_remesh",
+]
+
+#: decision strategy prefixes whose rows encode topology-dependent
+#: choices (wire schedules, fusion depth, overlap mode) — the rows an
+#: elastic remesh must never replay across a reshape
+TOPOLOGY_SENSITIVE_PREFIXES = ("wire/", "program/s=", "overlap/mode=")
 
 
 @dataclass(frozen=True)
@@ -116,6 +139,60 @@ class StragglerMonitor:
         return verdict
 
 
+@dataclass(frozen=True)
+class ReplanReport:
+    """What an elastic re-plan did to the decision state."""
+
+    old_topology: str           # previous topology fingerprint ("" = flat)
+    new_topology: str           # fingerprint now bound to the model
+    pruned: Tuple[str, ...]     # "strategy@fingerprint" of demoted rows
+    cache_cleared: bool         # model selection cache was dropped
+
+    @property
+    def npruned(self) -> int:
+        return len(self.pruned)
+
+
+def replan_on_remesh(comm, topology) -> ReplanReport:
+    """Rebind ``comm`` (a :class:`repro.comm.api.Communicator`) to the
+    post-reshape ``topology`` and demote every stale topology-sensitive
+    pin (see the module docstring).
+
+    A decision row is stale when its strategy is topology-dependent
+    (:data:`TOPOLOGY_SENSITIVE_PREFIXES`) and its signature's ``topo=``
+    tag names a different topology than the new one — including rows
+    recorded with *no* tag (planned flat): the reshape invalidates those
+    too, because the flat plan's pricing assumed every hop equal.  Rows
+    pinned under the incoming topology's own fingerprint survive (a
+    replay onto the same shape is exactly what pins are for).
+    """
+    model = comm.model
+    old = model.topology
+    old_fp = old.fingerprint if old is not None else ""
+    new_fp = topology.fingerprint if topology is not None else ""
+    model.topology = topology
+    model._cache.clear()
+    pruned: Tuple[str, ...] = ()
+    if model.decisions is not None and old_fp != new_fp:
+        tag = f"topo={new_fp}" if new_fp else None
+
+        def stale(d) -> bool:
+            if not d.strategy.startswith(TOPOLOGY_SENSITIVE_PREFIXES):
+                return False
+            return tag is None or tag not in (d.signature or "")
+
+        pruned = tuple(
+            f"{d.strategy}@{d.fingerprint}"
+            for d in model.decisions.prune(stale)
+        )
+    return ReplanReport(
+        old_topology=old_fp,
+        new_topology=new_fp,
+        pruned=pruned,
+        cache_cleared=True,
+    )
+
+
 @dataclass
 class ElasticPolicy:
     """Driver-facing bundle: detect -> checkpoint -> remesh -> resume."""
@@ -128,3 +205,27 @@ class ElasticPolicy:
         return plan_remesh(
             survivors, self.model_parallel, self.global_batch, multi_pod
         )
+
+    def remesh_and_replan(
+        self,
+        survivors: int,
+        comm,
+        ranks_per_node: Optional[int] = None,
+        multi_pod: bool = False,
+    ) -> Tuple[MeshPlan, ReplanReport]:
+        """The failure path with decision hygiene: pick the new mesh,
+        rebind the communicator's topology to it (``ranks_per_node``
+        blocks the surviving ranks onto nodes; None keeps a single-node
+        map), and demote every pin the reshape invalidated.  The next
+        ``build_halo_program`` / ``plan_neighbor`` on ``comm`` re-prices
+        from scratch on the new shape."""
+        from repro.comm.topology import Topology
+
+        mesh = self.on_failure(survivors, multi_pod)
+        nranks = math.prod(mesh.shape)
+        topo = (
+            Topology.blocked(nranks, ranks_per_node)
+            if ranks_per_node
+            else Topology.flat(nranks)
+        )
+        return mesh, replan_on_remesh(comm, topo)

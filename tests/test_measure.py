@@ -337,15 +337,22 @@ class TestStencilTable:
                                    (np.log2(26), 16.0, 4e-4))
         assert SystemParams.from_json(p.to_json()) == p
 
-    def test_store_format_4_and_older_envelopes_load(self, tmp_path):
-        assert STORE_FORMAT == 4
+    def test_store_format_5_and_older_envelopes_load(self, tmp_path):
+        assert STORE_FORMAT == 5
         store = ParamsStore(tmp_path)
         p = SystemParams(name="x", stencil_table=((4.7, 12.0, 3e-5),))
         out = store.save(p)
-        assert json.loads(out.read_text())["format"] == 4
+        assert json.loads(out.read_text())["format"] == 5
         assert store.load() == p
-        # a format-3 envelope (pre-stencil-table) still loads
+        # a format-4 envelope (pre-link-class) still loads
         d = json.loads(out.read_text())
+        d["format"] = 4
+        del d["params"]["link_tables"]
+        del d["params"]["link_fits"]
+        out.write_text(json.dumps(d))
+        got = store.load()
+        assert got is not None and got.link_tables is None
+        # a format-3 envelope (pre-stencil-table) still loads
         d["format"] = 3
         del d["params"]["stencil_table"]
         out.write_text(json.dumps(d))

@@ -575,11 +575,13 @@ class TestStoreFormats:
         store = ParamsStore(tmp_path)
         out = store.save(SystemParams(name="x"))
         d = json.loads(out.read_text())
-        assert d["format"] == STORE_FORMAT == 4
+        assert d["format"] == STORE_FORMAT == 5
         d["format"] = 2  # what a pre-per-axis envelope looks like
         d["params"].pop("wire_tables", None)
         d["params"].pop("wire_fits", None)
         d["params"].pop("stencil_table", None)
+        d["params"].pop("link_tables", None)
+        d["params"].pop("link_fits", None)
         out.write_text(json.dumps(d))
         got = store.load()
         assert got is not None and got.name == "x"
