@@ -39,6 +39,17 @@ checked-in ``ci_params.json`` tables must pick a mode priced no worse
 than monolithic, record it as an ``overlap/mode=...`` decision, and pin
 it on the rerun.
 
+``--assert-compress`` runs the length-aware compressed-wire gate (CI):
+a zero-heavy probed payload must select the lossless RLE wire and the
+``varlen`` schedule, its traced collective bytes must equal
+``plan.issued_bytes`` and land STRICTLY below the uncompressed ragged
+optimum (the sum of packed extents — compressed bytes are the bytes on
+the wire, not an accounting fiction), the exchange must stay bit-exact
+against the capacity (grouped) transport, the model's probed choice on
+the checked-in ``ci_params.json`` must never be priced worse than the
+unprobed (uncompressed) choice of the same exchange, and the lossy
+int8 wire must never be auto-picked.
+
 ``--assert-scale`` runs the simulated-scale gate (CI): sweep the
 predicted schedule ladder (``PerfModel.at_scale``) over rank counts up
 to the paper's 3072-process regime on the checked-in ``ci_params.json``
@@ -429,6 +440,92 @@ print("OVERLAP_MODE_OK")
 """
 
 
+#: the length-aware compressed-wire gate (CI): varlen RLE must move
+#: strictly fewer traced bytes than the uncompressed ragged optimum,
+#: bit-exact against the capacity transport; on the checked-in CI
+#: tables the probed choice is never priced worse than the unprobed
+#: one, and the lossy wire is never auto-picked
+_COMPRESS_ASSERT_CODE = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.comm import Communicator, RleWire, collective_payload_bytes
+from repro.comm.wireplan import reschedule
+from repro.core import FLOAT, Subarray
+from repro.measure import DecisionCache, load_ci_params
+
+mesh = Mesh(np.array(jax.devices()[:1]), ("ranks",))
+perms = [[(0, 0)]]
+src = np.zeros((32, 32), np.float32)
+src[10:12, 6:8] = 3.0  # zero-heavy halo shell: a compressible payload
+
+comm = Communicator(axis_name="ranks")
+ct = comm.commit(Subarray((32, 32), (16, 16), (4, 4), FLOAT))
+strats, plan = comm.plan_neighbor([ct], perms, probe=jnp.asarray(src))
+assert strats[0].name == RleWire.name, strats
+assert plan.schedule == "varlen", plan.schedule
+assert plan.stream_bytes and plan.effective_wire_bytes < plan.wire_bytes
+
+def exchange(p):
+    def body(buf):
+        return comm.neighbor_alltoallv(buf, [ct], [ct], perms,
+                                       plan=p, strategies=strats)
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=P(),
+                             out_specs=P(), check_vma=False))
+
+fn = exchange(plan)
+x = jnp.asarray(src)
+counts = collective_payload_bytes(fn, x)
+ragged_optimum = ct.packed_extent()  # the uncompressed exact-byte floor
+print(f"compress-bytes-check: traced={counts['total']} "
+      f"issued={plan.issued_bytes} capacity={plan.wire_bytes} "
+      f"uncompressed_optimum={ragged_optimum} "
+      f"ratio={plan.stream_ratio:.4f}")
+assert counts["total"] == plan.issued_bytes, (counts, plan.issued_bytes)
+assert counts["total"] < ragged_optimum, (
+    f"varlen moves {counts['total']} B >= the {ragged_optimum} B "
+    f"uncompressed optimum — the compressed bytes are not the bytes "
+    f"on the wire")
+
+# bit-exact against the capacity (grouped, untruncated) transport
+cap = reschedule(plan, "grouped")
+assert cap.issued_bytes == cap.wire_bytes
+out = np.asarray(fn(x))
+out_cap = np.asarray(exchange(cap)(x))
+np.testing.assert_array_equal(out, out_cap)
+np.testing.assert_array_equal(out[10:12, 6:8], src[10:12, 6:8])
+print("compress bit-exact vs capacity transport")
+
+# model-choice gate on the pinned CI tables: planning WITH the probe
+# must never be priced worse than planning without it (the probe only
+# adds options), and the lossy int8 wire is never auto-picked
+dc = DecisionCache()
+comm_ci = Communicator(axis_name="ranks", params=load_ci_params(),
+                       decisions=dc)
+ct_ci = comm_ci.commit(Subarray((32, 32), (16, 16), (4, 4), FLOAT))
+s_probed, p_probed = comm_ci.plan_neighbor([ct_ci], perms,
+                                           probe=jnp.asarray(src))
+s_plain, p_plain = comm_ci.plan_neighbor([ct_ci], perms)
+wire_rows = {d.fingerprint: d for d in dc.log
+             if d.strategy.startswith("wire/")}
+probed_cost = wire_rows[p_probed.fingerprint].total
+plain_cost = wire_rows[p_plain.fingerprint].total
+print(f"compress-model-check: probed={p_probed.schedule} "
+      f"({probed_cost:.3e}s) plain={p_plain.schedule} "
+      f"({plain_cost:.3e}s)")
+assert probed_cost <= plain_cost + 1e-15, (
+    f"the probed plan ({p_probed.schedule}, {probed_cost:.3e}s) is "
+    f"priced worse than the uncompressed plan ({p_plain.schedule}, "
+    f"{plain_cost:.3e}s)")
+for ss in (s_probed, s_plain, strats):
+    assert all(s.name != "int8wire" for s in ss), (
+        "the lossy int8 wire was auto-picked")
+print("COMPRESS_OK")
+"""
+
+
 #: the simulated-scale gate (CI): the measured tables + a synthetic
 #: two-tier topology must predict the paper-regime behavior — the wire
 #: schedule flips to tier-coalesced as ranks grow, with strictly fewer
@@ -503,6 +600,7 @@ print("SCALE_OK")
 
 def run(assert_ragged: bool = False, assert_program: bool = False,
         assert_overlap: bool = False, assert_scale: bool = False,
+        assert_compress: bool = False,
         padded_allowance: float = None) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -510,7 +608,8 @@ def run(assert_ragged: bool = False, assert_program: bool = False,
     env.setdefault("JAX_PLATFORMS", "cpu")
     if padded_allowance is not None:
         env["REPRO_PADDED_ALLOWANCE"] = str(padded_allowance)
-    gate = assert_ragged or assert_program or assert_overlap or assert_scale
+    gate = (assert_ragged or assert_program or assert_overlap
+            or assert_scale or assert_compress)
     # all requested gates run when several flags are given — combining
     # flags must never silently drop a regression check
     jobs = []
@@ -523,6 +622,8 @@ def run(assert_ragged: bool = False, assert_program: bool = False,
         jobs.append((_OVERLAP_ASSERT_CODE, "OVERLAP_MODE_OK"))
     if assert_scale:
         jobs.append((_SCALE_ASSERT_CODE, "SCALE_OK"))
+    if assert_compress:
+        jobs.append((_COMPRESS_ASSERT_CODE, "COMPRESS_OK"))
     if not jobs:
         jobs.append((_CODE, None))
     for code, ok_token in jobs:
@@ -551,5 +652,6 @@ if __name__ == "__main__":
         assert_program="--assert-program" in argv,
         assert_overlap="--assert-overlap" in argv,
         assert_scale="--assert-scale" in argv,
+        assert_compress="--assert-compress" in argv,
         padded_allowance=allowance,
     )

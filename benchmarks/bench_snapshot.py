@@ -1,4 +1,4 @@
-"""Machine-readable perf snapshot: ``BENCH_9.json``.
+"""Machine-readable perf snapshot: ``BENCH_10.json``.
 
 The CSV suites report human-scannable tables; this suite records the
 numbers a perf *trajectory* needs — one JSON file per run, stable keys,
@@ -6,10 +6,10 @@ diffable run over run.  Times are CPU-container proxies (see
 ``benchmarks/common.py``): the values that transfer to TPU are the
 byte counts, the relative orderings, and the probe overhead ratios.
 
-Schema (``"format": 2``)::
+Schema (``"format": 3``)::
 
     {
-      "format": 2,                      # bump on incompatible change
+      "format": 3,                      # bump on incompatible change
       "suite": "snapshot",
       "halo": {                         # the smoother's fused program
         "fingerprint": str,             # program decision key
@@ -56,6 +56,22 @@ Schema (``"format": 2``)::
           "inter_messages": {str: int}  # slow-tier messages per rank
         }]
       },
+      "compress": {                     # length-aware wire (PR 10):
+        "strategy": str,                #   what the probe selected
+        "schedule": str,                #   "varlen" when it truncates
+        "capacity_bytes": int,          # stored-mode wire bound
+        "stream_bytes": int,            # probed effective bytes moved
+        "ratio": float,                 # stream / capacity
+        "achieved_ratio_mean": float,   # per-exchange telemetry ring
+        "samples": int,
+        "exchanges": int,               # Communicator compress counters
+        "codec": {str: [{               # measure_compress_table rows
+          "log2_total": float,
+          "compress_s": float,
+          "decompress_s": float,
+          "ratio_sample": float
+        }]}
+      },
       "probes": {                       # observability self-cost
         "telemetry_overhead": float,    # probe cost / iteration cost
         "trace_overhead": float,
@@ -63,7 +79,7 @@ Schema (``"format": 2``)::
       }
     }
 
-Run via ``python -m benchmarks.run snapshot`` (writes ``BENCH_9.json``
+Run via ``python -m benchmarks.run snapshot`` (writes ``BENCH_10.json``
 in the CWD) or ``python -m benchmarks.bench_snapshot --out PATH``.
 """
 
@@ -80,8 +96,8 @@ from benchmarks.bench_measure import (
 )
 from benchmarks.common import emit
 
-SNAPSHOT_FORMAT = 2
-SNAPSHOT_FILENAME = "BENCH_9.json"
+SNAPSHOT_FORMAT = 3
+SNAPSHOT_FILENAME = "BENCH_10.json"
 
 #: the simulated-scale sweep: fixed ranks-per-node, rank counts up to
 #: the paper's 3072-process regime (same sweep --assert-scale gates on)
@@ -202,6 +218,65 @@ def snapshot(iters: int = 10) -> dict:
             for e in ladder
         ],
     }
+    # the length-aware compressed wire on the canonical zero-heavy
+    # probe: plan with the payload sample, run the varlen exchange a few
+    # times eagerly so the compress counters and the achieved-ratio
+    # telemetry ring carry real samples, then sweep the codec timings
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import FLOAT, Subarray
+    from repro.measure.bench import measure_compress_table
+
+    ctel = ExchangeTelemetry()
+    ccomm = Communicator(axis_name="data", telemetry=ctel)
+    cct = ccomm.commit(Subarray((32, 32), (16, 16), (4, 4), FLOAT))
+    csrc = np.zeros((32, 32), np.float32)
+    csrc[10:12, 6:8] = 3.0
+    cperms = [[(0, 0)]]
+    cstrats, cplan = ccomm.plan_neighbor(
+        [cct], cperms, probe=jnp.asarray(csrc)
+    )
+    cfn = jax.jit(shard_map(
+        lambda b: ccomm.neighbor_alltoallv(
+            b, [cct], [cct], cperms, plan=cplan, strategies=cstrats
+        ),
+        mesh=Mesh(np.array(jax.devices()[:1]), ("data",)),
+        in_specs=P(), out_specs=P(), check_vma=False,
+    ))
+    cx = jnp.asarray(csrc)
+    for _ in range(iters):
+        jax.block_until_ready(cfn(cx))
+    cring = ctel.get(f"{cplan.fingerprint}/ratio")
+    cstats = ccomm.stats()
+    ctable = measure_compress_table(
+        total_bytes=(1 << 12, 1 << 16), iters=3
+    )
+    compress = {
+        "strategy": cstrats[0].name,
+        "schedule": cplan.schedule,
+        "capacity_bytes": int(cplan.wire_bytes),
+        "stream_bytes": int(cplan.effective_wire_bytes),
+        "ratio": float(cplan.stream_ratio),
+        "achieved_ratio_mean": cring.mean if cring else 0.0,
+        "samples": cring.count if cring else 0,
+        "exchanges": int(cstats["compress_exchanges"]),
+        "codec": {
+            name: [
+                {
+                    "log2_total": r[0],
+                    "compress_s": r[1],
+                    "decompress_s": r[2],
+                    "ratio_sample": r[3],
+                }
+                for r in rows
+            ]
+            for name, rows in sorted(ctable.items())
+        },
+    }
     return {
         "format": SNAPSHOT_FORMAT,
         "suite": "snapshot",
@@ -229,6 +304,7 @@ def snapshot(iters: int = 10) -> dict:
             "drift": overlap_drift,
         },
         "scale": scale,
+        "compress": compress,
         "probes": {
             "telemetry_overhead": telemetry_overhead(iters=iters),
             "trace_overhead": trace_overhead(iters=iters),
@@ -262,6 +338,19 @@ def run(out: str = SNAPSHOT_FILENAME) -> Path:
              row["costs"][row["schedule"]] * 1e6,
              f"schedule={row['schedule']};nodes={row['nodes']}"
              f";inter={row['inter_messages'].get('tiered', 0)}")
+    cm = snap["compress"]
+    emit("snapshot/compress-stream-bytes", float(cm["stream_bytes"]),
+         f"capacity={cm['capacity_bytes']};schedule={cm['schedule']}"
+         f";strategy={cm['strategy']}")
+    emit("snapshot/compress-ratio", cm["ratio"],
+         f"achieved={cm['achieved_ratio_mean']:.4f}"
+         f";samples={cm['samples']}")
+    for name, rows in cm["codec"].items():
+        emit(f"snapshot/compress-codec-{name}",
+             rows[-1]["compress_s"] * 1e6,
+             f"log2n={rows[-1]['log2_total']:.0f}"
+             f";decode_us={rows[-1]['decompress_s'] * 1e6:.2f}"
+             f";ratio={rows[-1]['ratio_sample']:.4f}")
     emit("snapshot/telemetry-overhead-pct",
          snap["probes"]["telemetry_overhead"] * 100.0,
          f"budget={snap['probes']['budget'] * 100:.0f}%")

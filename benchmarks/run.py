@@ -6,7 +6,7 @@ derived`` CSV.
     PYTHONPATH=src python -m benchmarks.run \
         [fig6|fig7|fig9|fig12|measure|snapshot]
 
-``snapshot`` additionally writes the machine-readable ``BENCH_9.json``
+``snapshot`` additionally writes the machine-readable ``BENCH_10.json``
 perf snapshot (schema: ``benchmarks/bench_snapshot.py``).
 """
 

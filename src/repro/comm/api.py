@@ -60,8 +60,18 @@ from repro.kernels.geometry import (
     PackGeometry,
     plan_geometry,
 )
-from repro.kernels.pack import pack_dma, pack_ragged, pack_rows
-from repro.kernels.unpack import unpack_dma, unpack_ragged, unpack_rows
+from repro.kernels.pack import (
+    pack_compress_ragged,
+    pack_dma,
+    pack_ragged,
+    pack_rows,
+)
+from repro.kernels.unpack import (
+    decode_unpack_ragged,
+    unpack_dma,
+    unpack_ragged,
+    unpack_rows,
+)
 from repro.comm.perfmodel import (
     PerfModel,
     StrategyEstimate,
@@ -132,6 +142,10 @@ class Strategy:
     wire_only: bool = False
     #: participates in automatic PerfModel selection
     selectable: bool = True
+    #: the wire format is length-aware: the live payload is a prefix of
+    #: the capacity wire, truncatable at :meth:`probe_stream_bytes` —
+    #: the "varlen" wire schedule only forms over such strategies
+    supports_varlen: bool = False
     #: calibration sweep cap on block count (None = unbounded)
     calibration_cap: Optional[int] = None
 
@@ -165,6 +179,15 @@ class Strategy:
 
     def wire_bytes(self, ct: CommittedType, incount: int = 1) -> int:
         return ct.packed_extent(incount)
+
+    def probe_stream_bytes(
+        self, ct: CommittedType, incount: int, buf: jax.Array
+    ) -> int:
+        """Effective wire bytes for a *concrete* payload sample.  The
+        default wire format is not length-aware, so the stream length
+        is the capacity; ``supports_varlen`` strategies override this
+        with an exact probe of the encoded stream."""
+        return self.wire_bytes(ct, incount)
 
     def wire_segment(
         self, ct: CommittedType, incount: int = 1, offset: int = 0
@@ -911,6 +934,13 @@ class Communicator:
         self.wire_class_ops: Dict[str, int] = {}
         self.wire_class_bytes: Dict[str, int] = {}
         self.wire_class_drains: Dict[str, int] = {}
+        # compressed-wire (varlen schedule) accounting: exchanges that
+        # rode a length-aware transport, their capacity bytes vs the
+        # stream bytes actually issued — the honest ratio stats()
+        # publishes as the ``comm.compress.ratio`` gauge
+        self.compress_exchanges = 0
+        self.compress_capacity_bytes = 0
+        self.compress_stream_bytes = 0
 
     def _tracing_spans(self, *operands) -> bool:
         """Whether the blocking entry points should record spans for
@@ -1081,6 +1111,7 @@ class Communicator:
         strategies: Optional[Sequence[Strategy]] = None,
         uniform_waste_tolerance: float = 0.0,
         schedule_policy: Optional[str] = None,
+        probe: Optional[jax.Array] = None,
     ) -> Tuple[Tuple[Strategy, ...], WirePlan]:
         """Select a strategy per transfer and lay the exchange out as an
         exact-byte :class:`WirePlan`.  Call once at setup time (e.g.
@@ -1105,6 +1136,16 @@ class Communicator:
         ``"exact"``   the byte-exact ladder (``uniform`` only within
                       ``uniform_waste_tolerance`` of zero padding) — the
                       strict wire-bytes regression gates assume this.
+
+        ``probe`` (a *concrete* sample of the exchange buffer) turns on
+        length-aware planning: strategy selection may pick a
+        ``supports_varlen`` compressor priced at the payload's probed
+        stream length, the plan is annotated with per-class
+        ``stream_bytes`` (single-transfer classes only — a truncated
+        multi-transfer class would cut its later segments), and the
+        model-priced schedule choice can then pick the ``varlen``
+        transport.  The ratio is taken from the probe, never assumed;
+        a tracer probe is ignored.
         """
         if schedule_policy is None:
             schedule_policy = DEFAULT_SCHEDULE_POLICY
@@ -1117,11 +1158,25 @@ class Communicator:
             time.perf_counter()
             if self.tracer is not None and self.tracer.active else None
         )
-        strats = (
-            tuple(strategies)
-            if strategies is not None
-            else tuple(self.select(ct, 1, wire=True) for ct in send_cts)
-        )
+        if probe is not None and isinstance(probe, jax.core.Tracer):
+            probe = None  # tracers carry no data to probe
+        if strategies is not None:
+            strats = tuple(strategies)
+        elif probe is not None and isinstance(self.policy, ModelPolicy):
+            # probed selection: varlen-capable compressors are priced at
+            # the payload's actual stream length, so a zero-heavy class
+            # can pick rle where capacity pricing never would
+            strats = tuple(
+                self.strategies.get(
+                    self.model.select(
+                        ct, 1, allow_bounding=True,
+                        registry=self.strategies, probe=probe,
+                    ).strategy
+                )
+                for ct in send_cts
+            )
+        else:
+            strats = tuple(self.select(ct, 1, wire=True) for ct in send_cts)
         segs = [strats[i].wire_segment(send_cts[i]) for i in range(len(strats))]
         plan = plan_wire(
             tuple(s.nbytes for s in segs),
@@ -1130,6 +1185,24 @@ class Communicator:
             uniform_waste_tolerance=uniform_waste_tolerance,
             topology=self.model.topology,
         )
+        if probe is not None and any(
+            getattr(s, "supports_varlen", False) for s in strats
+        ):
+            # attach per-class stream lengths AFTER planning so the
+            # plan_wire cache stays payload-independent; only
+            # single-transfer classes may truncate
+            per_transfer = [
+                strats[i].probe_stream_bytes(send_cts[i], 1, probe)
+                for i in range(len(strats))
+            ]
+            per_group = tuple(
+                min(per_transfer[grp.transfers[0]], grp.nbytes)
+                if len(grp.transfers) == 1
+                else grp.nbytes
+                for grp in plan.groups
+            )
+            if sum(per_group) < plan.wire_bytes:
+                plan = plan.with_stream_bytes(per_group)
         note = ""
         if schedule_policy == "model":
             plan, costs = self.model.choose_wire_schedule(plan)
@@ -1151,6 +1224,14 @@ class Communicator:
                         f"{plan.fingerprint}/c{g}", t_c,
                         f"class/{plan.schedule}",
                     )
+            if plan.stream_bytes:
+                # achieved-ratio ring: predicted = the probed ratio this
+                # plan was priced at; each exchange observes the ratio
+                # it actually issued so drift can flag decay
+                self.telemetry.register(
+                    f"{plan.fingerprint}/ratio", plan.stream_ratio,
+                    "compress/ratio",
+                )
         if t_plan0 is not None:
             self.tracer.add_manual(
                 "plan", t_plan0, time.perf_counter() - t_plan0,
@@ -1171,6 +1252,52 @@ class Communicator:
             rows = []
             for goff, grp in zip(plan.group_offsets, plan.groups):
                 payload = lax.dynamic_slice(wire, (goff,), (grp.nbytes,))
+                rows.append(lax.ppermute(payload, axis, list(grp.perm)))
+            return rows
+
+        if plan.schedule == "varlen":
+            # length-aware transport: each class ships only its probed
+            # stream length — a strict PREFIX of its capacity slot (the
+            # compressed formats interleave run records, so truncation
+            # loses nothing the decoder needs).  Native ragged collective
+            # with per-class stream sizes when the primitive exists;
+            # truncated per-class ppermutes otherwise.  Bit-exact vs the
+            # capacity path for payloads within the probed stream budget.
+            if len(plan.stream_bytes) != plan.ngroups:
+                raise ValueError("varlen schedule on a stream-unannotated plan")
+            if compat.has_ragged_all_to_all() and plan.fused:
+                ngroups = len(plan.groups)  # pragma: no cover - needs new JAX
+                in_off = np.zeros((plan.nranks, plan.nranks), np.int32)
+                in_sz = np.zeros_like(in_off)
+                out_off = np.zeros_like(in_off)
+                recv_sz = np.zeros_like(in_off)
+                for r in range(plan.nranks):
+                    for d, g in enumerate(plan.send_rows[r]):
+                        if g < ngroups:
+                            in_off[r, d] = plan.group_offsets[g]
+                            in_sz[r, d] = plan.stream_bytes[g]
+                            out_off[r, d] = plan.group_offsets[g]
+                    for g, s in enumerate(plan.recv_rows[r]):
+                        recv_sz[r, s] = plan.stream_bytes[g]
+                me = lax.axis_index(axis)
+                got = compat.ragged_all_to_all(
+                    wire,
+                    jnp.zeros_like(wire),
+                    jnp.asarray(in_off)[me],
+                    jnp.asarray(in_sz)[me],
+                    jnp.asarray(out_off)[me],
+                    jnp.asarray(recv_sz)[me],
+                    axis_name=axis,
+                )
+                return [
+                    lax.dynamic_slice(got, (goff,), (sb,))
+                    for goff, sb in zip(plan.group_offsets, plan.stream_bytes)
+                ]
+            rows = []
+            for goff, sb, grp in zip(
+                plan.group_offsets, plan.stream_bytes, plan.groups
+            ):
+                payload = lax.dynamic_slice(wire, (goff,), (sb,))
                 rows.append(lax.ppermute(payload, axis, list(grp.perm)))
             return rows
 
@@ -1348,10 +1475,17 @@ class Communicator:
             )
 
         def leaf_packer(strat: Strategy, ct: CommittedType):
-            return lambda b: strat.pack(b, ct)
+            # fused pack+compress: compressors expose their wire encoder
+            # separately so the member gather and the encode ride ONE
+            # traced expression (no extra materialized pass); plain
+            # strategies' wire format IS their packed bytes
+            enc = getattr(strat, "encode_wire", None)
+            if enc is not None:
+                return (lambda b: ops.pack(b, ct), enc)
+            return (lambda b: strat.pack(b, ct), None)
 
         entries = [
-            (plan.segments[i].offset, leaf_packer(strategies[i], send_cts[i]))
+            (plan.segments[i].offset, *leaf_packer(strategies[i], send_cts[i]))
             for i in range(n)
         ]
         if self._tracing_spans(buf):
@@ -1364,7 +1498,7 @@ class Communicator:
             )
             with self.tracer.span("pack", pred=t_pack,
                                   nbytes=plan.wire_bytes):
-                wire = pack_ragged(buf, entries, plan.wire_bytes)
+                wire = pack_compress_ragged(buf, entries, plan.wire_bytes)
                 jax.block_until_ready(wire)
             with self.tracer.span("wire", pred=t_wire,
                                   wire_bytes=plan.issued_bytes,
@@ -1372,37 +1506,73 @@ class Communicator:
                 group_rows = self._issue_wire(wire, plan, axis)
                 jax.block_until_ready(group_rows)
         else:
-            wire = pack_ragged(buf, entries, plan.wire_bytes)
+            wire = pack_compress_ragged(buf, entries, plan.wire_bytes)
             group_rows = self._issue_wire(wire, plan, axis)
+        varlen = plan.schedule == "varlen"
         self.wire_ops += plan.wire_ops
         self.wire_payload_bytes += plan.issued_bytes
         fp = plan.fingerprint
+        if varlen:
+            # compressed-wire accounting: capacity vs what actually
+            # moved, plus the achieved-ratio ring drift audits against
+            self.compress_exchanges += 1
+            self.compress_capacity_bytes += plan.wire_bytes
+            self.compress_stream_bytes += plan.effective_wire_bytes
+            if self.telemetry is not None:
+                self.telemetry.observe(f"{fp}/ratio", plan.stream_ratio)
         for g, grp in enumerate(plan.groups):
             key = f"{fp}/c{g}"
             self.wire_class_ops[key] = self.wire_class_ops.get(key, 0) + 1
             self.wire_class_bytes[key] = (
-                self.wire_class_bytes.get(key, 0) + grp.nbytes
+                self.wire_class_bytes.get(key, 0)
+                + (plan.stream_bytes[g] if varlen else grp.nbytes)
             )
 
+        def leaf_decoder(strat, recv_ct):
+            dec = getattr(strat, "decode_wire", None)
+            if dec is None:
+                return None
+            return lambda part: dec(part, recv_ct.size)
+
         def leaf_unpacker(strat, recv_ct, send_ct):
+            # fused decompress+unpack: when the strategy exposes its
+            # wire decoder the leaf receives decoded MEMBER bytes and
+            # only scatters; otherwise unpack_wire consumes the raw
+            # wire payload as before
+            if getattr(strat, "decode_wire", None) is not None:
+                return lambda dst, member: self.select(
+                    recv_ct, 1, wire=False
+                ).unpack(dst, member, recv_ct, 1)
             return lambda dst, part: strat.unpack_wire(
                 self, dst, part, recv_ct, send_ct, 1
             )
 
-        def class_unpacker(grp: WireGroup):
+        def class_unpacker(grp: WireGroup, g: int):
+            # under the varlen schedule a single-transfer class's
+            # payload is the truncated stream — the leaf decodes it at
+            # its received length (the decoder derives the run count
+            # from the wire length)
+            stream = plan.stream_bytes[g] if varlen else grp.nbytes
             leaves = [
                 (
                     off,
-                    plan.segments[i].nbytes,
+                    stream if len(grp.transfers) == 1
+                    else plan.segments[i].nbytes,
+                    leaf_decoder(strategies[i], recv_cts[i]),
                     leaf_unpacker(strategies[i], recv_cts[i], send_cts[i]),
                 )
                 for i, off in zip(grp.transfers, grp.offsets)
             ]
-            return lambda dst, payload: unpack_ragged(dst, payload, leaves)
+            return lambda dst, payload: decode_unpack_ragged(
+                dst, payload, leaves
+            )
 
         classes = [
-            ClassRequest(g, group_rows[g], grp.transfers, grp.nbytes,
-                         class_unpacker(grp))
+            ClassRequest(
+                g, group_rows[g], grp.transfers,
+                plan.stream_bytes[g] if varlen else grp.nbytes,
+                class_unpacker(grp, g),
+            )
             for g, grp in enumerate(plan.groups)
         ]
         # drain-side probe: gauge the completion order unconditionally
@@ -1570,6 +1740,14 @@ class Communicator:
             "wire_class_ops": dict(self.wire_class_ops),
             "wire_class_bytes": dict(self.wire_class_bytes),
             "wire_class_drains": dict(self.wire_class_drains),
+            "compress_exchanges": self.compress_exchanges,
+            "compress_capacity_bytes": self.compress_capacity_bytes,
+            "compress_stream_bytes": self.compress_stream_bytes,
+            "compress_ratio": (
+                self.compress_stream_bytes / self.compress_capacity_bytes
+                if self.compress_capacity_bytes
+                else 1.0
+            ),
             "telemetry_keys": (
                 len(self.telemetry) if self.telemetry is not None else 0
             ),

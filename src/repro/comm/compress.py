@@ -29,6 +29,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+import numpy as np
+
 import jax.numpy as jnp
 from jax import lax
 
@@ -43,6 +45,7 @@ __all__ = [
     "RleWire",
     "RLE_WIRE",
     "RLE_HEADER_BYTES",
+    "RLE_RUN_BYTES",
 ]
 
 #: bytes per float32 dequantization scale in the wire header
@@ -77,20 +80,27 @@ class Int8Wire(Strategy):
 
     # -- §5 cost model ----------------------------------------------------
     def model_pack(self, model, ct, incount):
-        p = model.params
+        # pack the members (priced like rows) + quantize: the measured
+        # compress sweep when calibrated, else one extra read+write
+        # sweep of the packed bytes
         size = ct.size * incount
-        # pack the members (priced like rows) + quantize (one extra
-        # read+write sweep of the packed bytes)
         from repro.comm.api import ROWS
 
-        return ROWS.model_pack(model, ct, incount) + 2 * size / p.hbm_bw
+        base = ROWS.model_pack(model, ct, incount)
+        m = model.measured_compress(self.name, size)
+        if m is not None:
+            return base + m[0]
+        return base + 2 * size / model.params.hbm_bw
 
     def model_unpack(self, model, ct, incount):
-        p = model.params
         size = ct.size * incount
         from repro.comm.api import ROWS
 
-        return ROWS.model_unpack(model, ct, incount) + 2 * size / p.hbm_bw
+        base = ROWS.model_unpack(model, ct, incount)
+        m = model.measured_compress(self.name, size)
+        if m is not None:
+            return base + m[1]
+        return base + 2 * size / model.params.hbm_bw
 
     def wire_bytes(self, ct: CommittedType, incount: int = 1) -> int:
         # one int8 per float32 member + one scale per quantization block
@@ -98,8 +108,12 @@ class Int8Wire(Strategy):
         return _SCALE_BYTES * self._nblocks(nfloats) + nfloats
 
     # -- execution --------------------------------------------------------
-    def pack(self, buf, ct, incount: int = 1, interpret: Optional[bool] = None):
-        member = ops.pack(buf, ct, incount=incount, interpret=interpret)
+    def encode_wire(self, member):
+        """Packed member bytes -> quantized wire (per-block scales header
+        + int8 body).  Split out from :meth:`pack` so the fused
+        pack+compress entry and the compress-throughput sweep
+        (:func:`repro.measure.bench.measure_compress_table`) can time the
+        quantize transform on its own."""
         f = lax.bitcast_convert_type(
             member.reshape(-1, 4), jnp.float32
         ).reshape(-1)
@@ -119,8 +133,14 @@ class Int8Wire(Strategy):
         ).reshape(-1)
         return jnp.concatenate([header, ops.byte_view(q)])
 
-    def unpack_wire(self, comm, dst, wire, recv_ct, send_ct=None, incount=1):
-        nfloats = (recv_ct.size * incount) // 4
+    def pack(self, buf, ct, incount: int = 1, interpret: Optional[bool] = None):
+        return self.encode_wire(
+            ops.pack(buf, ct, incount=incount, interpret=interpret)
+        )
+
+    def decode_wire(self, wire, n: int):
+        """Wire bytes -> the ``n`` dequantized member bytes (lossy)."""
+        nfloats = n // 4
         nscales = (wire.shape[0] - nfloats) // _SCALE_BYTES
         scales = lax.bitcast_convert_type(
             wire[: _SCALE_BYTES * nscales].reshape(nscales, _SCALE_BYTES),
@@ -138,7 +158,10 @@ class Int8Wire(Strategy):
                 )
             expand = jnp.repeat(scales, self.block_elems)[:nfloats]
             f = q.astype(jnp.float32) * expand
-        member = lax.bitcast_convert_type(f.reshape(-1, 1), jnp.uint8).reshape(-1)
+        return lax.bitcast_convert_type(f.reshape(-1, 1), jnp.uint8).reshape(-1)
+
+    def unpack_wire(self, comm, dst, wire, recv_ct, send_ct=None, incount=1):
+        member = self.decode_wire(wire, recv_ct.size * incount)
         u = comm.select(recv_ct, incount, wire=False)
         return u.unpack(dst, member, recv_ct, incount)
 
@@ -160,7 +183,8 @@ INT8_WIRE = Int8Wire()
 RLE_HEADER_BYTES = 8
 
 #: bytes one RLE run occupies on the wire (uint8 value + uint32 length)
-_RUN_BYTES = 5
+RLE_RUN_BYTES = 5
+_RUN_BYTES = RLE_RUN_BYTES
 
 
 class RleWire(Strategy):
@@ -180,22 +204,35 @@ class RleWire(Strategy):
     beyond the encoded stream is zero.  A payload whose RLE stream would
     not fit the capacity ships verbatim under ``mode = stored`` — the
     DEFLATE stored-block discipline — so the round trip is exact for
-    *every* input.  The win is therefore not in the static byte count
-    (which the :class:`~repro.comm.wireplan.WirePlan` accounts honestly,
-    header included) but in what rides the wire being almost entirely
-    zeros for sparse payloads — and in the format being ready for
-    length-aware transports (the native ragged collective, host DMA)
-    that can truncate at the header's stream length.
+    *every* input.
 
-    Registered ``selectable = False``: the capacity wire is never
-    *smaller* than the packed bytes, so the model must never auto-pick
-    it; opt in per communicator with ``FixedPolicy(RleWire.name)``.
-    ``wire_only``: local pack/unpack fall back to the normal kernels.
+    The body is laid out as **interleaved 5-byte run records** (run
+    ``i`` at body offset ``5*i`` carries ``value:u8 ++ length:u32le``),
+    so the live encoded stream is literally a *prefix* of the capacity
+    wire: ``wire[:8 + 5*nruns]``.  That is what makes the format
+    transport-truncatable — the ``varlen`` wire schedule
+    (:meth:`Communicator._issue_wire`) ships only
+    :meth:`probe_stream_bytes` bytes per class, and
+    :meth:`unpack_wire` decodes either a full capacity wire *or* a
+    header-prefixed stream whose run count it derives from the wire
+    length.  A stream budget comes from a calibration probe of the
+    actual payload (never assumed); a stored-mode payload never
+    truncates (its stream length *is* the capacity).
+
+    Registered ``selectable = True``: byte-exactness holds in both
+    modes, and the strategy is priced honestly — at *capacity* bytes
+    (header included, always >= the packed member bytes) unless the
+    selection carries a probed stream length, so the model only ever
+    picks it when a length-aware transport makes the compressed bytes
+    the bytes actually moved.  ``wire_only``: local pack/unpack fall
+    back to the normal kernels, and the strategy stays out of the
+    measured pack/unpack sweeps (``StrategyRegistry.measurable``).
     """
 
     name = "rlewire"
-    wire_only = True       # the RLE format only exists on the wire
-    selectable = False     # capacity >= member bytes: opt in explicitly
+    wire_only = True        # the RLE format only exists on the wire
+    selectable = True       # lossless; priced at capacity unless probed
+    supports_varlen = True  # live stream is a prefix of the capacity wire
 
     def applicable(self, ct: CommittedType) -> bool:
         return ct.size > 0
@@ -210,23 +247,60 @@ class RleWire(Strategy):
     def model_pack(self, model, ct, incount):
         from repro.comm.api import ROWS
 
-        # pack the members + one encode sweep (read + write)
+        # pack the members + the encode sweep: measured compress table
+        # when calibrated, else one extra read + write of the bytes
         size = ct.size * incount
-        return ROWS.model_pack(model, ct, incount) + 2 * size / model.params.hbm_bw
+        base = ROWS.model_pack(model, ct, incount)
+        m = model.measured_compress(self.name, size)
+        if m is not None:
+            return base + m[0]
+        return base + 2 * size / model.params.hbm_bw
 
     def model_unpack(self, model, ct, incount):
         from repro.comm.api import ROWS
 
         size = ct.size * incount
-        return ROWS.model_unpack(model, ct, incount) + 2 * size / model.params.hbm_bw
+        base = ROWS.model_unpack(model, ct, incount)
+        m = model.measured_compress(self.name, size)
+        if m is not None:
+            return base + m[1]
+        return base + 2 * size / model.params.hbm_bw
 
     def wire_bytes(self, ct: CommittedType, incount: int = 1) -> int:
         # capacity layout: header + the member bytes (stored-mode bound)
         return RLE_HEADER_BYTES + ct.size * incount
 
+    # -- length-aware transport -------------------------------------------
+    def probe_stream_bytes(self, ct: CommittedType, incount, buf) -> int:
+        """Exact stream length (header + live run records) for a
+        *concrete* payload sample — the calibration probe the varlen
+        transport truncates at.  Falls back to capacity for tracers
+        (no data to probe) and for stored-mode payloads (their stream
+        *is* the capacity)."""
+        import jax
+
+        cap = self.wire_bytes(ct, incount)
+        if isinstance(buf, jax.core.Tracer):
+            return cap  # tracer: nothing to probe
+        try:
+            member = np.asarray(ops.pack(jnp.asarray(buf), ct, incount=incount))
+        except Exception:
+            return cap
+        n = member.size
+        if n == 0:
+            return cap
+        runs = int(np.count_nonzero(member[1:] != member[:-1])) + 1
+        if runs > self._run_capacity(n):
+            return cap  # would ship stored: no truncation possible
+        return min(RLE_HEADER_BYTES + _RUN_BYTES * runs, cap)
+
     # -- execution --------------------------------------------------------
-    def pack(self, buf, ct, incount: int = 1, interpret: Optional[bool] = None):
-        b = ops.pack(buf, ct, incount=incount, interpret=interpret)
+    def encode_wire(self, member):
+        """Member bytes -> capacity wire (header + interleaved run
+        records + zero tail, or header + stored body).  The fused
+        pack+compress entry (:func:`repro.kernels.pack.pack_compress_ragged`)
+        composes this with the member gather in one traced pass."""
+        b = member
         n = b.shape[0]
         R = self._run_capacity(n)
         if R == 0:
@@ -247,13 +321,12 @@ class RleWire(Strategy):
         mode = jnp.where(fits, jnp.uint32(1), jnp.uint32(0))
         count_bytes = lax.bitcast_convert_type(
             counts[:R].astype(jnp.uint32), jnp.uint8
-        ).reshape(-1)
+        )  # (R, 4)
+        records = jnp.concatenate(
+            [values[:R].astype(jnp.uint8)[:, None], count_bytes], axis=1
+        ).reshape(_RUN_BYTES * R)  # run i at body offset 5*i
         rle_body = jnp.concatenate(
-            [
-                values[:R].astype(jnp.uint8),
-                count_bytes,
-                jnp.zeros((n - _RUN_BYTES * R,), jnp.uint8),
-            ]
+            [records, jnp.zeros((n - _RUN_BYTES * R,), jnp.uint8)]
         )
         body = jnp.where(fits, rle_body, b)
         header = lax.bitcast_convert_type(
@@ -261,29 +334,47 @@ class RleWire(Strategy):
         ).reshape(-1)
         return jnp.concatenate([header, body])
 
-    def unpack_wire(self, comm, dst, wire, recv_ct, send_ct=None, incount=1):
-        n = recv_ct.size * incount
-        if wire.shape[0] != RLE_HEADER_BYTES + n:
-            raise ValueError(
-                f"rle wire carries {wire.shape[0]} bytes; expected "
-                f"{RLE_HEADER_BYTES + n} for a {n}-byte member payload"
-            )
+    def pack(self, buf, ct, incount: int = 1, interpret: Optional[bool] = None):
+        return self.encode_wire(
+            ops.pack(buf, ct, incount=incount, interpret=interpret)
+        )
+
+    def decode_wire(self, wire, n: int):
+        """Wire bytes -> the ``n`` member bytes.  Accepts either the
+        full capacity wire (``8 + n`` bytes, mode-dependent stored/rle
+        body) or a truncated varlen stream (``8 + 5*S`` bytes, always
+        rle mode; ``S`` derived from the wire length)."""
+        total = wire.shape[0]
+        body = wire[RLE_HEADER_BYTES:]
+        if total == RLE_HEADER_BYTES + n:
+            R = self._run_capacity(n)
+            stream_only = False
+        else:
+            rec = total - RLE_HEADER_BYTES
+            if rec < 0 or rec % _RUN_BYTES or rec > _RUN_BYTES * self._run_capacity(n):
+                raise ValueError(
+                    f"rle wire carries {total} bytes; expected "
+                    f"{RLE_HEADER_BYTES + n} (capacity) for a {n}-byte "
+                    f"member payload, or header + whole 5-byte run records"
+                )
+            R = rec // _RUN_BYTES
+            stream_only = True
+        if R == 0:
+            return body
+        records = body[: _RUN_BYTES * R].reshape(R, _RUN_BYTES)
+        values = records[:, 0]
+        counts = lax.bitcast_convert_type(records[:, 1:], jnp.uint32)
+        # live counts sum to n exactly; dead slots are 0
+        decoded = jnp.repeat(values, counts, total_repeat_length=n)
+        if stream_only:
+            return decoded  # a truncated stream is always rle mode
         header = lax.bitcast_convert_type(
             wire[:RLE_HEADER_BYTES].reshape(2, 4), jnp.uint32
         )
-        mode = header[0]
-        body = wire[RLE_HEADER_BYTES:]
-        R = self._run_capacity(n)
-        if R == 0:
-            member = body
-        else:
-            values = body[:R]
-            counts = lax.bitcast_convert_type(
-                body[R : _RUN_BYTES * R].reshape(R, 4), jnp.uint32
-            )
-            # live counts sum to n exactly; dead slots are 0
-            decoded = jnp.repeat(values, counts, total_repeat_length=n)
-            member = jnp.where(mode == 1, decoded, body)
+        return jnp.where(header[0] == 1, decoded, body)
+
+    def unpack_wire(self, comm, dst, wire, recv_ct, send_ct=None, incount=1):
+        member = self.decode_wire(wire, recv_ct.size * incount)
         u = comm.select(recv_ct, incount, wire=False)
         return u.unpack(dst, member, recv_ct, incount)
 

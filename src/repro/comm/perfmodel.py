@@ -128,6 +128,14 @@ class SystemParams:
     # log2_window_bytes, sec) — prices the deep-halo redundant-compute
     # term from a real sweep instead of the contiguous-copy proxy
     stencil_table: Optional[Table2D] = None
+    # measured compress/decompress sweep (STORE_FORMAT 6): per wire
+    # compressor, rows (log2_total_bytes, compress_sec, decompress_sec,
+    # achieved_ratio_sample) — prices the pack-side cost of a compressed
+    # schedule from a real sweep instead of the 2x-HBM-sweep analytic
+    # proxy.  The ratio column is a *sample* on the sweep's synthetic
+    # payload, recorded for reference; the ratio the model prices a
+    # schedule at always comes from a probe of the actual payload.
+    compress_table: Optional[Dict[str, Table2D]] = None
 
     def __post_init__(self):
         # normalize list-of-lists (JSON) into hashable tuple tables
@@ -144,6 +152,9 @@ class SystemParams:
         )
         object.__setattr__(self, "link_fits", _freeze_axis_fits(self.link_fits))
         object.__setattr__(self, "stencil_table", _freeze1d(self.stencil_table))
+        object.__setattr__(
+            self, "compress_table", _freeze2d(self.compress_table)
+        )
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -454,6 +465,29 @@ class PerfModel:
             return None
         return self._interp_for(t, _Interp1D)(math.log2(max(nbytes, 1)))
 
+    def measured_compress(
+        self, strategy: str, nbytes: int
+    ) -> Optional[Tuple[float, float]]:
+        """Interpolated measured ``(compress_sec, decompress_sec)`` for
+        ``nbytes`` of payload under the named wire compressor, or None
+        when no compress sweep was calibrated (the compressors then
+        price their codec sweep with the 2x-HBM analytic proxy).  Rows
+        are (log2_total, compress_sec, decompress_sec, ratio_sample);
+        the ratio column is informational — pricing ratios always come
+        from a payload probe."""
+        tables = self.params.compress_table
+        if not tables or strategy not in tables or not tables[strategy]:
+            return None
+        rows = tables[strategy]
+        x = math.log2(max(nbytes, 1))
+        comp = self._interp_for(
+            tuple((r[0], r[1]) for r in rows), _Interp1D
+        )(x)
+        decomp = self._interp_for(
+            tuple((r[0], r[2]) for r in rows), _Interp1D
+        )(x)
+        return comp, decomp
+
     def measured_stencil(self, n_neighbors: int, nbytes: int) -> Optional[float]:
         """Interpolated measured time of one stencil application with
         ``n_neighbors`` neighbor reads over a window of ``nbytes``, or
@@ -592,6 +626,26 @@ class PerfModel:
                 - self.t_link(plan.wire_bytes, 1, axis, link_class="intra"),
             )
             return t
+        if schedule == "varlen":
+            # the grouped transport with each class truncated at its
+            # probed stream length: the link term runs on the EFFECTIVE
+            # bytes (the compressed wire-byte saving), the per-class
+            # launch latencies stay — the pack-side compress cost rides
+            # the strategy estimates (PerfModel.select with a probe),
+            # not the schedule, exactly as pack costs do for every
+            # other schedule
+            stream = getattr(plan, "stream_bytes", ())
+            if len(stream) != plan.ngroups:
+                raise ValueError(
+                    "schedule 'varlen' needs a stream-annotated plan"
+                )
+            t = self.t_link(sum(stream), 1, axis, link_class=base_class)
+            t += (plan.ngroups - 1) * lat
+            if lc:
+                for g, c in enumerate(lc):
+                    if c == "inter":
+                        t += self._tier_surcharge(stream[g], axis)
+            return t
         if schedule == "uniform":
             issued = plan.nranks * plan.seg_bytes
         elif schedule == "ragged":
@@ -627,13 +681,24 @@ class PerfModel:
                 topo_tag = (
                     f" topo={topo.fingerprint}" if topo is not None else ""
                 )
+                stream_tag = ""
+                if plan.schedule == "varlen":
+                    # pin the probed compression alongside the topology:
+                    # the drift audit re-reads this ratio from the
+                    # signature and compares it to the achieved-ratio
+                    # telemetry ring
+                    stream_tag = (
+                        f" stream_bytes={plan.effective_wire_bytes}"
+                        f" ratio={plan.stream_ratio:.4f}"
+                    )
                 self.decisions.record(
                     *key,
                     est,
                     signature=(
                         f"exchange schedule={plan.schedule}"
                         f" groups={plan.ngroups} ranks={plan.nranks}"
-                        f" ragged_bytes={plan.wire_bytes}{topo_tag}{note}"
+                        f" ragged_bytes={plan.wire_bytes}"
+                        f"{stream_tag}{topo_tag}{note}"
                     ),
                 )
         return est
@@ -673,6 +738,14 @@ class PerfModel:
         from repro.comm.wireplan import GROUPED_FALLBACK_RANK_FACTOR
 
         costs = {"grouped": self._price_schedule(plan, "grouped", axis)}
+        stream = getattr(plan, "stream_bytes", ())
+        if len(stream) == plan.ngroups and sum(stream) < plan.wire_bytes:
+            # the length-aware grouped transport: available whenever a
+            # payload probe annotated the plan with a genuinely shorter
+            # stream (it is per-class sends, so the large-grid fallback
+            # does not exclude it); grouped stays first so a zero-saving
+            # tie resolves to the plain transport
+            costs["varlen"] = self._price_schedule(plan, "varlen", axis)
         lc = getattr(plan, "link_classes", None)
         if lc and plan.tier_bundles:
             costs["tiered"] = self._price_schedule(plan, "tiered", axis)
@@ -1052,11 +1125,20 @@ class PerfModel:
         hops: int = 1,
         allow_bounding: bool = True,
         registry=None,
+        probe=None,
     ) -> StrategyEstimate:
         """Pick the cheapest applicable registered strategy (cached per
         call signature).  ``allow_bounding`` admits wire-only strategies
         (data actually crosses a link, so shipping the bounding window
-        is meaningful)."""
+        is meaningful).
+
+        ``probe`` (a *concrete* payload sample) turns on length-aware
+        pricing: every ``supports_varlen`` candidate's link term is
+        priced at its probed stream length instead of its capacity —
+        the only way a lossless compressor (whose capacity is strictly
+        larger than the packed bytes) can ever win a selection.  The
+        probed stream lengths key the selection cache, and a probed win
+        records its stream bytes + ratio in the decision signature."""
         if registry is None:
             from repro.comm.api import default_registry
 
@@ -1066,18 +1148,38 @@ class PerfModel:
         # the strategy registry's mutation counter so a newly registered
         # plugin invalidates prior selections
         sig = ct.fingerprint
+        streams = {}
+        if probe is not None:
+            for s in registry.selectable():
+                if getattr(s, "supports_varlen", False) and s.applicable(ct):
+                    stream = int(s.probe_stream_bytes(ct, incount, probe))
+                    if stream < s.wire_bytes(ct, incount):
+                        streams[s.name] = stream
         key = (sig, incount, hops, allow_bounding, id(registry),
-               registry.version)
+               registry.version, tuple(sorted(streams.items())))
         self.lookups += 1
         hit = self._cache.get(key)
         if hit is not None:
             self.hits += 1
             return hit
+        def plan_est(s):
+            e = s.plan(self, ct, incount, hops)
+            stream = streams.get(s.name)
+            if stream is None:
+                return e
+            # re-price the link term at the probed stream length:
+            # pack-side compress cost stays in t_pack, the wire-byte
+            # saving lands in t_link — the honest pack-vs-wire trade
+            return StrategyEstimate(
+                e.strategy, e.t_pack, self.t_link(stream, hops),
+                e.t_unpack, wire_bytes=stream,
+            )
+
         pinned = None
         if self.decisions is not None:
             pinned = self.decisions.lookup(sig, incount, hops, allow_bounding)
         if pinned is not None and pinned.strategy in registry:
-            best = registry.get(pinned.strategy).plan(self, ct, incount, hops)
+            best = plan_est(registry.get(pinned.strategy))
         else:
             cands = [
                 s
@@ -1086,13 +1188,23 @@ class PerfModel:
             ]
             if not cands:
                 raise ValueError(f"no applicable strategy registered for {ct!r}")
-            best = min(
-                (s.plan(self, ct, incount, hops) for s in cands),
-                key=lambda e: e.total,
-            )
+            best = min((plan_est(s) for s in cands), key=lambda e: e.total)
             if self.decisions is not None:
+                signature = None
+                if best.strategy in streams:
+                    from repro.measure.decisions import describe_type
+
+                    ratio = streams[best.strategy] / max(
+                        registry.get(best.strategy).wire_bytes(ct, incount), 1
+                    )
+                    signature = (
+                        f"{describe_type(ct)}"
+                        f" stream_bytes={streams[best.strategy]}"
+                        f" ratio={ratio:.4f}"
+                    )
                 self.decisions.record(
-                    sig, incount, hops, allow_bounding, best, ct=ct
+                    sig, incount, hops, allow_bounding, best, ct=ct,
+                    signature=signature,
                 )
         self._cache[key] = best
         return best

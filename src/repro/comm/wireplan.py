@@ -26,6 +26,18 @@ cheapest wire **schedule** that can carry that ragged layout:
     ``grouped_fallback_rank_factor`` x the class count, most fused rows
     would be zero, so the plan degrades to per-class sends regardless of
     primitive availability.
+``varlen``
+    the length-aware grouped schedule for compressed payloads: each
+    delta class's send is truncated at its *stream length*
+    (:attr:`WirePlan.stream_bytes`, probed from the actual payload by a
+    ``supports_varlen`` strategy such as
+    :class:`~repro.comm.compress.RleWire`), so the compressed bytes —
+    not the capacity — are the bytes on the wire.  Rides one truncated
+    ``ppermute`` per class, or a single native ``ragged_all_to_all``
+    with per-class stream sizes when the primitive is available
+    (:func:`repro.compat.has_ragged_all_to_all`).  Bit-exact vs the
+    capacity path: the stream is a strict prefix of the capacity wire
+    and the decoder derives the run count from the wire length.
 ``tiered``
     the hierarchy-aware grouped schedule.  With a
     :class:`~repro.comm.topology.Topology` annotation, every delta class
@@ -80,8 +92,9 @@ GROUPED_FALLBACK_RANK_FACTOR = 4.0
 WIRE_COLLECTIVES = ("ppermute", "all_to_all", "ragged_all_to_all")
 
 #: every wire schedule a plan can carry ("tiered" needs a topology
-#: annotation; the exact ladder only ever picks the first three)
-WIRE_SCHEDULES = ("ragged", "uniform", "grouped", "tiered")
+#: annotation, "varlen" a stream-length annotation; the exact ladder
+#: only ever picks the first three)
+WIRE_SCHEDULES = ("ragged", "uniform", "grouped", "tiered", "varlen")
 
 
 @dataclass(frozen=True)
@@ -125,6 +138,12 @@ class WirePlan:
     link_classes: Optional[Tuple[str, ...]] = None
     tier_bundles: Tuple[Tuple[int, ...], ...] = ()
     topology: Optional[Topology] = None
+    # per-class *effective* (stream) lengths for the length-aware
+    # "varlen" schedule — () when no payload probe annotated the plan.
+    # stream_bytes[g] <= groups[g].nbytes always; a class whose payload
+    # cannot truncate (multi-transfer group, stored-mode stream, or a
+    # strategy without varlen support) carries its full capacity here.
+    stream_bytes: Tuple[int, ...] = ()
 
     @property
     def ngroups(self) -> int:
@@ -166,17 +185,51 @@ class WirePlan:
         return n_inter
 
     @property
+    def effective_wire_bytes(self) -> int:
+        """Sum of per-class stream lengths — what a length-aware
+        transport would actually move.  Equals ``wire_bytes`` (the
+        capacity) when the plan carries no stream annotation."""
+        if not self.stream_bytes:
+            return self.wire_bytes
+        return sum(self.stream_bytes)
+
+    @property
+    def stream_ratio(self) -> float:
+        """``effective_wire_bytes / wire_bytes`` — the achieved
+        compression ratio of the probed payload (1.0 unannotated)."""
+        if not self.wire_bytes:
+            return 1.0
+        return self.effective_wire_bytes / self.wire_bytes
+
+    @property
     def issued_bytes(self) -> int:
         """Bytes the chosen schedule actually puts on the wire."""
         if self.schedule == "uniform":
             return self.nranks * self.seg_bytes
         if self.schedule == "tiered":
             return self.wire_bytes + self.correction_bytes
+        if self.schedule == "varlen":
+            return self.effective_wire_bytes
         return self.wire_bytes
 
     @property
     def padding_bytes(self) -> int:
-        return self.issued_bytes - self.wire_bytes
+        return max(0, self.issued_bytes - self.wire_bytes)
+
+    def with_stream_bytes(self, stream: Tuple[int, ...]) -> "WirePlan":
+        """Annotate the plan with per-class stream lengths (probed from
+        a concrete payload) — attached *after* planning so the
+        :func:`plan_wire` cache stays payload-independent.  Lengths are
+        clamped to each class's capacity; a short tuple raises."""
+        if len(stream) != self.ngroups:
+            raise ValueError(
+                f"stream_bytes needs one length per delta class "
+                f"({self.ngroups}); got {len(stream)}"
+            )
+        clamped = tuple(
+            min(int(s), g.nbytes) for s, g in zip(stream, self.groups)
+        )
+        return dataclasses.replace(self, stream_bytes=clamped)
 
     @property
     def class_cum_bytes(self) -> Tuple[int, ...]:
@@ -212,6 +265,11 @@ class WirePlan:
                 # every pre-hierarchy fingerprint (and its pinned
                 # decision rows) survives unchanged
                 key = key + (self.topology.fingerprint,)
+            if self.stream_bytes:
+                # likewise: stream lengths key the fingerprint only on
+                # probe-annotated plans, so a pinned varlen row is
+                # specific to the payload shape it was probed on
+                key = key + (self.stream_bytes,)
             fp = hashlib.sha256(repr(key).encode()).hexdigest()[:16]
             object.__setattr__(self, "_fingerprint", fp)
         return fp
@@ -394,6 +452,11 @@ def reschedule(plan: WirePlan, schedule: str) -> WirePlan:
         raise ValueError(
             "schedule 'tiered' needs a topology-annotated plan "
             "(plan_wire(..., topology=...))"
+        )
+    if schedule == "varlen" and len(plan.stream_bytes) != plan.ngroups:
+        raise ValueError(
+            "schedule 'varlen' needs a stream-annotated plan "
+            "(WirePlan.with_stream_bytes, one probed length per class)"
         )
     return dataclasses.replace(plan, schedule=schedule)
 

@@ -28,6 +28,7 @@ from repro.fleet.bundle import (
     rollback,
 )
 from repro.fleet.drift import (
+    DEFAULT_COMPRESS_MARGIN,
     DEFAULT_MIN_SAMPLES,
     DEFAULT_OVERLAP_MARGIN,
     DEFAULT_THRESHOLD,
@@ -35,6 +36,7 @@ from repro.fleet.drift import (
     DriftDetector,
     DriftFinding,
     DriftReport,
+    demote_stale_compress,
     demote_stale_modes,
     remeasure_term,
 )
@@ -53,6 +55,7 @@ __all__ = [
     "BUNDLE_FORMAT",
     "CONFLICT_POLICIES",
     "DEFAULT_MIN_SAMPLES",
+    "DEFAULT_COMPRESS_MARGIN",
     "DEFAULT_OVERLAP_MARGIN",
     "DEFAULT_THRESHOLD",
     "DEFAULT_WINDOW",
@@ -65,6 +68,7 @@ __all__ = [
     "DriftReport",
     "ExchangeTelemetry",
     "RingAggregate",
+    "demote_stale_compress",
     "demote_stale_modes",
     "diff_bundles",
     "load_bundle",

@@ -32,6 +32,9 @@ term                  decision rows it prices                   sweep
 ``stencil``           the redundant-compute half of             ``measure_stencil_table``
                       ``program/s=N`` rows
 ``copy``              the contiguous-copy proxy terms           ``measure_copy_table``
+``compress``          the encode/decode cost of compressed      ``measure_compress_table``
+                      strategy rows; the achieved-ratio check
+                      of ``wire/varlen`` pins (telemetry ring)
 ====================  =======================================  ==========
 
 The whole audit is machine-readable: :class:`DriftReport` serializes to
@@ -45,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+import re
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -58,11 +62,13 @@ __all__ = [
     "DEFAULT_THRESHOLD",
     "DEFAULT_MIN_SAMPLES",
     "DEFAULT_OVERLAP_MARGIN",
+    "DEFAULT_COMPRESS_MARGIN",
     "DriftFinding",
     "DriftReport",
     "DriftDetector",
     "remeasure_term",
     "demote_stale_modes",
+    "demote_stale_compress",
 ]
 
 #: bump when the persisted DriftReport schema changes incompatibly.
@@ -86,7 +92,7 @@ _PHASE_TERM = {
 
 #: the model terms a drift can be attributed to, each owning exactly one
 #: calibration sweep (see module docstring table)
-TERMS: Tuple[str, ...] = ("wire", "pack_unpack", "stencil", "copy")
+TERMS: Tuple[str, ...] = ("wire", "pack_unpack", "stencil", "copy", "compress")
 
 #: flag when stored/reference (or observed/predicted) diverge beyond
 #: this factor in either direction — generous because CPU-runner sweeps
@@ -103,6 +109,29 @@ DEFAULT_MIN_SAMPLES = 8
 #: the comparison is same-machine same-moment (both modes timed in one
 #: smoother run), so table noise does not apply
 DEFAULT_OVERLAP_MARGIN = 1.25
+
+#: a ``wire/varlen`` pin is stale when the *achieved* compression ratio
+#: (the per-exchange stream/capacity observations in the telemetry ring
+#: keyed ``<fingerprint>/ratio``) decays past the probed ratio recorded
+#: in the pin's signature by this factor — the schedule is then moving
+#: more bytes than the price it was chosen on.  Tight like the overlap
+#: margin: both sides are same-payload same-machine observations, no
+#: table noise involved
+DEFAULT_COMPRESS_MARGIN = 1.25
+
+#: the probed stream ratio a compressed pin's signature records
+#: (``... ratio=0.0514 ...``)
+_RATIO_RE = re.compile(r"\bratio=([0-9.eE+-]+)")
+
+
+def _pinned_ratio(signature: str) -> Optional[float]:
+    m = _RATIO_RE.search(signature or "")
+    if m is None:
+        return None
+    try:
+        return float(m.group(1))
+    except ValueError:
+        return None
 
 
 @dataclass(frozen=True)
@@ -275,6 +304,25 @@ def _strategy_tables_ratio(stored, reference) -> Optional[float]:
     return _geomean_ratio(ratios)
 
 
+def _compress_tables_ratio(stored, reference) -> Optional[float]:
+    """stored/reference over the per-compressor sweep tables
+    (``(log2_total, compress_sec, decompress_sec, ratio_sample)`` rows):
+    both timing columns compared as 1D tables, the informational ratio
+    column ignored."""
+    if not stored or not reference:
+        return None
+    ratios = []
+    for name in sorted(set(stored) & set(reference)):
+        for col in (1, 2):
+            r = _table1d_ratio(
+                [(row[0], row[col]) for row in stored[name]],
+                [(row[0], row[col]) for row in reference[name]],
+            )
+            if r is not None:
+                ratios.append((r, 1.0))
+    return _geomean_ratio(ratios)
+
+
 def _trace_term_ratios(
     rec: Dict[str, dict],
 ) -> Tuple[Dict[str, float], int]:
@@ -314,6 +362,10 @@ def _terms_of(strategy: str) -> Tuple[str, ...]:
         # (the overlap trade); neither table alone re-measures it — the
         # authoritative check is the smoother's per-mode timings
         return ("stencil", "wire")
+    if strategy in ("rlewire", "int8wire"):
+        # a compressed-wire selection prices the encode/decode sweep on
+        # top of the base pack/unpack terms
+        return ("pack_unpack", "compress", "wire")
     return ("pack_unpack", "wire")
 
 
@@ -356,6 +408,11 @@ class DriftDetector:
         r = _table1d_ratio(params.copy_table, reference.copy_table)
         if r is not None:
             out["copy"] = r
+        r = _compress_tables_ratio(
+            params.compress_table, reference.compress_table
+        )
+        if r is not None:
+            out["compress"] = r
         return out
 
     def _out_of_band(self, ratio: float) -> bool:
@@ -372,6 +429,7 @@ class DriftDetector:
         trace: Optional[Dict[str, Dict[str, dict]]] = None,
         overlap_timings: Optional[Dict[str, Dict[str, float]]] = None,
         overlap_margin: float = DEFAULT_OVERLAP_MARGIN,
+        compress_margin: float = DEFAULT_COMPRESS_MARGIN,
     ) -> DriftReport:
         """One finding per decision row.
 
@@ -407,6 +465,18 @@ class DriftDetector:
         ``overlap_margin`` flags the pin (``term="overlap"``, source
         ``"telemetry"``); :func:`demote_stale_modes` then deletes it so
         the next smoother pass re-prices.
+
+        ``wire/varlen`` rows carry their probed compression ratio in the
+        pin signature (``ratio=<r>``), and every varlen exchange records
+        its achieved ratio in the telemetry ring keyed
+        ``<fingerprint>/ratio``.  When the ring mean decays past the
+        pinned ratio by more than ``compress_margin`` over
+        ``min_samples`` observations, the pin drifts (``term="compress"``,
+        source ``"telemetry"``): the payload no longer compresses as
+        promised, so the schedule is moving more bytes than the price it
+        was chosen on.  :func:`demote_stale_compress` deletes flagged
+        varlen pins (and probed compressed selections) so the next
+        planning pass re-probes.
         """
         ratios = (
             self.term_ratios(params, reference) if reference is not None
@@ -507,6 +577,26 @@ class DriftDetector:
                         drifted = True
                         source = "telemetry"
                         term, ratio = "overlap", r
+            # a varlen pin's premise is its probed compression ratio:
+            # the achieved-ratio ring decaying past the margin means the
+            # compressed bytes on the wire grew past what was priced
+            if telemetry is not None and d.strategy == "wire/varlen":
+                pinned = _pinned_ratio(d.signature)
+                ring = telemetry.get(f"{d.fingerprint}/ratio")
+                if (
+                    pinned
+                    and ring is not None
+                    and ring.count >= self.min_samples
+                    and ring.mean > 0.0
+                ):
+                    r = ring.mean / pinned
+                    obs_mean = ring.mean
+                    obs_ratio = r
+                    samples = ring.count
+                    if r > compress_margin:
+                        drifted = True
+                        source = "telemetry"
+                        term, ratio = "compress", r
             findings.append(
                 DriftFinding(
                     fingerprint=d.fingerprint,
@@ -586,6 +676,11 @@ def remeasure_term(
     elif term == "copy":
         rows = bench.measure_copy_table(totals, iters=it)
         updates = {"copy_table": tuple(rows)}
+    elif term == "compress":
+        table = bench.measure_compress_table(total_bytes=totals, iters=it)
+        updates = {
+            "compress_table": {k: tuple(v) for k, v in table.items() if v}
+        }
     return dataclasses.replace(params, **updates)
 
 
@@ -607,5 +702,33 @@ def demote_stale_modes(decisions, report: DriftReport) -> List[str]:
     dropped = decisions.prune(
         lambda d: d.strategy.startswith("overlap/mode=")
         and d.fingerprint in stale
+    )
+    return [f"{d.strategy}@{d.fingerprint}" for d in dropped]
+
+
+def demote_stale_compress(decisions, report: DriftReport) -> List[str]:
+    """Delete every ``wire/varlen`` schedule pin the ``report`` flagged
+    for compression-ratio drift (``term="compress"``), plus every probed
+    compressed *selection* row (a strategy row whose signature carries
+    ``stream_bytes=``) — the selection pins share the drifted schedule's
+    premise (the probed ratio) but live under the datatype fingerprint,
+    not the plan fingerprint, so they cannot be joined row-for-row.  The
+    next planning pass re-probes the actual payload and re-records both.
+
+    Returns the ``"strategy@fingerprint"`` labels of the demoted rows.
+    """
+    stale = {
+        f.fingerprint
+        for f in report.drifted
+        if f.strategy == "wire/varlen" and f.term == "compress"
+    }
+    if not stale:
+        return []
+    dropped = decisions.prune(
+        lambda d: (d.strategy == "wire/varlen" and d.fingerprint in stale)
+        or (
+            not d.strategy.startswith(("wire/", "overlap/", "program/"))
+            and " stream_bytes=" in f" {d.signature}"
+        )
     )
     return [f"{d.strategy}@{d.fingerprint}" for d in dropped]

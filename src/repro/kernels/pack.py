@@ -37,7 +37,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.geometry import PackGeometry
 
-__all__ = ["pack_rows", "pack_dma", "pack_ragged", "choose_chunk"]
+__all__ = [
+    "pack_rows",
+    "pack_dma",
+    "pack_ragged",
+    "pack_compress_ragged",
+    "choose_chunk",
+]
 
 # pinned-JAX compat: the memory-space enum was renamed
 # TPUMemorySpace -> MemorySpace in newer Pallas releases
@@ -63,6 +69,27 @@ def pack_ragged(buf: jax.Array, leaves, total: int) -> jax.Array:
     wire = jnp.zeros((total,), jnp.uint8)
     for offset, pack_fn in leaves:
         wire = jax.lax.dynamic_update_slice(wire, pack_fn(buf), (offset,))
+    return wire
+
+
+def pack_compress_ragged(buf: jax.Array, leaves, total: int) -> jax.Array:
+    """Fused pack+compress wire assembly.
+
+    Like :func:`pack_ragged`, but each leaf is ``(offset, pack_fn,
+    encode_fn)``: the gathered member bytes flow straight through the
+    leaf's wire encoder (``encode_fn``, e.g.
+    :meth:`repro.comm.compress.RleWire.encode_wire`) inside the same
+    traced expression — compression adds no extra materialized pass
+    over the buffer.  ``encode_fn=None`` means the wire format *is* the
+    packed bytes (the uncompressed strategies), degenerating to
+    :func:`pack_ragged` exactly.
+    """
+    wire = jnp.zeros((total,), jnp.uint8)
+    for offset, pack_fn, encode_fn in leaves:
+        part = pack_fn(buf)
+        if encode_fn is not None:
+            part = encode_fn(part)
+        wire = jax.lax.dynamic_update_slice(wire, part, (offset,))
     return wire
 
 

@@ -30,7 +30,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.geometry import PackGeometry
 from repro.kernels.pack import _MemorySpace, choose_chunk
 
-__all__ = ["unpack_rows", "unpack_dma", "unpack_ragged"]
+__all__ = ["unpack_rows", "unpack_dma", "unpack_ragged", "decode_unpack_ragged"]
 
 
 def unpack_ragged(dst: jax.Array, wire: jax.Array, leaves) -> jax.Array:
@@ -47,6 +47,29 @@ def unpack_ragged(dst: jax.Array, wire: jax.Array, leaves) -> jax.Array:
     """
     for offset, nbytes, unpack_fn in leaves:
         part = jax.lax.dynamic_slice(wire, (offset,), (nbytes,))
+        dst = unpack_fn(dst, part)
+    return dst
+
+
+def decode_unpack_ragged(dst: jax.Array, wire: jax.Array, leaves) -> jax.Array:
+    """Fused decompress+unpack: inverse of
+    :func:`repro.kernels.pack.pack_compress_ragged`.
+
+    ``leaves`` is a sequence of ``(offset, nbytes, decode_fn,
+    unpack_fn)``: each leaf's ``nbytes`` wire bytes (for a length-aware
+    transport this is the *stream* length, not the capacity) are sliced
+    out, decoded to member bytes by ``decode_fn`` (e.g.
+    :meth:`repro.comm.compress.RleWire.decode_wire` bound to the member
+    size) and scattered by ``unpack_fn(dst, member)`` — decode and
+    scatter stay in one traced expression, no extra materialized pass.
+    ``decode_fn=None`` means the wire bytes *are* the payload
+    ``unpack_fn`` consumes (the uncompressed strategies' ``unpack_wire``
+    path), degenerating to :func:`unpack_ragged` exactly.
+    """
+    for offset, nbytes, decode_fn, unpack_fn in leaves:
+        part = jax.lax.dynamic_slice(wire, (offset,), (nbytes,))
+        if decode_fn is not None:
+            part = decode_fn(part)
         dst = unpack_fn(dst, part)
     return dst
 

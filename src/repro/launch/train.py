@@ -40,8 +40,9 @@ from repro.launch.mesh import make_test_mesh
 from repro.models.model import build_model
 from repro.train.checkpoint import CheckpointManager
 from repro.train.elastic import StragglerMonitor
+from repro.train.grad_wire import GRAD_WIRE_MODES, GradWire
 from repro.train.optimizer import AdamWConfig, init_opt_state
-from repro.train.train_step import make_train_step
+from repro.train.train_step import make_grad_step, make_train_step
 
 #: ~100M-parameter config for the end-to-end example (deliverable b)
 REPRO_100M = ModelConfig(
@@ -69,13 +70,27 @@ def train(
     log_every: int = 10,
     ckpt_every: int = 100,
     comm=None,
+    grad_wire: str = "off",
 ) -> dict:
     shape = ShapeConfig("train", seq_len, global_batch, "train")
     model = build_model(cfg)
     opt_cfg = AdamWConfig(
         moment_dtype=cfg.opt_moment_dtype, total_steps=max(steps, 10)
     )
-    step_fn = make_train_step(model, opt_cfg)
+    # "off" keeps the fused, donating train step; any other mode splits
+    # it so the gradient exchange runs through the communicator's wire
+    # stack between the jitted halves (model-priced, pinned, audited)
+    wire = None
+    if grad_wire != "off":
+        if comm is None:
+            raise ValueError(
+                f"--grad-wire {grad_wire} needs a communicator "
+                "(incompatible with --no-comm-cache)"
+            )
+        wire = GradWire(comm, mode=grad_wire)
+        grad_fn, update_fn = make_grad_step(model, opt_cfg)
+    else:
+        step_fn = make_train_step(model, opt_cfg)
     mgr = CheckpointManager(ckpt_dir, every=ckpt_every)
     monitor = StragglerMonitor()
 
@@ -105,12 +120,30 @@ def train(
             print(f"restored checkpoint at step {start}")
         params, opt_state = state["params"], state["opt"]
 
-        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        if wire is not None:
+            jit_grads = jax.jit(grad_fn)
+            jit_update = jax.jit(update_fn, donate_argnums=(0, 1))
+        else:
+            jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
         history = []
         for step in range(start, steps):
             t0 = time.perf_counter()
             batch = synthetic_batch(cfg, shape, step)
-            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if wire is not None:
+                loss, metrics0, grads = jit_grads(params, batch)
+                if not wire.planned:
+                    # first concrete gradients are the calibration
+                    # probe: the ratio is measured, never assumed
+                    wire.plan_for(grads)
+                    print(wire.describe())
+                grads = wire.exchange(grads)
+                params, opt_state, metrics = jit_update(
+                    params, opt_state, grads, loss, metrics0
+                )
+            else:
+                params, opt_state, metrics = jit_step(
+                    params, opt_state, batch
+                )
             metrics = jax.device_get(metrics)
             dt = time.perf_counter() - t0
             verdict = monitor.observe(step, dt)
@@ -149,6 +182,14 @@ def main() -> None:
     ap.add_argument("--no-comm-cache", action="store_true",
                     help="skip calibration/decision pinning entirely "
                          "(analytic model, nothing persisted)")
+    ap.add_argument("--grad-wire", default="off", choices=GRAD_WIRE_MODES,
+                    help="route the optimizer gradient exchange through "
+                         "the production communicator as a committed "
+                         "type: 'auto' is model-priced from a probe of "
+                         "the first step's gradients (a compressible "
+                         "payload rides the lossless varlen RLE wire), "
+                         "'rle' forces it, 'int8' opts into the lossy "
+                         "quantized wire (never auto-picked)")
     ap.add_argument("--halo-steps", default="auto", metavar="auto|N",
                     help="fusion depth for any deep-halo stencil program "
                          "the job builds (repro.halo.program); 'auto' is "
@@ -235,7 +276,7 @@ def main() -> None:
         print(report.summary)
 
     out = train(cfg, args.steps, args.seq_len, args.global_batch,
-                args.ckpt_dir, comm=comm)
+                args.ckpt_dir, comm=comm, grad_wire=args.grad_wire)
     losses = out["losses"]
     print(f"loss: first={losses[0]:.4f} last={losses[-1]:.4f} "
           f"(delta {losses[0]-losses[-1]:+.4f})")

@@ -21,6 +21,12 @@ all of them on the *running* backend:
   actually crossing;
 * :func:`measure_copy_table` — contiguous device copy over sizes (the
   memcpy analogue every strategy's staging bottoms out in);
+* :func:`measure_compress_table` — per wire compressor, the
+  encode/decode transform cost over sizes plus an achieved-ratio
+  sample (STORE_FORMAT 6) — what
+  :meth:`~repro.comm.perfmodel.PerfModel.measured_compress`
+  interpolates to price a compressed schedule's pack-side cost against
+  its wire-byte savings;
 * :func:`measure_stencil_table` — one stencil application
   (:func:`repro.kernels.ops.stencil_window_update`) over (neighbor
   count x window bytes): the redundant ghost-shell term of
@@ -62,6 +68,7 @@ __all__ = [
     "measure_wire_tables",
     "measure_link_class_tables",
     "measure_copy_table",
+    "measure_compress_table",
     "measure_stencil_table",
     "STENCIL_RADII",
     "REDUCED_STENCIL_RADII",
@@ -197,6 +204,65 @@ def measure_copy_table(
         jfn = jax.jit(lambda a: a + jnp.uint8(1))  # forced read+write
         rows.append((math.log2(total), time_fn(jfn, x, iters=iters)))
     return rows
+
+
+def measure_compress_table(
+    strategies=None,
+    total_bytes: Sequence[int] = TOTAL_BYTES,
+    iters: int = 5,
+) -> Dict[str, List[Tuple[float, float, float, float]]]:
+    """Compress / decompress throughput sweep per wire compressor
+    (STORE_FORMAT 6): rows ``(log2_total, compress_sec, decompress_sec,
+    achieved_ratio_sample)``.
+
+    Times each compressor's ``encode_wire`` (packed member bytes ->
+    wire) and ``decode_wire`` (wire -> member bytes) transforms in
+    isolation — the *extra* cost a compressed wire adds on top of the
+    base pack/unpack, which is exactly the term
+    :meth:`~repro.comm.perfmodel.PerfModel.measured_compress`
+    interpolates for ``model_pack`` / ``model_unpack``.  The sweep
+    payload is zero-heavy (one nonzero byte per 256) so the RLE
+    encoder's run machinery is exercised on its intended regime.
+
+    The fourth column is an *informational* achieved-ratio sample for
+    that payload: bytes the format would actually move (the probed
+    stream length for varlen-capable formats, the capacity wire
+    otherwise) per member byte.  Per-payload ratios always come from a
+    live calibration probe of the actual payload
+    (:meth:`~repro.comm.api.Strategy.probe_stream_bytes`), never from
+    this table — the column only documents what the sweep saw.
+
+    Default strategies: the registered wire compressors
+    (``RLE_WIRE``, ``INT8_WIRE``).
+    """
+    from repro.comm.compress import INT8_WIRE, RLE_WIRE
+
+    strats = (
+        (RLE_WIRE, INT8_WIRE)
+        if strategies is None
+        else tuple(strategies)
+    )
+    reg = TypeRegistry()
+    table: Dict[str, List[Tuple[float, float, float, float]]] = {}
+    for s in strats:
+        rows: List[Tuple[float, float, float, float]] = []
+        for total in total_bytes:
+            n = max(total - total % 4, 4)  # int8 views member bytes as f32
+            member = np.zeros((n,), np.uint8)
+            member[::256] = 1  # zero-heavy: short runs every 256 B
+            buf = jnp.asarray(member)
+            enc = jax.jit(s.encode_wire)
+            wire = jax.block_until_ready(enc(buf))
+            csec = time_fn(enc, buf, iters=iters)
+            dec = jax.jit(lambda w, _n=n, _s=s: _s.decode_wire(w, _n))
+            dsec = time_fn(dec, wire, iters=iters)
+            ct = reg.commit(Vector(1, n, n, BYTE))  # contiguous: pack = id
+            moved = min(s.probe_stream_bytes(ct, 1, buf), wire.shape[0])
+            rows.append(
+                (math.log2(n), csec, dsec, moved / float(n))
+            )
+        table[s.name] = rows
+    return table
 
 
 def measure_stencil_table(
@@ -432,7 +498,7 @@ def calibrate_params(
     topology=None,
 ) -> SystemParams:
     """Full-term calibration: pack + unpack + wire + contiguous copy +
-    stencil application.
+    compress/decompress + stencil application.
 
     ``mesh_axes`` (axis name -> size, e.g. ``{"ici": 4, "dcn": 2}``)
     sweeps the wire term once per mesh axis and stores one table + fit
@@ -458,6 +524,7 @@ def calibrate_params(
     pack = measure_pack_table(strategies, blocks, totals, iters=it)
     unpack = measure_unpack_table(strategies, blocks, totals, iters=it)
     copy = measure_copy_table(totals, iters=it)
+    compress = measure_compress_table(total_bytes=totals, iters=it)
     stencil = measure_stencil_table(radii_set, totals, iters=it)
     wire = measure_wire_table(totals, iters=it)
     wire_lat, wire_bw = fit_latency_bandwidth(wire)
@@ -490,6 +557,7 @@ def calibrate_params(
         hbm_bw=hbm_bw,
         pack_table={k: tuple(v) for k, v in pack.items() if v},
         unpack_table={k: tuple(v) for k, v in unpack.items() if v},
+        compress_table={k: tuple(v) for k, v in compress.items() if v},
         wire_table=tuple(wire),
         copy_table=tuple(copy),
         stencil_table=tuple(stencil),

@@ -69,6 +69,13 @@ def _describe(ct) -> str:
     )
 
 
+def describe_type(ct) -> str:
+    """Public audit-log type signature — callers that extend a decision
+    signature (e.g. a probed compressed selection appending its stream
+    bytes + ratio) build on this so the base text stays uniform."""
+    return _describe(ct)
+
+
 class DecisionCache:
     """Fingerprint-keyed decision store: lookup/record for the model,
     load/save for persistence, report() for the audit dump."""

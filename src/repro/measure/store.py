@@ -46,19 +46,23 @@ __all__ = [
 ]
 
 #: bump when the envelope or SystemParams schema changes incompatibly
-STORE_FORMAT = 5
+STORE_FORMAT = 6
 
 #: formats this reader still understands: format 2 predates the
 #: per-axis wire tables (``wire_tables`` / ``wire_fits``), format 3 the
 #: stencil-application sweep (``stencil_table``), format 4 the
-#: per-link-class sweeps (``link_tables`` / ``link_fits``) — all
-#: optional fields, so older envelopes load unchanged with those fields
-#: absent (the model then falls back: copy proxy for the redundant-
-#: compute term, and the flat wire table priced as ``intra`` for every
-#: link class).  The checked-in ``ci_params.json`` stays valid at any
-#: compatible format; format-2/3/4 loading is covered by synthetic
-#: envelopes in ``tests/test_measure.py`` / ``tests/test_hierarchy.py``
-COMPATIBLE_FORMATS = (2, 3, 4, STORE_FORMAT)
+#: per-link-class sweeps (``link_tables`` / ``link_fits``), format 5
+#: the compress/decompress sweep (``compress_table``, rows
+#: ``(log2_total, compress_sec, decompress_sec, ratio_sample)`` per
+#: wire compressor) — all optional fields, so older envelopes load
+#: unchanged with those fields absent (the model then falls back: copy
+#: proxy for the redundant-compute term, the flat wire table priced as
+#: ``intra`` for every link class, and an analytic read+write sweep for
+#: the compress term).  The checked-in ``ci_params.json`` stays valid
+#: at any compatible format; format-2/3/4/5 loading is covered by
+#: synthetic envelopes in ``tests/test_measure.py`` /
+#: ``tests/test_hierarchy.py``
+COMPATIBLE_FORMATS = (2, 3, 4, 5, STORE_FORMAT)
 
 _ENV_ROOT = "REPRO_MEASURE_DIR"
 

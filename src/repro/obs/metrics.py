@@ -160,6 +160,13 @@ def publish_comm_stats(
         m.set_counter(f"comm.wire_class.{key}.bytes", v)
     for key, v in (stats.get("wire_class_drains") or {}).items():
         m.set_gauge(f"comm.wire_class.{key}.drain_order", v)
+    m.set_counter("comm.compress.exchanges",
+                  stats.get("compress_exchanges", 0))
+    m.set_counter("comm.compress.capacity_bytes",
+                  stats.get("compress_capacity_bytes", 0))
+    m.set_counter("comm.compress.stream_bytes",
+                  stats.get("compress_stream_bytes", 0))
+    m.set_gauge("comm.compress.ratio", stats.get("compress_ratio", 1.0))
     m.set_counter("comm.committed_types", stats.get("committed_types", 0))
     m.set_counter("comm.commit_hits", stats.get("commit_hits", 0))
     hits = stats.get("model_hits", 0)

@@ -1,4 +1,9 @@
 """repro.train — optimizer, train/serve steps, checkpointing, data."""
 
+from repro.train.grad_wire import GRAD_WIRE_MODES, GradWire
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
-from repro.train.train_step import make_loss_fn, make_train_step
+from repro.train.train_step import (
+    make_grad_step,
+    make_loss_fn,
+    make_train_step,
+)

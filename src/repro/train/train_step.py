@@ -17,8 +17,8 @@ from repro.distributed.sharding import constrain
 from repro.models.model import Model
 from repro.train.optimizer import AdamWConfig, adamw_update
 
-__all__ = ["make_loss_fn", "make_train_step", "make_prefill_step",
-           "make_decode_step"]
+__all__ = ["make_loss_fn", "make_train_step", "make_grad_step",
+           "make_prefill_step", "make_decode_step"]
 
 AUX_WEIGHT = 1e-2  # MoE load-balance loss weight
 
@@ -42,11 +42,11 @@ def make_loss_fn(model: Model):
     return loss_fn
 
 
-def make_train_step(model: Model, opt_cfg: AdamWConfig):
-    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
-    metrics), with ``cfg.microbatches`` gradient-accumulation steps
-    (fp32 accumulators) — the activation-memory knob for the big archs.
-    """
+def _make_compute_grads(model: Model):
+    """The shared gradient half of the step factories: returns
+    compute_grads(params, batch) -> (loss, metrics, grads), with
+    ``cfg.microbatches`` gradient-accumulation steps (fp32
+    accumulators) — the activation-memory knob for the big archs."""
     cfg = model.cfg
     loss_fn = make_loss_fn(model)
     n_micro = max(cfg.microbatches, 1)
@@ -79,6 +79,14 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig):
         (grads, loss), _ = lax.scan(body, (gacc0, jnp.float32(0.0)), micro)
         return loss, {"xent": loss, "moe_aux": jnp.float32(0.0)}, grads
 
+    return compute_grads
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig):
+    """Returns the fused train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    compute_grads = _make_compute_grads(model)
+
     def train_step(params, opt_state, batch):
         loss, metrics, grads = compute_grads(params, batch)
         params, opt_state, opt_metrics = adamw_update(
@@ -88,6 +96,27 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig):
         return params, opt_state, metrics
 
     return train_step
+
+
+def make_grad_step(model: Model, opt_cfg: AdamWConfig):
+    """The split factories the wire-routed gradient path needs
+    (:class:`repro.train.grad_wire.GradWire` runs *between* them):
+    ``grad_fn(params, batch) -> (loss, metrics, grads)`` and
+    ``update_fn(params, opt_state, grads, loss, metrics) ->
+    (params, opt_state, metrics)``.  Composing them is numerically the
+    fused :func:`make_train_step`."""
+    compute_grads = _make_compute_grads(model)
+
+    def grad_fn(params, batch):
+        return compute_grads(params, batch)
+
+    def update_fn(params, opt_state, grads, loss, metrics):
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        return params, opt_state, {**metrics, **opt_metrics, "loss": loss}
+
+    return grad_fn, update_fn
 
 
 def make_prefill_step(model: Model):

@@ -250,7 +250,9 @@ class TestDriftDetector:
     def test_remeasure_rejects_unknown_term(self):
         with pytest.raises(ValueError, match="unknown term"):
             remeasure_term(_reference_params(), "latency")
-        assert set(TERMS) == {"wire", "pack_unpack", "stencil", "copy"}
+        assert set(TERMS) == {
+            "wire", "pack_unpack", "stencil", "copy", "compress"
+        }
 
     def test_telemetry_drift_needs_min_samples(self):
         ref = _reference_params()

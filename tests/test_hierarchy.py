@@ -135,8 +135,10 @@ class TestTopology:
 
 class TestStoreFormat5:
     def test_format_constants(self):
-        assert STORE_FORMAT == 5
-        assert set(COMPATIBLE_FORMATS) == {2, 3, 4, 5}
+        # format 6 added the compress_table sweep; 5 (this PR's link
+        # tables) stays loadable
+        assert STORE_FORMAT == 6
+        assert set(COMPATIBLE_FORMATS) == {2, 3, 4, 5, 6}
 
     def test_link_tables_roundtrip_params_json(self):
         p = synthetic_two_tier(load_ci_params())
@@ -276,7 +278,9 @@ class TestWirePlanTiered:
         assert plan.tier_bundles == ()
 
     def test_tiered_in_schedule_set(self):
-        assert WIRE_SCHEDULES == ("ragged", "uniform", "grouped", "tiered")
+        assert WIRE_SCHEDULES == (
+            "ragged", "uniform", "grouped", "tiered", "varlen"
+        )
 
 
 # ===========================================================================

@@ -338,11 +338,11 @@ class TestStencilTable:
         assert SystemParams.from_json(p.to_json()) == p
 
     def test_store_format_5_and_older_envelopes_load(self, tmp_path):
-        assert STORE_FORMAT == 5
+        assert STORE_FORMAT == 6
         store = ParamsStore(tmp_path)
         p = SystemParams(name="x", stencil_table=((4.7, 12.0, 3e-5),))
         out = store.save(p)
-        assert json.loads(out.read_text())["format"] == 5
+        assert json.loads(out.read_text())["format"] == STORE_FORMAT
         assert store.load() == p
         # a format-4 envelope (pre-link-class) still loads
         d = json.loads(out.read_text())

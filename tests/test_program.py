@@ -801,15 +801,19 @@ class TestRleWire:
             out = np.asarray(fn(jnp.asarray(src)))
             np.testing.assert_array_equal(out[4:20, 4:20], src[4:20, 4:20])
 
-    def test_not_selectable_and_wire_only(self):
+    def test_selectable_only_with_probe_and_wire_only(self):
         from repro.comm import RLE_WIRE, default_registry
 
         assert RLE_WIRE.name in default_registry()
-        assert not RLE_WIRE.selectable
+        # byte-exact in both modes, so the strategy is selectable — but
+        # priced at CAPACITY (member + 8 B, strictly worse than rows)
+        # unless the selection carries a payload probe, so the model
+        # must still never auto-pick it without one
+        assert RLE_WIRE.selectable
+        assert RLE_WIRE.supports_varlen
         assert RLE_WIRE.wire_only
         comm = Communicator(axis_name="x")
         ct = self._ct(comm)
-        # the model must never auto-pick a capacity-padded wire
         assert comm.select(ct, wire=True).name != RLE_WIRE.name
         with pytest.raises(TypeError, match="wire-only"):
             RLE_WIRE.unpack(jnp.zeros(4), jnp.zeros(4, jnp.uint8), ct)
@@ -876,6 +880,37 @@ for rank in range(R):
     np.testing.assert_array_equal(out[rank], gvals[np.ix_(zz, yy, xx)],
                                   err_msg=f"rank {rank}")
 print("RAGGED_NATIVE_OK")
+
+# with the native collective available, the varlen (length-aware
+# compressed) transport must prefer it too: a zero-heavy probed payload
+# plans schedule=varlen on a fused layout and the traced exchange is
+# ONE ragged_all_to_all moving exactly the stream bytes
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import Subarray, FLOAT
+
+vcomm = Communicator(axis_name="ranks")
+vct = vcomm.commit(Subarray((32, 32), (16, 16), (4, 4), FLOAT))
+vsrc = np.zeros((32, 32), np.float32)
+vsrc[10, 6] = 3.0
+vstrats, vplan = vcomm.plan_neighbor(
+    [vct], [[(0, 0)]], probe=jnp.asarray(vsrc))
+assert vplan.schedule == "varlen", vplan.schedule
+assert vplan.fused, "varlen layout must stay native-ragged eligible"
+
+def vbody(b):
+    return vcomm.neighbor_alltoallv(
+        b, [vct], [vct], [[(0, 0)]], plan=vplan, strategies=vstrats)
+
+vfn = jax.jit(shard_map(
+    vbody, mesh=Mesh(np.array(jax.devices()[:1]), ("ranks",)),
+    in_specs=P(), out_specs=P(), check_vma=False))
+vcounts = collective_payload_bytes(vfn, jnp.asarray(vsrc))
+assert vcounts.get("ragged_all_to_all", 0) == vplan.effective_wire_bytes, vcounts
+assert vcounts["total"] == vplan.issued_bytes < vplan.wire_bytes, vcounts
+vout = np.asarray(vfn(jnp.asarray(vsrc)))
+np.testing.assert_array_equal(vout[4:20, 4:20], vsrc[4:20, 4:20])
+print("VARLEN_NATIVE_OK")
 """
 
 
@@ -888,3 +923,4 @@ print("RAGGED_NATIVE_OK")
 def test_native_ragged_schedule_end_to_end():
     out = run_with_devices(RAGGED_NATIVE_CODE, ndev=8)
     assert "RAGGED_NATIVE_OK" in out
+    assert "VARLEN_NATIVE_OK" in out

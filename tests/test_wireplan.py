@@ -575,7 +575,7 @@ class TestStoreFormats:
         store = ParamsStore(tmp_path)
         out = store.save(SystemParams(name="x"))
         d = json.loads(out.read_text())
-        assert d["format"] == STORE_FORMAT == 5
+        assert d["format"] == STORE_FORMAT == 6
         d["format"] = 2  # what a pre-per-axis envelope looks like
         d["params"].pop("wire_tables", None)
         d["params"].pop("wire_fits", None)
